@@ -1,0 +1,42 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass
+
+
+def now_us() -> float:
+    return time.monotonic_ns() / 1e3
+
+
+@dataclass
+class LatencyStats:
+    name: str
+    samples_us: list
+
+    def row(self) -> str:
+        s = sorted(self.samples_us)
+        n = len(s)
+        p = lambda q: s[min(n - 1, int(q * n))]
+        return (f"{self.name},{statistics.median(s):.1f},"
+                f"p10={p(0.10):.1f} p90={p(0.90):.1f} p99={p(0.99):.1f} "
+                f"mean={statistics.mean(s):.1f} n={n}")
+
+
+def measure(name: str, fn, *, n: int = 200, warmup: int = 20) -> LatencyStats:
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(n):
+        t0 = now_us()
+        fn()
+        samples.append(now_us() - t0)
+    return LatencyStats(name, samples)
+
+
+def payload(nbytes: int) -> bytes:
+    return b"x" * nbytes
+
+
+SIZES = {"10KB": 10_240, "1MB": 1_048_576}

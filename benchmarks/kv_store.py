@@ -1,0 +1,125 @@
+"""Paper Table 1 + Fig 3 + Fig 4/9: K/V store latency, throughput, saturation.
+
+Absolute numbers are host-Python-scale, not RDMA-scale; the paper's CLAIMS
+under test are ordinal: trig ≪ vola ≪ pers put latency; timed get ≈ vola put
+and staleness-insensitive; small-object throughput flat in shard size; trig
+throughput scales best; latency flat vs offered rate until saturation.
+"""
+from __future__ import annotations
+
+import statistics
+import tempfile
+import time
+
+from repro.core import CascadeService, DispatchPolicy, Persistence, PoolSpec
+
+from .common import SIZES, LatencyStats, measure, now_us, payload
+
+
+def bench_kv_latency(out) -> dict:
+    """Table 1: put latency by persistence level + time-indexed gets."""
+    results = {}
+    with tempfile.TemporaryDirectory() as d:
+        svc = CascadeService(n_workers=3, log_dir=d)
+        svc.store.create_pool(PoolSpec(path="/trig", persistence=Persistence.TRANSIENT))
+        svc.store.create_pool(PoolSpec(path="/vola", replication=3))
+        svc.store.create_pool(PoolSpec(path="/pers", replication=3,
+                                       persistence=Persistence.PERSISTENT))
+        for size_name, nbytes in SIZES.items():
+            data = payload(nbytes)
+            n = 150 if nbytes < 100_000 else 40
+            for pool in ("trig", "vola", "pers"):
+                if pool == "trig":
+                    fn = lambda: svc.trigger_put(f"/trig/k", data)
+                else:
+                    fn = lambda p=pool: svc.put(f"/{p}/k", data)
+                st = measure(f"table1/put_{pool}_{size_name}", fn, n=n, warmup=5)
+                out(st.row())
+                results[f"put_{pool}_{size_name}"] = statistics.median(st.samples_us)
+            # time-indexed gets at varying staleness (10ms versions)
+            for i in range(30):
+                svc.put("/pers/t", data)
+            fresh = svc.get("/pers/t").timestamp_ns
+            for label, back_ns in (("fresh", 0), ("stale", int(5e6))):
+                st = measure(f"table1/get_time_{label}_{size_name}",
+                             lambda: svc.store.get_time("/pers/t", fresh - back_ns),
+                             n=n, warmup=5)
+                out(st.row())
+                results[f"get_{label}_{size_name}"] = statistics.median(st.samples_us)
+        svc.close()
+    # ordinal claims
+    for s in SIZES:
+        assert results[f"put_trig_{s}"] < results[f"put_vola_{s}"], "trig !< vola"
+        assert results[f"put_vola_{s}"] < results[f"put_pers_{s}"], "vola !< pers"
+    out("table1/CLAIM trig<vola<pers,PASS,ordinal")
+    return results
+
+
+def bench_kv_throughput(out) -> dict:
+    """Fig 3: put throughput vs shard size (replication)."""
+    results = {}
+    for size_name, nbytes in SIZES.items():
+        data = payload(nbytes)
+        n = 400 if nbytes < 100_000 else 60
+        for repl in (1, 2, 3):
+            with tempfile.TemporaryDirectory() as d:
+                svc = CascadeService(n_workers=3, log_dir=d)
+                svc.store.create_pool(PoolSpec(path="/v", replication=repl))
+                svc.store.create_pool(PoolSpec(path="/t",
+                                               persistence=Persistence.TRANSIENT))
+                t0 = time.monotonic()
+                for i in range(n):
+                    svc.put(f"/v/k{i % 7}", data)
+                dt = time.monotonic() - t0
+                mbps = n * nbytes / dt / 2**20
+                out(f"fig3/vola_put_{size_name}_shard{repl},{dt/n*1e6:.1f},"
+                    f"MBps={mbps:.0f}")
+                results[f"vola_{size_name}_r{repl}"] = mbps
+                t0 = time.monotonic()
+                for i in range(n):
+                    svc.trigger_put(f"/t/k{i % 7}", data)
+                dt = time.monotonic() - t0
+                results[f"trig_{size_name}_r{repl}"] = n * nbytes / dt / 2**20
+                svc.close()
+        out(f"fig3/trig_put_{size_name},"
+            f"{results[f'trig_{size_name}_r1']:.0f},MBps_shard1")
+    # claim: trigger put beats replicated volatile put on throughput
+    assert results["trig_1MB_r1"] > results["vola_1MB_r3"]
+    out("fig3/CLAIM trig>vola3 throughput,PASS,ordinal")
+    return results
+
+
+def bench_saturation(out) -> dict:
+    """Fig 4/9: latency vs offered rate — flat, then queueing blow-up."""
+    import threading
+
+    results = {}
+    with tempfile.TemporaryDirectory() as d:
+        svc = CascadeService(n_workers=3, log_dir=d)
+        svc.store.create_pool(PoolSpec(path="/v", replication=3))
+        data = payload(SIZES["10KB"])
+        # calibrate max rate
+        t0 = time.monotonic()
+        for i in range(200):
+            svc.put("/v/k", data)
+        max_rate = 200 / (time.monotonic() - t0)
+        for frac in (0.2, 0.5, 0.8, 1.2):
+            rate = max_rate * frac
+            period = 1.0 / rate
+            lat = []
+            next_t = time.monotonic()
+            backlog_lat = 0.0
+            for i in range(150):
+                next_t += period
+                t0 = time.monotonic()
+                svc.put("/v/k", data)
+                lat.append((time.monotonic() - t0) * 1e6)
+                sleep = next_t - time.monotonic()
+                if sleep > 0:
+                    time.sleep(sleep)
+            med = statistics.median(lat)
+            p99 = sorted(lat)[int(0.99 * len(lat))]
+            out(f"fig4/vola_10KB_rate{frac:.1f},{med:.1f},p99={p99:.1f}")
+            results[f"rate_{frac}"] = med
+        svc.close()
+    return results

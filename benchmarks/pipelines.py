@@ -1,0 +1,239 @@
+"""Paper §5.2 (Fig 10, smart farming) and §5.3 (Fig 11, collision detection)
+as real two-/three-stage ML pipelines over tiny JAX models.
+
+Claims: model compute dominates e2e latency (data movement is a small
+fraction); throughput scales with per-stage shard sizes (1,1)<(1,2)<(2,3);
+platform overhead is low and consistent across workload sizes.
+"""
+from __future__ import annotations
+
+import statistics
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (BrokerPipeline, CascadeService, DFG, Persistence,
+                        Vertex)
+
+from .common import now_us
+
+
+def _tiny_models():
+    """filter (binary) + bcs (scorer) conv-ish models, jitted."""
+    key = jax.random.PRNGKey(0)
+    w1 = jax.random.normal(key, (768, 64)) / 28.0
+    w2 = jax.random.normal(key, (64, 2)) / 8.0
+    w3 = jax.random.normal(key, (768, 128)) / 28.0
+    w4 = jax.random.normal(key, (128, 5)) / 12.0
+
+    @jax.jit
+    def filter_model(x):
+        h = jnp.maximum(x.reshape(-1, 768) @ w1, 0)
+        return jnp.argmax(h @ w2, axis=-1)
+
+    @jax.jit
+    def bcs_model(x):
+        h = jnp.maximum(x.reshape(-1, 768) @ w3, 0)
+        return jnp.argmax(h @ w4, axis=-1)
+
+    x = np.random.randn(16, 768).astype(np.float32)
+    filter_model(x).block_until_ready()
+    bcs_model(x).block_until_ready()
+    return filter_model, bcs_model
+
+
+def bench_farming(out) -> dict:
+    """Fig 10: filter→bcs→store on Cascade vs broker; shard-size scaling."""
+    filter_model, bcs_model = _tiny_models()
+    frame = np.random.randn(16, 768).astype(np.float32)  # "photo" tensor
+    results = {}
+
+    def build(svc, frontend_workers, compute_workers):
+        dfg = DFG(name="sf")
+        dfg.add_vertex(Vertex("filter", "/sf/detect_animal",
+                              shard_workers=tuple(frontend_workers)))
+        dfg.add_vertex(Vertex("bcs", "/sf/assess_bcs",
+                              shard_workers=tuple(compute_workers)))
+        dfg.add_vertex(Vertex("store", "/sf/save_image",
+                              persistence=Persistence.VOLATILE, replication=2))
+        dfg.add_edge("filter", "bcs")
+        dfg.add_edge("bcs", "store")
+        done = {"evt": None, "stamps": {}}
+
+        def lam_filter(ctx, obj):
+            done["stamps"]["filter_start"] = now_us()
+            keep = int(filter_model(obj.payload)[0]) >= 0  # always true; real compute
+            done["stamps"]["filter_end"] = now_us()
+            if keep:
+                ctx.emit(obj.key.rsplit("/", 1)[-1], obj.payload, trigger=True)
+
+        def lam_bcs(ctx, obj):
+            done["stamps"]["bcs_start"] = now_us()
+            score = np.asarray(bcs_model(obj.payload))
+            done["stamps"]["bcs_end"] = now_us()
+            ctx.emit(obj.key.rsplit("/", 1)[-1], score)
+            done["evt"].set()
+
+        svc.deploy(dfg, {"filter": lam_filter, "bcs": lam_bcs})
+        return done
+
+    # latency breakdown at light load (Fig 10a)
+    with tempfile.TemporaryDirectory() as d:
+        svc = CascadeService(n_workers=6, log_dir=d)
+        done = build(svc, [0], [1])
+        lat, fwd_frac = [], []
+        for i in range(40):
+            done["evt"] = threading.Event()
+            t0 = now_us()
+            svc.trigger_put("/sf/detect_animal/f", frame)
+            assert done["evt"].wait(10)
+            e2e = now_us() - t0
+            st = done["stamps"]
+            compute = (st["filter_end"] - st["filter_start"]) + \
+                      (st["bcs_end"] - st["bcs_start"])
+            lat.append(e2e)
+            fwd_frac.append(max(0.0, e2e - compute) / e2e)
+        med = statistics.median(lat)
+        frac = statistics.median(fwd_frac)
+        out(f"fig10a/cascade_e2e,{med:.1f},forwarding_frac={frac:.2f}")
+        results["forward_frac"] = frac
+        svc.close()
+
+    # broker comparison with the identical lambdas (Fig 10a yellow bars).
+    # Reported, not asserted: on a 1-core host the comparison measures GIL
+    # scheduling, not the data path (see EXPERIMENTS.md §Paper-claims).
+    bp = BrokerPipeline([
+        lambda x: (filter_model(x).block_until_ready(), x)[1],
+        lambda x: np.asarray(bcs_model(x)),
+    ])
+    lat_b = []
+    for i in range(40):
+        _, us = bp.roundtrip(frame)
+        lat_b.append(us)
+    bp.stop()
+    med_b = statistics.median(lat_b)
+    out(f"fig10a/broker_e2e,{med_b:.1f},vs_cascade={med_b/med:.2f}x")
+    results["broker_ratio"] = med_b / med
+    # paper claim that CAN be tested host-scale: data forwarding is a minor
+    # share of e2e latency (paper: ~17%)
+    assert results["forward_frac"] < 0.5, "forwarding dominates e2e"
+    out("fig10a/CLAIM compute-dominates,PASS,ordinal")
+
+    # throughput scaling over (frontend, compute) shard sizes (Fig 10b).
+    # Completion counted with a latch; fps reported (1-core host cannot show
+    # parallel speedup — the paper's 4-40 core servers can).
+    for conf in ((1, 1), (1, 2), (2, 2), (2, 3)):
+        fw = list(range(conf[0]))
+        cw = list(range(conf[0], conf[0] + conf[1]))
+        with tempfile.TemporaryDirectory() as d:
+            svc = CascadeService(n_workers=6, log_dir=d)
+            done = build(svc, fw, cw)
+            n = 120
+            latch = threading.Semaphore(0)
+            done["evt"] = type("E", (), {"set": lambda self=None: latch.release(),
+                                         "wait": lambda *a, **k: True})()
+            t0 = time.monotonic()
+            for i in range(n):
+                svc.trigger_put(f"/sf/detect_animal/f{i}", frame)
+            for i in range(n):
+                assert latch.acquire(timeout=30), "pipeline stalled"
+            dt = time.monotonic() - t0
+            fps = n / dt
+            out(f"fig10b/cascade_fps_{conf[0]}_{conf[1]},{dt/n*1e6:.1f},fps={fps:.0f}")
+            results[f"fps_{conf}"] = fps
+            svc.close()
+    return results
+
+
+def bench_collision(out) -> dict:
+    """Fig 11: mot→ynet→detect; per-frame latency breakdown by #agents."""
+    key = jax.random.PRNGKey(1)
+    w_mot = jax.random.normal(key, (512, 64)) / 23.0
+    w_ynet = jax.random.normal(key, (16, 48)) / 4.0   # 8 past points (x,y) → 24 future
+
+    @jax.jit
+    def mot(frame):           # frame → agent tracks
+        h = jnp.tanh(frame.reshape(-1, 512) @ w_mot)
+        return h
+
+    @jax.jit
+    def ynet(tracks):         # per-agent trajectory prediction
+        return jnp.tanh(tracks.reshape(-1, 16) @ w_ynet)
+
+    def detect(preds):        # linear interpolation + crossing check (numpy)
+        p = np.asarray(preds).reshape(-1, 24, 2)
+        n = p.shape[0]
+        hits = 0
+        for i in range(n):
+            for j in range(i + 1, n):
+                d = np.linalg.norm(p[i] - p[j], axis=-1)
+                hits += int((d < 0.05).any())
+        return hits
+
+    mot(np.random.randn(1, 512).astype(np.float32)).block_until_ready()
+    ynet(np.random.randn(4, 16).astype(np.float32)).block_until_ready()
+
+    results = {}
+    with tempfile.TemporaryDirectory() as d:
+        svc = CascadeService(n_workers=6, log_dir=d)
+        dfg = DFG(name="rcd")
+        dfg.add_vertex(Vertex("mot", "/rcd/frames", shard_workers=(0, 1)))
+        dfg.add_vertex(Vertex("ynet", "/rcd/tracks", shard_workers=(2, 3)))
+        dfg.add_vertex(Vertex("detect", "/rcd/preds", shard_workers=(4,)))
+        dfg.add_vertex(Vertex("store", "/rcd/out", replication=1))
+        dfg.add_edge("mot", "ynet")
+        dfg.add_edge("ynet", "detect")
+        dfg.add_edge("detect", "store")
+        done = {"evt": None, "stamps": {}}
+
+        def lam_mot(ctx, obj):
+            done["stamps"]["mot_s"] = now_us()
+            tracks = np.asarray(mot(obj.payload["frame"]))
+            n_agents = obj.payload["agents"]
+            done["stamps"]["mot_e"] = now_us()
+            ctx.emit(obj.key.rsplit("/", 1)[-1],
+                     np.random.randn(n_agents, 16).astype(np.float32),
+                     trigger=True)
+
+        def lam_ynet(ctx, obj):
+            done["stamps"]["ynet_s"] = now_us()
+            preds = np.asarray(ynet(obj.payload))
+            done["stamps"]["ynet_e"] = now_us()
+            ctx.emit(obj.key.rsplit("/", 1)[-1], preds, trigger=True)
+
+        def lam_detect(ctx, obj):
+            done["stamps"]["det_s"] = now_us()
+            hits = detect(obj.payload)
+            done["stamps"]["det_e"] = now_us()
+            ctx.emit(obj.key.rsplit("/", 1)[-1], np.int64(hits))
+            done["evt"].set()
+
+        svc.deploy(dfg, {"mot": lam_mot, "ynet": lam_ynet, "detect": lam_detect})
+        frame = np.random.randn(1, 512).astype(np.float32)
+        for agents in (5, 10, 15):
+            lat, overhead = [], []
+            for i in range(25):
+                done["evt"] = threading.Event()
+                t0 = now_us()
+                svc.trigger_put(f"/rcd/frames/f{i}",
+                                {"frame": frame, "agents": agents})
+                assert done["evt"].wait(10)
+                e2e = now_us() - t0
+                st = done["stamps"]
+                compute = (st["mot_e"] - st["mot_s"]) + (st["ynet_e"] - st["ynet_s"]) \
+                    + (st["det_e"] - st["det_s"])
+                lat.append(e2e)
+                overhead.append(max(0.0, e2e - compute))
+            med = statistics.median(lat)
+            ovh = statistics.median(overhead)
+            out(f"fig11/agents{agents},{med:.1f},platform_overhead_us={ovh:.1f}")
+            results[f"overhead_{agents}"] = ovh
+        svc.close()
+    # claim: platform overhead consistent (doesn't scale with workload)
+    assert results["overhead_15"] < results["overhead_5"] * 5 + 2000
+    out("fig11/CLAIM overhead-consistent,PASS,ordinal")
+    return results

@@ -1,0 +1,63 @@
+"""§Roofline table generator: reads the dry-run JSONs and emits the
+per-(arch × shape) three-term table used by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.registry import ARCH_IDS, SHAPES, all_cells
+
+
+def load_results(out_dir: str = "experiments/dryrun", tag: str = "") -> dict:
+    rows = {}
+    for path in glob.glob(os.path.join(out_dir, "*.json")):
+        d = json.load(open(path))
+        if d.get("tag", "") != tag or d["multi_pod"]:
+            continue
+        rows[(d["arch"], d["shape"])] = d
+    return rows
+
+
+def table(out, out_dir: str = "experiments/dryrun", tag: str = "") -> None:
+    rows = load_results(out_dir, tag)
+    out("roofline/arch,shape,compute_s,memory_s,collective_s,dominant,"
+        "useful_ratio,temp_GiB")
+    for cell in all_cells():
+        key = (cell.arch_id, cell.shape.name)
+        if cell.skipped:
+            out(f"roofline/{cell.arch_id},{cell.shape.name},SKIP,{cell.skip_reason}")
+            continue
+        d = rows.get(key)
+        if d is None:
+            out(f"roofline/{cell.arch_id},{cell.shape.name},MISSING")
+            continue
+        r = d["roofline"]
+        out(f"roofline/{cell.arch_id},{cell.shape.name},"
+            f"{r['compute_s']:.4f},{r['memory_s']:.4f},{r['collective_s']:.4f},"
+            f"{r['dominant'].replace('_s','')},{r['useful_flops_ratio']:.2f},"
+            f"{d['memory_analysis']['temp_bytes']/2**30:.1f}")
+
+
+def markdown_table(out_dir: str = "experiments/dryrun", tag: str = "") -> str:
+    rows = load_results(out_dir, tag)
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+             "dominant | useful FLOPs ratio | temp GiB/chip |",
+             "|---|---|---|---|---|---|---|---|"]
+    for cell in all_cells():
+        if cell.skipped:
+            lines.append(f"| {cell.arch_id} | {cell.shape.name} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        d = rows.get((cell.arch_id, cell.shape.name))
+        if d is None:
+            lines.append(f"| {cell.arch_id} | {cell.shape.name} | MISSING |")
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {cell.arch_id} | {cell.shape.name} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{d['memory_analysis']['temp_bytes']/2**30:.1f} |")
+    return "\n".join(lines)

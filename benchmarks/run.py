@@ -1,0 +1,58 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Ordinal claims from the paper
+are asserted inline (see each module's docstring for the claim list);
+absolute magnitudes are host-scale, not RDMA-scale.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark name")
+    args = ap.parse_args()
+
+    from . import fastpath, kv_store, pipelines, roofline
+
+    benches = [
+        ("table1_kv_latency", kv_store.bench_kv_latency),
+        ("fig3_kv_throughput", kv_store.bench_kv_throughput),
+        ("fig4_saturation", kv_store.bench_saturation),
+        ("fig6_fastpath_breakdown", fastpath.bench_fastpath_breakdown),
+        ("fig1_fig7_noop_pipeline", fastpath.bench_noop_pipeline),
+        ("trie_ns_per_level", fastpath.bench_trie),
+        ("fig10_smart_farming", pipelines.bench_farming),
+        ("fig11_collision_detection", pipelines.bench_collision),
+        ("roofline_table", lambda out: roofline.table(out)),
+    ]
+
+    def out(line: str) -> None:
+        print(line, flush=True)
+
+    failures = []
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn(out)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # keep going; report at the end
+            failures.append((name, repr(e)))
+            print(f"# {name} FAILED: {e!r}", flush=True)
+    if failures:
+        print(f"# {len(failures)} benchmark(s) failed", file=sys.stderr)
+        sys.exit(1)
+    print("# ALL BENCHMARKS PASS")
+
+
+if __name__ == "__main__":
+    main()

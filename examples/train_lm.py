@@ -1,0 +1,70 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with the
+full substrate — synthetic data pipeline, AdamW, remat, fault-tolerant loop
+with Cascade-persistent checkpoints, straggler monitor.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 200]
+(~100M params; a few hundred steps takes a while on 1 CPU core — use
+--steps 30 for a quick look.)
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.training.checkpoint import CheckpointManager
+from repro.training.data import DataConfig, synthetic_batch
+from repro.training.ft import FaultTolerantLoop, StepMonitor
+from repro.training.optimizer import get_optimizer
+from repro.training.train import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    args = ap.parse_args()
+
+    # ~100M params: 8L × d512 × ffn2048, 32k vocab
+    cfg = ModelConfig(name="lm100m", family="dense", n_layers=8, d_model=512,
+                      n_heads=8, n_kv_heads=4, d_ff=2048, vocab_size=32_000,
+                      dtype="float32", q_chunk=128)
+    print(f"params: {cfg.param_count()/1e6:.0f}M")
+
+    opt = get_optimizer("adamw", lr=3e-4, warmup_steps=20)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    dcfg = DataConfig(batch=args.batch, seq_len=args.seq)
+
+    def batches():
+        i = 0
+        while True:
+            yield {k: jnp.asarray(v) for k, v in synthetic_batch(cfg, dcfg, i).items()}
+            i += 1
+
+    losses = []
+
+    def on_metrics(step_i, metrics, dt):
+        losses.append(float(metrics["loss"]))
+        if step_i % 10 == 0 or step_i <= 3:
+            print(f"step {step_i:4d}  loss {losses[-1]:.3f}  "
+                  f"grad_norm {float(metrics['grad_norm']):.2f}  {dt*1e3:.0f} ms")
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = CheckpointManager(os.path.join(d, "ckpt.log"))
+        loop = FaultTolerantLoop(step, state, ckpt=ckpt, ckpt_every=50,
+                                 monitor=StepMonitor(),
+                                 on_straggler=lambda s: print(f"straggler @ {s}"))
+        loop.run(batches(), args.steps, metrics_cb=on_metrics)
+        print(f"final loss: {losses[-1]:.3f} (start {losses[0]:.3f})")
+        print(f"checkpointed through step {ckpt.latest_step()}")
+        assert losses[-1] < losses[0]
+        ckpt.close()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

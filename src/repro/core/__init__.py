@@ -1,0 +1,33 @@
+"""Cascade core: the paper's contribution as a composable library.
+
+Layers (paper §3): pools + sharded versioned K/V store, persistent logs with
+backpointer chains and temporal indexing, the trie/dispatcher/upcall fast
+path, DFG + lambda API, and the device-side fast path (stage fusion and
+zero-copy handoffs) for XLA/TPU.
+"""
+from .baseline import Broker, BrokerPipeline
+from .devstore import DeviceStore
+from .dfg import DFG, Vertex
+from .dispatcher import Dispatcher, LambdaHandle, UpcallEvent, UpcallThreadPool
+from .fastpath import FastPathPipeline, Stage, broker_hop, chain_stages, fuse_stages, handoff
+from .lambda_api import CascadeContext, wrap_lambda
+from .log import PersistentLog
+from .objects import INVALID_VERSION, CascadeObject
+from .placement import LRUCache, RoundRobin, ShardMap, build_shard_map
+from .pools import DispatchPolicy, Persistence, PoolRegistry, PoolSpec, affinity_shard_hash, default_shard_hash
+from .service import CascadeService
+from .store import CascadeStore, PutReceipt, Worker
+from .trie import PathTrie
+from .versioning import SeqlockCell, VersionChain
+
+__all__ = [
+    "Broker", "BrokerPipeline", "DeviceStore", "DFG", "Vertex", "Dispatcher",
+    "LambdaHandle", "UpcallEvent", "UpcallThreadPool", "FastPathPipeline",
+    "Stage", "broker_hop", "chain_stages", "fuse_stages", "handoff",
+    "CascadeContext", "wrap_lambda", "PersistentLog", "INVALID_VERSION",
+    "CascadeObject", "LRUCache", "RoundRobin", "ShardMap", "build_shard_map",
+    "DispatchPolicy", "Persistence", "PoolRegistry", "PoolSpec",
+    "affinity_shard_hash", "default_shard_hash", "CascadeService",
+    "CascadeStore", "PutReceipt", "Worker", "PathTrie", "SeqlockCell",
+    "VersionChain",
+]

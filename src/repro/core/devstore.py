@@ -1,0 +1,128 @@
+"""Device-resident object store: pools placed on mesh slices (§3.2 + §3.5).
+
+The host-side ``CascadeStore`` moves references and small metadata; tensors
+live here.  Each pool maps to a placement policy: a ``PartitionSpec`` over
+the mesh (``device_axes`` on the PoolSpec) — replication inside the home
+slice is the volatile-put multicast; `None` axes replicate, named axes shard.
+
+Versioning is functional: a put installs a new array as the latest version
+and retains up to ``keep_versions`` predecessors (the volatile pools of the
+paper keep only the latest; persistent pools keep the chain — for arrays the
+chain also backs time-travel debugging and checkpoint export).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .objects import monotonic_ns
+from .placement import LRUCache
+from .pools import Persistence, PoolRegistry, PoolSpec
+
+
+@dataclass
+class _DevEntry:
+    versions: OrderedDict[int, jax.Array] = field(default_factory=OrderedDict)
+    timestamps: dict[int, int] = field(default_factory=dict)
+    latest: int = -1
+
+
+class DeviceStore:
+    def __init__(self, mesh: Mesh, *, keep_versions: int = 2,
+                 lru_bytes: int = 1 << 30) -> None:
+        self.mesh = mesh
+        self.pools = PoolRegistry()
+        self.keep_versions = keep_versions
+        self.lru = LRUCache(lru_bytes)
+        self._entries: dict[str, _DevEntry] = {}
+        self._lock = threading.Lock()
+
+    def create_pool(self, spec: PoolSpec) -> PoolSpec:
+        return self.pools.create(spec)
+
+    def sharding_for(self, key: str) -> NamedSharding:
+        spec = self.pools.lookup(key)
+        axes = spec.device_axes if spec and spec.device_axes else ()
+        return NamedSharding(self.mesh, P(*axes))
+
+    # -- puts -----------------------------------------------------------------
+    def put(self, key: str, value: Any, *, donate: bool = False) -> jax.Array:
+        """Place `value` according to the pool policy and version it.
+
+        ``donate``: if the value is already a device array with the right
+        sharding, install the reference without any copy (fast-path put).
+        """
+        spec = self.pools.lookup(key)
+        if spec is None:
+            raise KeyError(f"no device pool owns {key!r}")
+        dst = self.sharding_for(key)
+        if donate and isinstance(value, jax.Array) and value.sharding == dst:
+            arr = value
+        else:
+            arr = jax.device_put(value, dst)
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                e = self._entries[key] = _DevEntry()
+            v = e.latest + 1
+            e.versions[v] = arr
+            e.timestamps[v] = monotonic_ns()
+            e.latest = v
+            keep = len(e.versions) if spec.persistence is Persistence.PERSISTENT \
+                else self.keep_versions
+            while len(e.versions) > keep:
+                e.versions.popitem(last=False)
+        return arr
+
+    # -- gets -----------------------------------------------------------------
+    def get(self, key: str, version: int | None = None) -> jax.Array | None:
+        e = self._entries.get(key)
+        if e is None:
+            return None
+        if version is None:
+            arr = e.versions.get(e.latest)
+        else:
+            # newest retained version <= requested
+            cand = [v for v in e.versions if v <= version]
+            arr = e.versions[max(cand)] if cand else None
+        if arr is not None:
+            self.lru.put(key, arr, int(arr.nbytes) if hasattr(arr, "nbytes") else 0)
+        return arr
+
+    def get_time(self, key: str, ts_ns: int) -> jax.Array | None:
+        e = self._entries.get(key)
+        if e is None:
+            return None
+        cand = [v for v, t in e.timestamps.items() if t <= ts_ns and v in e.versions]
+        return e.versions[max(cand)] if cand else None
+
+    def latest_version(self, key: str) -> int:
+        e = self._entries.get(key)
+        return e.latest if e else -1
+
+    def keys(self) -> list[str]:
+        return list(self._entries.keys())
+
+    def nbytes(self) -> int:
+        total = 0
+        for e in self._entries.values():
+            for arr in e.versions.values():
+                total += int(getattr(arr, "nbytes", 0))
+        return total
+
+    # -- export for checkpointing ------------------------------------------------
+    def snapshot(self, prefix: str) -> dict[str, np.ndarray]:
+        """Host-materialize the latest version of every key under prefix."""
+        out = {}
+        for key in self.keys():
+            if key.startswith(prefix):
+                arr = self.get(key)
+                if arr is not None:
+                    out[key] = np.asarray(arr)
+        return out

@@ -1,0 +1,130 @@
+"""The fast-path dispatcher (§3.3, Fig 2).
+
+Design points taken directly from the paper:
+
+- the dispatcher observes the stream of K/V updates (①), its *only* role is
+  trie prefix matching (②) and enqueueing an upcall event holding a pair of
+  references to the object and the matched lambda (③) — it never runs user
+  code (direct upcalls from the system thread "could disrupt the entire
+  system"; a fork-per-event dispatcher "thrashes");
+- a small, fixed pool of upcall threads, each with **its own event queue**,
+  dequeues and calls the lambda (④);
+- round-robin enqueueing by default; lambdas configured FIFO get a queue
+  picked by the key hash of the object so same-key objects stay ordered on
+  one thread (e.g. frames from one camera).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from .objects import CascadeObject, monotonic_ns
+from .pools import DispatchPolicy
+from .trie import PathTrie
+
+UpcallFn = Callable[[CascadeObject, "UpcallEvent"], Any]
+
+
+@dataclass(frozen=True)
+class LambdaHandle:
+    name: str
+    prefix: str
+    fn: UpcallFn
+    dispatch: DispatchPolicy = DispatchPolicy.ROUND_ROBIN
+
+
+@dataclass
+class UpcallEvent:
+    """A (object-ref, lambda-ref) pair — shared pointers in the paper."""
+
+    obj: CascadeObject
+    handle: LambdaHandle
+    enqueued_ns: int = 0
+    dequeued_ns: int = 0
+    done_ns: int = 0
+    result: Any = None
+    error: BaseException | None = None
+    completion: threading.Event = field(default_factory=threading.Event)
+
+
+_STOP = object()
+
+
+class UpcallThreadPool:
+    """Fixed pool; each thread loops over its own queue (Fig 2 right side)."""
+
+    def __init__(self, n_threads: int = 4, name: str = "upcall") -> None:
+        self.queues: list[queue.SimpleQueue] = [queue.SimpleQueue() for _ in range(n_threads)]
+        self._threads = [
+            threading.Thread(target=self._loop, args=(q,), daemon=True, name=f"{name}-{i}")
+            for i, q in enumerate(self.queues)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def __len__(self) -> int:
+        return len(self.queues)
+
+    def _loop(self, q: queue.SimpleQueue) -> None:
+        while True:
+            ev = q.get()
+            if ev is _STOP:
+                return
+            ev.dequeued_ns = monotonic_ns()
+            try:
+                ev.result = ev.handle.fn(ev.obj, ev)
+            except BaseException as e:  # surfaced to the waiter, not swallowed
+                ev.error = e
+            ev.done_ns = monotonic_ns()
+            ev.completion.set()
+
+    def submit(self, ev: UpcallEvent, queue_index: int) -> None:
+        ev.enqueued_ns = monotonic_ns()
+        self.queues[queue_index % len(self.queues)].put(ev)
+
+    def stop(self) -> None:
+        for q in self.queues:
+            q.put(_STOP)
+        for t in self._threads:
+            t.join(timeout=5)
+
+
+class Dispatcher:
+    """Trie match → pick queue → enqueue.  Runs on the caller (system) thread;
+    the cost it adds to the critical path is exactly steps ②+③."""
+
+    def __init__(self, pool: UpcallThreadPool) -> None:
+        self._trie: PathTrie[LambdaHandle] = PathTrie()
+        self._pool = pool
+        self._rr = 0
+        self._lock = threading.Lock()
+        self.dispatched = 0
+
+    def register(self, handle: LambdaHandle) -> None:
+        self._trie.insert(handle.prefix, handle)
+
+    def unregister(self, handle: LambdaHandle) -> bool:
+        return self._trie.remove(handle.prefix, handle)
+
+    def match(self, key: str) -> list[LambdaHandle]:
+        return self._trie.match(key)
+
+    def dispatch(self, obj: CascadeObject) -> list[UpcallEvent]:
+        """One incoming object may match multiple prefixes → multiple events.
+        Only references are enqueued; the payload is never copied."""
+        events: list[UpcallEvent] = []
+        for handle in self._trie.match(obj.key):
+            ev = UpcallEvent(obj=obj, handle=handle)
+            if handle.dispatch is DispatchPolicy.FIFO:
+                qi = zlib.crc32(obj.key.encode())
+            else:
+                with self._lock:
+                    qi = self._rr
+                    self._rr += 1
+            self._pool.submit(ev, qi)
+            events.append(ev)
+            self.dispatched += 1
+        return events

@@ -1,0 +1,136 @@
+"""The device fast path (§3.3–3.4), re-expressed for XLA/TPU.
+
+Cascade's fast path makes the *handoff between pipeline stages* cost almost
+nothing compared to the stage compute.  On an RDMA cluster that means DLL
+upcalls in the server address space and zero-copy buffers; on TPU the three
+rungs of the paper's latency/isolation ladder map to:
+
+1. **Fused stages** ("DLL lambda in the Cascade address space"): consecutive
+   collocated stages are compiled into ONE XLA program with donated input
+   buffers — the handoff disappears entirely; no host round trip, no copy.
+2. **Jit-chained stages** ("containerized lambda + shared-memory IPC"): each
+   stage is its own compiled program, but activations stay **on device**
+   between stages; the host only sequences dispatches (references, not data).
+3. **Cross-slice handoff** ("trigger put over RDMA to the next-hop node"):
+   when stages live on disjoint mesh slices, the activation is moved
+   device-to-device by resharding (``jax.device_put`` with the destination
+   ``NamedSharding`` — ICI collective-permute), never via host memory.
+
+The anti-pattern — the broker path in ``baseline.py`` — fetches the tensor
+to the host, serializes it, queues the bytes, deserializes, and re-uploads at
+every hop; that is the Kafka/Flink/EventHub handoff the paper measures
+against, and it is the baseline our benchmarks compare with.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+StageFn = Callable[..., Any]
+
+
+@dataclass(frozen=True)
+class Stage:
+    """One DFG vertex's compute, with optional placement."""
+
+    name: str
+    fn: StageFn
+    out_sharding: jax.sharding.Sharding | None = None  # stage's home slice
+
+
+def fuse_stages(stages: Sequence[Stage], *, donate: bool = True) -> Callable[..., Any]:
+    """Rung 1: one jitted program for the whole chain; inputs donated so XLA
+    may overwrite them in place (the zero-copy discipline of §3.4)."""
+
+    def chained(x, *extra):
+        for st in stages:
+            x = st.fn(x, *extra)
+        return x
+
+    donate_argnums = (0,) if donate else ()
+    return jax.jit(chained, donate_argnums=donate_argnums)
+
+
+def chain_stages(stages: Sequence[Stage]) -> Callable[..., Any]:
+    """Rung 2: per-stage jit; activations remain device-resident between
+    stages and move by resharding when a stage declares a different slice."""
+
+    jitted = [
+        jax.jit(st.fn, out_shardings=st.out_sharding, donate_argnums=(0,))
+        if st.out_sharding is not None
+        else jax.jit(st.fn, donate_argnums=(0,))
+        for st in stages
+    ]
+
+    def run(x, *extra):
+        for st, f in zip(stages, jitted):
+            x = f(x, *extra)
+        return x
+
+    return run
+
+
+def handoff(x: jax.Array, dst: jax.sharding.Sharding) -> jax.Array:
+    """Rung 3: explicit cross-slice move (≙ RDMA trigger put to next hop)."""
+    return jax.device_put(x, dst)
+
+
+def broker_hop(x: jax.Array) -> jax.Array:
+    """The measured anti-pattern: host round-trip + serialize + copy.
+
+    Mirrors what a Kafka/gRPC handoff does to a tensor: device→host DMA,
+    a marshalling copy into a byte buffer, an unmarshalling copy out of it,
+    and host→device DMA.  Used by baselines/benchmarks only.
+    """
+    import numpy as np
+
+    host = np.asarray(x)              # device -> host
+    wire = host.tobytes()             # marshalling copy (Kryo-style)
+    back = np.frombuffer(wire, dtype=host.dtype).reshape(host.shape).copy()
+    return jnp.asarray(back)          # host -> device
+
+
+# ---------------------------------------------------------------------------
+# Collocation-aware pipeline builder: the piece the serving engine uses.
+# ---------------------------------------------------------------------------
+
+@dataclass
+class FastPathPipeline:
+    """Compile a DFG chain into the fastest legal execution plan.
+
+    Adjacent stages that share a placement (same sharding or both None) are
+    fused into a single program; placement changes insert a device-to-device
+    handoff.  This is exactly the paper's scheduling rule: run lambdas where
+    their data lives, and only move the (small) activation objects.
+    """
+
+    stages: Sequence[Stage]
+
+    def build(self) -> Callable[..., Any]:
+        groups: list[list[Stage]] = []
+        for st in self.stages:
+            if groups and _same_place(groups[-1][-1], st):
+                groups[-1].append(st)
+            else:
+                groups.append([st])
+        compiled: list[tuple[Callable[..., Any], jax.sharding.Sharding | None]] = []
+        for g in groups:
+            fn = fuse_stages(g, donate=False)
+            compiled.append((fn, g[0].out_sharding))
+
+        def run(x, *extra):
+            for fn, place in compiled:
+                if place is not None and getattr(x, "sharding", None) != place:
+                    x = handoff(x, place)
+                x = fn(x, *extra)
+            return x
+
+        return run
+
+
+def _same_place(a: Stage, b: Stage) -> bool:
+    return a.out_sharding == b.out_sharding

@@ -1,0 +1,230 @@
+"""The sharded, versioned K/V object store (§3.2) spanning worker nodes.
+
+A ``Worker`` models one Cascade node: an in-memory volatile store (seqlock
+cells + version chains), per-pool persistent logs, an LRU for secondarily
+accessed objects, and the fast-path machinery (dispatcher + upcall pool).
+
+``CascadeStore`` is the service-wide store: it owns the pool registry and the
+pool→shard maps, and implements the three put flavors:
+
+- ``trigger_put`` — deliver the object to ONE member of the home shard (round
+  robin, emulating the paper's random P2P choice deterministically) and
+  dispatch upcalls there.  Nothing is stored (§3.2).
+- ``put`` on a volatile pool — atomic multicast: deliver to ALL members of
+  the home shard in sequence order so replicas stay identical; upcalls are
+  dispatched on the round-robin-selected processing member (§3.5).
+- ``put`` on a persistent pool — additionally append to every member's
+  persistent log and acknowledge once durable everywhere (the paper's Paxos
+  acknowledges after all replicas persist).
+
+``get`` goes to a uniformly-chosen member of the home shard (replicas hold
+identical state) and reads through the seqlock without locks.  Versioned and
+temporal gets are served by the version chains / persistent logs.
+"""
+from __future__ import annotations
+
+import os
+import random
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Iterable
+
+from .dispatcher import Dispatcher, LambdaHandle, UpcallEvent, UpcallThreadPool
+from .log import PersistentLog
+from .objects import INVALID_VERSION, CascadeObject, monotonic_ns
+from .placement import LRUCache, RoundRobin, ShardMap, build_shard_map
+from .pools import Persistence, PoolRegistry, PoolSpec
+from .versioning import VersionChain
+
+
+class Worker:
+    """One Cascade node: storage + fast path."""
+
+    def __init__(self, worker_id: int, *, n_upcall_threads: int = 2,
+                 lru_bytes: int = 64 << 20, log_dir: str | None = None) -> None:
+        self.worker_id = worker_id
+        self.volatile: dict[str, VersionChain] = {}
+        self._volatile_lock = threading.Lock()
+        self.logs: dict[str, PersistentLog] = {}
+        self.lru = LRUCache(lru_bytes)
+        self.upcalls = UpcallThreadPool(n_upcall_threads, name=f"w{worker_id}-upcall")
+        self.dispatcher = Dispatcher(self.upcalls)
+        self._log_dir = log_dir
+        self.stored_objects = 0
+
+    # -- storage -----------------------------------------------------------
+    def _chain(self, key: str) -> VersionChain:
+        chain = self.volatile.get(key)
+        if chain is None:
+            with self._volatile_lock:
+                chain = self.volatile.setdefault(key, VersionChain())
+        return chain
+
+    def store(self, obj: CascadeObject, version: int) -> CascadeObject:
+        stamped = self._chain(obj.key).append(obj, version)
+        self.stored_objects += 1
+        return stamped
+
+    def persist(self, pool: PoolSpec, obj: CascadeObject, *, wait: bool = True) -> CascadeObject:
+        log = self.logs.get(pool.path)
+        if log is None:
+            base = self._log_dir or os.path.join(".cascade_logs", f"w{self.worker_id}")
+            fname = pool.path.strip("/").replace("/", "_") + ".log"
+            log = self.logs[pool.path] = PersistentLog(os.path.join(base, fname))
+        payload = obj.payload
+        if not isinstance(payload, (bytes, bytearray)):
+            payload = _to_bytes(payload)
+        return log.append(obj.key, bytes(payload), wait_stable=wait,
+                          ts_ns=obj.timestamp_ns or None)
+
+    def load_latest(self, key: str) -> CascadeObject | None:
+        chain = self.volatile.get(key)
+        return chain.latest() if chain else None
+
+    def close(self) -> None:
+        self.upcalls.stop()
+        for log in self.logs.values():
+            log.close()
+
+
+def _to_bytes(payload: Any) -> bytes:
+    import numpy as np
+
+    arr = np.asarray(payload)
+    return arr.tobytes()
+
+
+@dataclass
+class PutReceipt:
+    obj: CascadeObject
+    events: list[UpcallEvent] = field(default_factory=list)
+    processing_worker: int = -1
+
+    def wait(self, timeout: float | None = 10.0) -> list[Any]:
+        out = []
+        for ev in self.events:
+            if not ev.completion.wait(timeout):
+                raise TimeoutError(f"upcall {ev.handle.name} did not complete")
+            if ev.error is not None:
+                raise ev.error
+            out.append(ev.result)
+        return out
+
+
+class CascadeStore:
+    """Service-wide sharded store over a set of workers."""
+
+    def __init__(self, workers: Iterable[Worker]) -> None:
+        self.workers: dict[int, Worker] = {w.worker_id: w for w in workers}
+        self.pools = PoolRegistry()
+        self._shard_maps: dict[str, ShardMap] = {}
+        self._sequencers: dict[tuple[str, int], threading.Lock] = {}
+        self._versions: dict[tuple[str, int], int] = {}
+        self._rr = RoundRobin()
+        self._meta_lock = threading.Lock()
+
+    # -- pool management -----------------------------------------------------
+    def create_pool(self, spec: PoolSpec, worker_ids: list[int] | None = None) -> PoolSpec:
+        ids = worker_ids if worker_ids is not None else sorted(self.workers)
+        self.pools.create(spec)
+        self._shard_maps[spec.path] = build_shard_map(spec.path, ids, spec.replication)
+        return spec
+
+    def _route(self, key: str) -> tuple[PoolSpec, tuple[int, ...]]:
+        spec = self.pools.lookup(key)
+        if spec is None:
+            raise KeyError(f"no pool owns key {key!r}")
+        members = self._shard_maps[spec.path].members(spec, key)
+        return spec, members
+
+    def register_lambda(self, handle: LambdaHandle, worker_ids: list[int] | None = None) -> None:
+        """Bind a lambda to a path prefix on the given (default: all owning)
+        workers — in the paper the DFG determines which shard hosts each
+        lambda; here the caller passes the stage's shard members."""
+        targets = worker_ids if worker_ids is not None else list(self.workers)
+        for wid in targets:
+            self.workers[wid].dispatcher.register(handle)
+
+    # -- puts ------------------------------------------------------------------
+    def _next_version(self, pool: PoolSpec, shard: int) -> tuple[int, threading.Lock]:
+        k = (pool.path, shard)
+        with self._meta_lock:
+            lock = self._sequencers.setdefault(k, threading.Lock())
+        return k, lock
+
+    def trigger_put(self, key: str, payload: Any, *, principal: str = "") -> PutReceipt:
+        """P2P send to one member + upcall; nothing stored, nothing replicated."""
+        spec, members = self._route(key)
+        if not spec.can_write(principal):
+            raise PermissionError(f"{principal!r} cannot write {spec.path}")
+        target = self._rr.pick(("trig", spec.path), members)
+        obj = CascadeObject(key=key, payload=payload, version=INVALID_VERSION,
+                            timestamp_ns=monotonic_ns())
+        events = self.workers[target].dispatcher.dispatch(obj)
+        return PutReceipt(obj=obj, events=events, processing_worker=target)
+
+    def put(self, key: str, payload: Any, *, principal: str = "") -> PutReceipt:
+        """Volatile/persistent put: replicate to the full home shard."""
+        spec, members = self._route(key)
+        if not spec.can_write(principal):
+            raise PermissionError(f"{principal!r} cannot write {spec.path}")
+        if spec.persistence is Persistence.TRANSIENT:
+            return self.trigger_put(key, payload, principal=principal)
+        shard_idx = self._shard_maps[spec.path].home_shard(spec, key)
+        vkey, seq_lock = self._next_version(spec, shard_idx)
+        obj = CascadeObject(key=key, payload=payload, timestamp_ns=monotonic_ns())
+        with seq_lock:  # atomic multicast: identical order at every replica
+            version = self._versions.get(vkey, -1) + 1
+            self._versions[vkey] = version
+            stamped = None
+            for wid in members:
+                stamped = self.workers[wid].store(obj, version)
+        if spec.persistence is Persistence.PERSISTENT:
+            # All replicas persist before the put is acknowledged (§3.2).
+            for wid in members:
+                self.workers[wid].persist(spec, obj, wait=(wid == members[-1]))
+        # Round-robin processing member (§3.5); replicas all HOLD the data,
+        # exactly one dispatches the upcall for this object.
+        proc = self._rr.pick(("proc", spec.path, shard_idx), members)
+        events = self.workers[proc].dispatcher.dispatch(stamped)
+        return PutReceipt(obj=stamped, events=events, processing_worker=proc)
+
+    # -- gets ------------------------------------------------------------------
+    def get(self, key: str, *, principal: str = "") -> CascadeObject | None:
+        """Linearizable read from a random home-shard member (states are
+        identical, so any member may answer)."""
+        spec, members = self._route(key)
+        if not spec.can_read(principal):
+            raise PermissionError(f"{principal!r} cannot read {spec.path}")
+        w = self.workers[random.choice(members)]
+        obj = w.load_latest(key)
+        if obj is not None:
+            w.lru.put(key, obj, obj.nbytes())
+        return obj
+
+    def get_version(self, key: str, version: int) -> CascadeObject | None:
+        _, members = self._route(key)
+        chain = self.workers[random.choice(members)].volatile.get(key)
+        return chain.at_version(version) if chain else None
+
+    def get_time(self, key: str, ts_ns: int) -> CascadeObject | None:
+        """Temporal get (persistent pools): resolved via the member's log so
+        the stable-prefix rule applies."""
+        spec, members = self._route(key)
+        w = self.workers[random.choice(members)]
+        if spec.persistence is Persistence.PERSISTENT and spec.path in w.logs:
+            return w.logs[spec.path].get_time(key, ts_ns)
+        chain = w.volatile.get(key)
+        return chain.at_time(ts_ns) if chain else None
+
+    def time_range(self, key: str, lo_ns: int, hi_ns: int) -> list[CascadeObject]:
+        spec, members = self._route(key)
+        w = self.workers[random.choice(members)]
+        if spec.persistence is Persistence.PERSISTENT and spec.path in w.logs:
+            return w.logs[spec.path].time_range(key, lo_ns, hi_ns)
+        chain = w.volatile.get(key)
+        return chain.time_range(lo_ns, hi_ns) if chain else []
+
+    def close(self) -> None:
+        for w in self.workers.values():
+            w.close()

@@ -1,0 +1,120 @@
+"""Flash-decoding Pallas TPU kernel: one query token vs a long KV cache.
+
+This is THE serving hot spot (decode_32k / long_500k shapes): arithmetic
+intensity is O(1) FLOP/byte — every cached K/V byte is read once per step —
+so the kernel is HBM-bandwidth-bound and the design goal is to stream K/V
+through VMEM at full bandwidth while keeping the softmax state in registers.
+
+TPU adaptation: instead of CUDA's one-warp-per-split + shared-memory
+reduction, we put the cache-sequence axis LAST in the grid — TPU executes it
+sequentially per (batch, kv-head), so the online-softmax state (m, l, acc)
+lives in VMEM scratch carried across sequence blocks, and no cross-block
+reduction pass is needed.  All G = H/K query heads of a kv head are
+processed together as a (G, D) tile so the (G, bk) score matmul feeds the
+MXU/VPU with aligned shapes.
+
+Ring-buffer semantics come for free: the cache's per-slot absolute positions
+are streamed alongside K/V and masking is positional, so the same kernel
+serves full caches, sliding-window rings, and partially-filled prefixes.
+
+Grid: (B, K, num_kv_blocks); blocks: q (G,D), k/v (bk,D), pos (bk,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, softcap: float | None,
+            window: int | None, num_kv_blocks: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)                        # (G, D)
+    k = k_ref[...].astype(jnp.float32)                        # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = pos_ref[...]                                       # (1, bk) int32
+    qp = qpos_ref[0]
+    mask = (kpos >= 0) & (kpos <= qp)
+    if window is not None:
+        mask &= (qp - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)                           # (G, bk) via bcast
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[...].astype(jnp.float32)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k_cache, v_cache, q_pos, cache_pos, *,
+                         scale: float, softcap: float | None,
+                         window: int | None, block_k: int = 512,
+                         interpret: bool = False):
+    """q: (B,H,D); caches (B,S,K,D); cache_pos (B,S); q_pos (B,)."""
+    B, H, D = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    block_k = min(block_k, S)
+    pad = (-S) % block_k
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache_pos = jnp.pad(cache_pos, ((0, 0), (0, pad)), constant_values=-1)
+    Sp = k_cache.shape[1]
+    nk = Sp // block_k
+
+    qh = q.reshape(B, K, G, D)
+    kt = k_cache.transpose(0, 2, 1, 3)                        # (B,K,S,D)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    pos2 = cache_pos[:, None, :]                              # (B,1,S)
+
+    grid = (B, K, nk)
+    kern = functools.partial(_kernel, scale=scale, softcap=softcap,
+                             window=window, num_kv_blocks=nk)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ik: (b,)),                      # q_pos
+            pl.BlockSpec((None, None, G, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, block_k, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((None, None, block_k, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((None, 1, block_k), lambda b, h, ik: (b, 0, ik)),  # pos
+        ],
+        out_specs=pl.BlockSpec((None, None, G, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, qh, kt, vt, pos2)
+    return out.reshape(B, H, D)

@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for the decode-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import decode_attention_fwd
+from .ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "block_k", "interpret"))
+def decode_attention(q, k_cache, v_cache, q_pos, cache_pos, *,
+                     window: int | None = None, softcap: float | None = None,
+                     scale: float | None = None, block_k: int = 512,
+                     interpret: bool = False):
+    """One-token decode attention.  q: (B,H,D); caches (B,S,K,D)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    return decode_attention_fwd(q, k_cache, v_cache, q_pos, cache_pos,
+                                scale=scale, softcap=softcap, window=window,
+                                block_k=block_k, interpret=interpret)
+
+
+__all__ = ["decode_attention", "decode_attention_ref"]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, q_pos, cache_pos, *,
+                         window: int | None = None,
+                         softcap: float | None = None,
+                         scale: float | None = None):
+    """q: (B,H,D) one new token per sequence.
+    k_cache/v_cache: (B,S,K,D); cache_pos: (B,S) absolute positions (-1 empty);
+    q_pos: (B,) absolute position of the new token.  Returns (B,H,D)."""
+    B, H, D = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    scale = D ** -0.5 if scale is None else scale
+    qh = q.reshape(B, K, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = (cache_pos >= 0) & (cache_pos <= q_pos[:, None])
+    if window is not None:
+        mask &= (q_pos[:, None] - cache_pos) < window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

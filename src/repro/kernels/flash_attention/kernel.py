@@ -1,0 +1,135 @@
+"""Flash attention Pallas TPU kernel: causal + sliding-window + softcap + GQA.
+
+TPU adaptation notes (vs the CUDA flash-attention the paper-era GPU stacks
+use): the MXU wants 128-aligned matmul dims and the VPU operates on
+(8,128) vregs, so we tile queries and keys into (block_q, head_dim) and
+(block_k, head_dim) VMEM blocks with head_dim untiled (≤ 256).  TPU grids
+execute sequentially over the *last* grid axis, so the online-softmax
+running state (m, l, acc) lives in VMEM scratch and is carried across the
+kv-block axis of the grid; the output is finalized when the kv axis hits its
+last iteration.  Causal/window skipping uses pl.when on whole blocks —
+the same work-skipping a CUDA kernel gets from early-exit loops.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks).
+  q block:   (block_q, head_dim)      — indexed by (b, h, iq)
+  k/v block: (block_k, head_dim)      — indexed by (b, h // group, ik)
+  out block: (block_q, head_dim)      — written at the final ik
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, softcap: float | None, window: int | None,
+            block_q: int, block_k: int, num_kv_blocks: int, seq_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Whole-block skip: block fully masked if its oldest key is beyond the
+    # window of the newest query, or all keys are in the future.
+    newest_q = q_start + block_q - 1
+    oldest_q = q_start
+    in_causal = k_start <= newest_q
+    in_window = True
+    if window is not None:
+        in_window = (k_start + block_k - 1) >= (oldest_q - window + 1)
+
+    @pl.when(in_causal & in_window)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)                    # (bq, D)
+        k = k_ref[...].astype(jnp.float32)                    # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = (kpos <= qpos) & (kpos < seq_len)
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                   # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                                # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                       # (bq, 1)
+        l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[...].astype(jnp.float32)                    # (bk, D)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, scale: float, softcap: float | None,
+                        window: int | None, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """q: (B,S,H,D); k,v: (B,S,K,D).  Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    pad_q = (-S) % block_q
+    pad_k = (-S) % block_k
+    if pad_q or pad_k:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq, Sk = q.shape[1], k.shape[1]
+    nq, nk = Sq // block_q, Sk // block_k
+
+    # (B,S,H,D) -> (B,H,S,D) for head-major blocking
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, H, nq, nk)
+    kern = functools.partial(
+        _kernel, scale=scale, softcap=softcap, window=window,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk, seq_len=S)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((None, None, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((None, None, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m: running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l: running denominator
+            pltpu.VMEM((block_q, D), jnp.float32),   # acc: running numerator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :S]

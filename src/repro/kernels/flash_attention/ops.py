@@ -1,0 +1,31 @@
+"""Jit'd public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, positions=None, window: int | None = None,
+                    softcap: float | None = None, scale: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """Causal flash attention.  q: (B,S,H,D); k,v: (B,S,K,D).
+
+    ``positions`` is accepted for interface parity with the XLA path but the
+    kernel assumes contiguous positions 0..S-1 (true for train/prefill).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    return flash_attention_fwd(q, k, v, scale=scale, softcap=softcap,
+                               window=window, block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+__all__ = ["flash_attention", "attention_ref"]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Materializes the full (S,S) score matrix — only usable at test shapes, which
+is the point: the kernel must match this bit-for-bit up to accumulation
+order.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, window: int | None = None,
+                  softcap: float | None = None, scale: float | None = None,
+                  causal: bool = True):
+    """q: (B,S,H,D); k,v: (B,S,K,D) with H % K == 0.  Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = D ** -0.5 if scale is None else scale
+    qh = q.reshape(B, S, K, G, D)
+    s = jnp.einsum("btkgd,bskd->bkgts", qh.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= (i - j) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, D).astype(q.dtype)

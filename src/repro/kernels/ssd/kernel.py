@@ -1,0 +1,126 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel [arXiv:2405.21060].
+
+The SSD insight: the SSM recurrence over a chunk of Q steps can be computed
+as a small attention-like quadratic form (MXU work) plus a rank-N state
+carried between chunks (sequential, but only S/Q steps).  On GPU the
+original implementation fuses this into a Triton kernel with warp-level
+scans; the TPU-native mapping is:
+
+- grid = (batch, heads, num_chunks) with the CHUNK axis last → sequential on
+  TPU, so the inter-chunk state h (P×N) lives in VMEM scratch and is carried
+  across grid steps, exactly like the flash-attention softmax state;
+- intra-chunk work is three MXU matmuls (C·Bᵀ, masked-decay weighted score ×
+  x, and C·h for the inter-chunk term) over (Q,N)/(Q,P) tiles — Q,P,N are
+  chosen 64..128 so every matmul is MXU-aligned;
+- the cumulative-decay vectors are VPU element-wise work in f32.
+
+Blocks per grid step: x (Q,P), dt (Q,1), B/C (Q,N); scratch h (P,N) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, dterm_ref, y_ref, hout_ref,
+            h_scr, *, num_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[...].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[...].astype(jnp.float32)        # (Q, 1)
+    B = b_ref[...].astype(jnp.float32)          # (Q, N)
+    C = c_ref[...].astype(jnp.float32)          # (Q, N)
+    A = a_ref[0]                                # scalar (this head's A)
+
+    a = dt * A                                  # (Q,1) log-decay
+    cum_a = jnp.cumsum(a, axis=0)               # (Q,1)
+    Q = x.shape[0]
+
+    # intra-chunk: scores[i,j] = C_i·B_j · exp(cum_a_i - cum_a_j) · dt_j, j<=i
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    rel = cum_a - cum_a.reshape(1, Q)           # (Q,Q) i rows, j cols
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(rel), 0.0)
+    scores = CB * decay * dt.reshape(1, Q)      # (Q,Q)
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q,P)
+
+    # inter-chunk: y += exp(cum_a) * (C @ h_prevᵀ)
+    h_prev = h_scr[...]                         # (P,N)
+    y += jnp.exp(cum_a) * jax.lax.dot_general(
+        C, h_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # D-term passthrough
+    y += dterm_ref[0] * x
+
+    # state update: h = exp(Σa)·h_prev + xᵀ @ (B · exp(cum_a_end - cum_a) · dt)
+    seg = jnp.exp(cum_a[Q - 1 : Q] - cum_a)     # (Q,1) decay j→end
+    Bw = B * seg * dt                           # (Q,N)
+    h_new = jnp.exp(cum_a[Q - 1, 0]) * h_prev + jax.lax.dot_general(
+        x, Bw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    h_scr[...] = h_new
+
+    y_ref[...] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == num_chunks - 1)
+    def _final():
+        hout_ref[...] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_fwd(x, dt, A, B_, C_, D=None, *, chunk: int = 128,
+            interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); B_,C_: (B,S,N).
+    Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    NC = Sp // Q
+    if D is None:
+        D = jnp.zeros((H,), jnp.float32)
+
+    xt = x.transpose(0, 2, 1, 3)                # (B,H,S,P)
+    dtt = dt.transpose(0, 2, 1)[..., None]      # (B,H,S,1)
+
+    grid = (Bb, H, NC)
+    kern = functools.partial(_kernel, num_chunks=NC)
+    y, h_final = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ic: (h,)),                       # A
+            pl.BlockSpec((None, None, Q, P), lambda b, h, ic: (b, h, ic, 0)),  # x
+            pl.BlockSpec((None, None, Q, 1), lambda b, h, ic: (b, h, ic, 0)),  # dt
+            pl.BlockSpec((None, Q, N), lambda b, h, ic: (b, ic, 0)),         # B
+            pl.BlockSpec((None, Q, N), lambda b, h, ic: (b, ic, 0)),         # C
+            pl.BlockSpec((1,), lambda b, h, ic: (h,)),                       # D
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, Q, P), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((None, None, P, N), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, H, Sp, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(A.astype(jnp.float32), xt, dtt, B_, C_, D.astype(jnp.float32))
+    y = y.transpose(0, 2, 1, 3)[:, :S]
+    return y, h_final

@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for the SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_fwd
+from .ref import ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, B_, C_, D=None, *, chunk: int = 128, interpret: bool = False):
+    """Chunked SSD scan.  See kernel.py for layout."""
+    return ssd_fwd(x, dt, A, B_, C_, D, chunk=chunk, interpret=interpret)
+
+
+__all__ = ["ssd", "ssd_ref"]

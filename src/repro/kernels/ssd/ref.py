@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD kernel: naive sequential recurrence.
+
+h_t = exp(dt_t·A) h_{t-1} + dt_t · B_t ⊗ x_t ;  y_t = C_t · h_t + D · x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B_, C_, D=None, h0=None):
+    """x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    B_,C_: (B,S,N).  Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B_.astype(jnp.float32)
+    Cf = C_.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def step(h, t):
+        dec = jnp.exp(dtf[:, t] * A)                          # (B,H)
+        dtx = dtf[:, t][..., None] * xf[:, t]                 # (B,H,P)
+        h = h * dec[:, :, None, None] + dtx[..., None] * Bf[:, t][:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, Cf[:, t])
+        return h, y
+
+    h_final, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1)                                # (B,S,H,P)
+    if D is not None:
+        y = y + D[None, None, :, None] * xf
+    return y.astype(x.dtype), h_final

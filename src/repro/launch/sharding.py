@@ -1,0 +1,126 @@
+"""Logical-axis sharding rules → NamedShardings (MaxText-style, with
+per-config divisibility fallbacks and per-leaf mesh-axis dedup).
+
+Every param/cache leaf carries a tuple of logical axis names (see
+models/*.py `*_axes()`).  ``make_rules`` resolves names to mesh axes for a
+given (config, mesh, shape); ``leaf_spec`` assigns mesh axes to a leaf's
+dims in PRIORITY order, skipping mesh axes already used by that leaf —
+so e.g. llama4's 40 heads (not divisible by model=16) fall back to sharding
+the attention weights' embed dim instead of replicating them.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# Leaf-dim assignment priority: most valuable shardings first.
+_PRIORITY = ("expert", "vocab", "ffn", "heads", "kv_heads", "ssm_heads",
+             "cache_seq", "cache_batch", "batch", "seq", "embed", "layers")
+
+
+def _div(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, *, batch: int | None = None,
+               fsdp: bool = False, seq_shard_cache: bool | None = None) -> dict:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = axes.get("model", 1)
+    data = axes.get("data", 1)
+    pod = axes.get("pod", 1)
+
+    # batch axes: largest prefix of (pod, data) that divides the batch
+    batch_axes: tuple[str, ...] = ()
+    if batch is not None:
+        if "pod" in axes and _div(batch, pod * data):
+            batch_axes = ("pod", "data")
+        elif _div(batch, data):
+            batch_axes = ("data",)
+    long_ctx = seq_shard_cache if seq_shard_cache is not None else (batch == 1)
+
+    rules: dict[str, Any] = {
+        "vocab": "model" if _div(cfg.vocab_size, model) else None,
+        "embed": ("data" if fsdp and _div(cfg.d_model, data) else None),
+        "heads": "model" if _div(cfg.n_heads, model) else None,
+        "kv_heads": "model" if _div(cfg.n_kv_heads, model) else None,
+        "ssm_heads": "model" if cfg.ssm_state and _div(cfg.ssm_heads, model) else None,
+        "ffn": "model",
+        "expert": ("data" if cfg.n_experts and _div(cfg.n_experts, data) else
+                   ("model" if cfg.n_experts and _div(cfg.n_experts, model) else None)),
+        "layers": None,
+        "batch": batch_axes or None,
+        "seq": None,
+        "cache_batch": batch_axes or None,
+        "cache_seq": ("data" if long_ctx else None),
+        None: None,
+    }
+    return rules
+
+
+def leaf_spec(axes_tuple: tuple, rules: dict) -> P:
+    """Resolve one leaf's logical axes with priority + per-leaf dedup."""
+    n = len(axes_tuple)
+    resolved: list[Any] = [None] * n
+    used: set[str] = set()
+    order = sorted(range(n), key=lambda i: _PRIORITY.index(axes_tuple[i])
+                   if axes_tuple[i] in _PRIORITY else len(_PRIORITY))
+    for i in order:
+        name = axes_tuple[i]
+        target = rules.get(name)
+        if target is None:
+            continue
+        targets = target if isinstance(target, tuple) else (target,)
+        free = tuple(t for t in targets if t not in used)
+        if not free:
+            continue
+        resolved[i] = free if len(free) > 1 else free[0]
+        used.update(free)
+    return P(*resolved)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def tree_shardings(axes_tree, mesh: Mesh, rules: dict):
+    """Map an axes tree (from param_axes/cache_axes) to NamedShardings."""
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, leaf_spec(a, rules)),
+        axes_tree, is_leaf=_is_axes_leaf)
+
+
+def batch_shardings(batch_tree_shapes: dict, mesh: Mesh, rules: dict):
+    """Shardings for a data batch: leading dim = batch, rest replicated."""
+    b = rules.get("batch")
+
+    def spec(x):
+        nd = len(x.shape)
+        return NamedSharding(mesh, P(*((b,) + (None,) * (nd - 1))) if b else P())
+
+    return {k: spec(v) for k, v in batch_tree_shapes.items()}
+
+
+# ---------------------------------------------------------- optimizer state
+def opt_state_axes(opt_name: str, param_axes_tree):
+    """Axes tree for OptState mirroring training/optimizer.py structures."""
+    from repro.training.optimizer import OptState
+
+    if opt_name == "adamw":
+        mu = param_axes_tree
+        nu = param_axes_tree
+    elif opt_name == "adafactor":
+        mu = jax.tree.map(lambda a: (), param_axes_tree, is_leaf=_is_axes_leaf)
+
+        def nu_axes(a):
+            if len(a) >= 2:
+                return {"row": tuple(a[:-1]), "col": tuple(a[:-2]) + (a[-1],)}
+            return {"full": tuple(a)}
+
+        nu = jax.tree.map(nu_axes, param_axes_tree, is_leaf=_is_axes_leaf)
+    else:
+        raise ValueError(opt_name)
+    return OptState(step=(), mu=mu, nu=nu)

@@ -1,0 +1,7 @@
+from .config import LayerSpec, ModelConfig, Segment
+from .lm import (cache_axes, decode_step, forward, init_decode_caches,
+                 init_params, param_axes, prefill)
+
+__all__ = ["LayerSpec", "ModelConfig", "Segment", "cache_axes", "decode_step",
+           "forward", "init_decode_caches", "init_params", "param_axes",
+           "prefill"]

@@ -1,0 +1,222 @@
+"""GQA attention with per-layer window / softcap / qk-norm, plus KV caches.
+
+Three execution backends:
+- ``xla``              — chunked (flash-style) pure-JAX path: scan over query
+                          chunks so the (S×S) score matrix is never
+                          materialized; this is what the dry-run lowers.
+- ``pallas``           — the Pallas TPU kernel (kernels/flash_attention).
+- ``pallas_interpret`` — same kernel, interpret mode (CPU validation).
+
+Cache layout: ``{"k": (B, S_c, K, D), "v": (B, S_c, K, D), "pos": (B, S_c)}``
+where ``pos`` holds the absolute position stored in each slot (-1 = empty).
+Local-window layers use a ring buffer (S_c = window); the pos array makes
+ring semantics trivial: a slot is visible iff 0 ≤ q_pos - slot_pos < window.
+RoPE is applied before caching, so cached keys are already rotated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import LayerSpec, ModelConfig
+from .layers import dense_init, dtype_of, rmsnorm, rmsnorm_axes, rmsnorm_init, rope, softcap
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ params
+def attn_init(key, cfg: ModelConfig, *, d_in: int | None = None,
+              d_out: int | None = None) -> dict:
+    d_in = d_in or cfg.d_model
+    d_out = d_out or cfg.d_model
+    H, K, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = dtype_of(cfg)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, (d_in, H, D), dt),
+        "wk": dense_init(kk, (d_in, K, D), dt),
+        "wv": dense_init(kv, (d_in, K, D), dt),
+        "wo": dense_init(ko, (H, D, d_out), dt, in_axis=0),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(D, dt)
+        p["k_norm"] = rmsnorm_init(D, dt)
+    return p
+
+
+def attn_axes(cfg: ModelConfig) -> dict:
+    p = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_axes()
+        p["k_norm"] = rmsnorm_axes()
+    return p
+
+
+# ------------------------------------------------------------- core attend
+def _gqa_scores(q: jax.Array, k: jax.Array, scale: float,
+                cap: float | None) -> jax.Array:
+    """q: (B,T,K,G,D), k: (B,S,K,D) → scores (B,K,G,T,S) in f32."""
+    s = jnp.einsum("btkgd,bskd->bkgts", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    return s
+
+
+def _masked_softmax(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m))
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    return e / z
+
+
+def _attend(q, k, v, q_pos, k_pos, *, window: int | None, cap: float | None,
+            scale: float) -> jax.Array:
+    """q: (B,T,H,D) vs k/v: (B,S,K,D); positions give causality + window.
+    Returns (B,T,H,D)."""
+    B, T, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qh = q.reshape(B, T, K, G, D)
+    scores = _gqa_scores(qh, k, scale, cap)                       # (B,K,G,T,S)
+    mask = (k_pos[:, None, :] <= q_pos[:, :, None]) & (k_pos[:, None, :] >= 0)
+    if window is not None:
+        mask &= (q_pos[:, :, None] - k_pos[:, None, :]) < window
+    probs = _masked_softmax(scores, mask[:, None, None, :, :])
+    out = jnp.einsum("bkgts,bskd->btkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, T, H, D)
+
+
+def _attend_chunked(q, k, v, q_pos, k_pos, *, window, cap, scale, q_chunk):
+    """Scan over query chunks — flash-style memory behavior in pure XLA."""
+    B, S, H, D = q.shape
+    if S <= q_chunk:
+        return _attend(q, k, v, q_pos, k_pos, window=window, cap=cap, scale=scale)
+    pad = (-S) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = q.shape[1] // q_chunk
+    qs = q.reshape(B, n_chunks, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    ps = q_pos.reshape(B, n_chunks, q_chunk).transpose(1, 0, 2)
+
+    def body(_, qc):
+        qi, pi = qc
+        # NOTE: with a static window we could slice k/v around the chunk; we
+        # keep full-K per chunk for GSPMD friendliness and mask instead.
+        out = _attend(qi, k, v, pi, k_pos, window=window, cap=cap, scale=scale)
+        return None, out
+
+    # Flash-attention memory discipline: recompute chunk scores/probs in the
+    # backward instead of letting scan stash the (B,H,qc,S) f32 probs for
+    # EVERY chunk (which costs ~n_chunks × score-matrix per layer and was the
+    # dominant train-step buffer — §Perf llama4 iteration C3).
+    body = jax.checkpoint(body)
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * q_chunk, H, D)
+    return out[:, :S]
+
+
+# ------------------------------------------------------------------- cache
+def init_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int) -> dict:
+    S_c = min(spec.window, max_len) if spec.window else max_len
+    K, D = cfg.n_kv_heads, cfg.head_dim
+    dt = dtype_of(cfg)
+    return {
+        "k": jnp.zeros((batch, S_c, K, D), dtype=dt),
+        "v": jnp.zeros((batch, S_c, K, D), dtype=dt),
+        "pos": jnp.full((batch, S_c), -1, dtype=jnp.int32),
+    }
+
+
+def cache_axes() -> dict:
+    return {"k": ("cache_batch", "cache_seq", "kv_heads", None),
+            "v": ("cache_batch", "cache_seq", "kv_heads", None),
+            "pos": ("cache_batch", "cache_seq")}
+
+
+def _cache_write(cache: dict, k_new, v_new, positions) -> dict:
+    """Scatter T new entries at slots pos % S_c (ring for local layers)."""
+    B, S_c = cache["pos"].shape
+    T = positions.shape[1]
+    slots = positions % S_c                                  # (B, T)
+    bidx = jnp.arange(B)[:, None]
+    return {
+        "k": cache["k"].at[bidx, slots].set(k_new),
+        "v": cache["v"].at[bidx, slots].set(v_new),
+        "pos": cache["pos"].at[bidx, slots].set(positions),
+    }
+
+
+# ------------------------------------------------------------------- apply
+def attention(params: dict, x: jax.Array, positions: jax.Array, *,
+              cfg: ModelConfig, spec: LayerSpec,
+              cache: dict | None = None) -> tuple[jax.Array, dict | None]:
+    """Full attention block (projections included).
+
+    Without a cache: causal self-attention over x (train / scoring).
+    With a cache: write this step's k/v then attend over the cache
+    (decode: T=1; prefill-into-cache: T=S).
+    """
+    B, T, _ = x.shape
+    H, K, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = rope(q, positions, spec.rope_theta)
+    k = rope(k, positions, spec.rope_theta)
+    scale = D ** -0.5
+    cap = cfg.attn_logit_softcap
+
+    if cache is not None:
+        cache = _cache_write(cache, k, v, positions)
+        out = _attend(q, cache["k"], cache["v"], positions, cache["pos"],
+                      window=spec.window, cap=cap, scale=scale)
+    else:
+        backend = cfg.attn_backend
+        if backend in ("pallas", "pallas_interpret"):
+            from repro.kernels.flash_attention import ops as fa_ops
+            out = fa_ops.flash_attention(
+                q, k, v, positions=positions, window=spec.window,
+                softcap=cap, scale=scale,
+                interpret=(backend == "pallas_interpret"))
+        else:
+            out = _attend_chunked(q, k, v, positions, positions,
+                                  window=spec.window, cap=cap, scale=scale,
+                                  q_chunk=cfg.q_chunk)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, cache
+
+
+def prefill_cache(params: dict, x: jax.Array, positions: jax.Array, *,
+                  cfg: ModelConfig, spec: LayerSpec, max_len: int
+                  ) -> tuple[jax.Array, dict]:
+    """Run attention over the prompt AND build the layer's decode cache."""
+    B, S, _ = x.shape
+    cache = init_cache(cfg, spec, B, max_len)
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = rope(q, positions, spec.rope_theta)
+    k = rope(k, positions, spec.rope_theta)
+    out = _attend_chunked(q, k, v, positions, positions,
+                          window=spec.window, cap=cfg.attn_logit_softcap,
+                          scale=cfg.head_dim ** -0.5, q_chunk=cfg.q_chunk)
+    cache = _cache_write(cache, k, v, positions)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, cache

@@ -1,0 +1,236 @@
+"""Model configuration + layer layout.
+
+A model is: embedding → a stack of *segments* → final norm → LM head.
+Each segment is a repeated *pattern* of layers; the pattern is unrolled in
+the scan body and the segment scans over ``repeat`` stacked parameter copies.
+This keeps compiled HLO small (one body per segment) while supporting
+heterogeneous stacks (gemma's local:global alternation, llama4's
+dense:MoE interleave, zamba2's mamba+shared-attention hybrid).
+
+Every per-layer attribute that affects program structure (window size,
+softcap, block kind) is **static** within a pattern position, so kernels can
+specialize; anything repeated is scanned.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal
+
+BlockKind = Literal["attn_mlp", "attn_moe", "mamba", "shared_attn"]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: BlockKind = "attn_mlp"
+    window: int | None = None          # None = global attention
+    rope_theta: float = 10_000.0
+
+
+@dataclass(frozen=True)
+class Segment:
+    pattern: tuple[LayerSpec, ...]
+    repeat: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeat
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                         # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                   # 0 → d_model // n_heads
+    # --- attention structure ---
+    window: int | None = None           # sliding window (None = full attention)
+    local_global_pattern: int = 0       # k>0: k local layers then 1 global
+    attn_logit_softcap: float | None = None
+    final_logit_softcap: float | None = None
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_local: float | None = None  # gemma3: separate theta for local layers
+    post_norm: bool = False             # gemma2: post-norms around attn/mlp
+    embed_scale: bool = False           # gemma: embeddings × sqrt(d_model)
+    tie_embeddings: bool = True
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0                   # routed-expert hidden (0 → d_ff)
+    moe_every: int = 1                  # MoE layer every k-th layer
+    first_layer_dense: bool = False     # deepseek: layer 0 is dense
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    moe_impl: str = "einsum"            # "einsum" (GShard dispatch) | "scatter"
+    # Mesh axis the experts are sharded over.  When set, the einsum dispatch
+    # pins xe/ye to expert-sharded layouts (tokens all-to-all TO the expert
+    # shards) — without it GSPMD may all-gather the expert WEIGHTS instead,
+    # which for 400B-class MoE is a ~100GiB/chip explosion (§Perf llama4).
+    moe_ep_axis: str | None = None
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    # --- hybrid (zamba2) ---
+    shared_attn_every: int = 0          # shared attn block after every k layers
+    # --- frontend ---
+    input_mode: str = "tokens"          # tokens | embeds (audio/vlm stubs)
+    # --- numerics / impl ---
+    optimizer: str = "adamw"            # adamw | adafactor
+    dtype: str = "bfloat16"
+    attn_backend: str = "xla"           # xla | pallas | pallas_interpret
+    q_chunk: int = 512                  # query chunking for the xla flash path
+    remat: bool = True
+    # Pin block outputs with an optimization barrier so GSPMD's TP all-reduce
+    # stays in bf16 instead of being fused with the downstream f32 norm
+    # upcast (halves activation collective bytes; §Perf deepseek iteration).
+    comm_bf16_barrier: bool = False
+    max_target_length: int = 4096       # default positions horizon (RoPE tables)
+    # roofline calibration: override each layout segment's repeat count
+    # (cost_analysis counts while-loop bodies once; the dry-run lowers
+    # repeat=1/2 variants and scales the diff by the true trip count).
+    layout_repeats: tuple | None = None
+    scan_unroll: bool = False           # unroll layer scans (calibration only)
+    notes: str = ""
+
+    # ------------------------------------------------------------------ dims
+    def __post_init__(self) -> None:
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.n_experts and not self.moe_d_ff:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    @property
+    def d_inner(self) -> int:           # mamba inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    # -------------------------------------------------------------- layout
+    def layout(self) -> tuple[Segment, ...]:
+        """The segment/pattern decomposition of the stack."""
+        segs = self._layout_base()
+        if self.layout_repeats is not None:
+            assert len(self.layout_repeats) == len(segs)
+            segs = tuple(Segment(s.pattern, r)
+                         for s, r in zip(segs, self.layout_repeats))
+        return segs
+
+    def _layout_base(self) -> tuple[Segment, ...]:
+        th, thl = self.rope_theta, (self.rope_theta_local or self.rope_theta)
+        glob = LayerSpec("attn_mlp", None, th)
+        loc = LayerSpec("attn_mlp", self.window, thl)
+
+        if self.family == "ssm":
+            return (Segment((LayerSpec("mamba"),), self.n_layers),)
+
+        if self.family == "hybrid":
+            k = self.shared_attn_every
+            assert k and self.n_layers % k == 0, "hybrid needs n_layers % shared_attn_every == 0"
+            pattern = tuple([LayerSpec("mamba")] * k + [LayerSpec("shared_attn", None, th)])
+            return (Segment(pattern, self.n_layers // k),)
+
+        if self.n_experts:  # MoE families
+            moe = LayerSpec("attn_moe", self.window, th)
+            dense = LayerSpec("attn_mlp", self.window, th)
+            segs: list[Segment] = []
+            n = self.n_layers
+            if self.first_layer_dense:
+                segs.append(Segment((dense,), 1))
+                n -= 1
+            if self.moe_every == 1:
+                segs.append(Segment((moe,), n))
+            else:
+                assert n % self.moe_every == 0
+                pat = tuple([dense] * (self.moe_every - 1) + [moe])
+                segs.append(Segment(pat, n // self.moe_every))
+            return tuple(segs)
+
+        # dense transformers
+        if self.local_global_pattern:
+            k = self.local_global_pattern
+            per = k + 1
+            full, rem = divmod(self.n_layers, per)
+            segs = [Segment(tuple([loc] * k + [glob]), full)]
+            if rem:
+                segs.append(Segment((loc,), rem))
+            return tuple(segs)
+        if self.window is not None:
+            return (Segment((loc,), self.n_layers),)
+        return (Segment((glob,), self.n_layers),)
+
+    # ---------------------------------------------------------- accounting
+    def param_count(self) -> int:
+        """Exact parameter count from the layout (used for 6·N·D roofline)."""
+        d, hd = self.d_model, self.head_dim
+        n = 0
+        has_shared = False
+        for seg in self.layout():
+            per_pattern = 0
+            for spec in seg.pattern:
+                if spec.kind == "mamba":
+                    di, ds = self.d_inner, self.ssm_state
+                    nh = self.ssm_heads
+                    conv_dim = di + 2 * ds
+                    per_pattern += d * (2 * di + 2 * ds + nh)       # in_proj
+                    per_pattern += conv_dim * (self.conv_width + 1)  # conv w + b
+                    per_pattern += 2 * nh + nh                       # A, D, dt_bias
+                    per_pattern += di                                # out norm
+                    per_pattern += di * d                            # out_proj
+                    per_pattern += d                                 # pre-norm
+                elif spec.kind == "shared_attn":
+                    has_shared = True                  # ONE param set, counted below
+                else:
+                    per_pattern += d * (self.n_heads * hd)           # q
+                    per_pattern += 2 * d * (self.n_kv_heads * hd)    # k, v
+                    per_pattern += (self.n_heads * hd) * d           # o
+                    per_pattern += (4 * d if self.post_norm else 2 * d)
+                    if self.qk_norm:
+                        per_pattern += 2 * hd
+                    if spec.kind == "attn_moe":
+                        e, ff = self.n_experts, self.moe_d_ff
+                        per_pattern += d * e                         # router
+                        per_pattern += e * 3 * d * ff                # experts
+                        if self.n_shared_experts:
+                            per_pattern += 3 * d * (self.n_shared_experts * ff)
+                    else:
+                        per_pattern += 3 * d * self.d_ff
+            n += per_pattern * seg.repeat
+        if has_shared:
+            din = 2 * d
+            n += din * (self.n_heads * hd)                   # q
+            n += 2 * din * (self.n_kv_heads * hd)            # k, v
+            n += (self.n_heads * hd) * d                     # o (to d)
+            n += 2 * din * self.d_ff + self.d_ff * d         # gated mlp (out to d)
+            n += 2 * din                                     # norms
+        n += self.vocab_size * d                                     # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        n += d                                                       # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: routed top-k + shared only)."""
+        if not self.n_experts:
+            return self.param_count()
+        full = self.param_count()
+        e, ff, d = self.n_experts, self.moe_d_ff, self.d_model
+        n_moe_layers = sum(
+            sum(1 for s in seg.pattern if s.kind == "attn_moe") * seg.repeat
+            for seg in self.layout())
+        inactive = n_moe_layers * (e - self.top_k) * 3 * d * ff
+        return full - inactive
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)

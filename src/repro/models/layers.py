@@ -1,0 +1,92 @@
+"""Shared layer primitives: norms, RoPE, embeddings, initializers.
+
+Functional-params convention: every module is a pair of functions
+``init(key, cfg, ...) -> params`` and ``apply(params, x, ...) -> y`` where
+``params`` is a nested dict of arrays.  ``axes(...)`` mirrors ``init`` and
+returns the logical sharding axes for every leaf (kept adjacent so they
+cannot drift; a test asserts structural equality).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------- RMSNorm
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype=jnp.float32)}
+
+
+def rmsnorm_axes() -> dict:
+    return {"scale": (None,)}
+
+
+def rmsnorm(params: dict, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    # (1 + scale): gemma-style zero-centered scale; at init this is identity.
+    return (y * (1.0 + params["scale"])).astype(dt)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freq  # (...,S,1,half)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# -------------------------------------------------------------- embeddings
+def embed_init(key, vocab: int, d: int, dtype) -> dict:
+    scale = 1.0
+    tbl = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * scale
+    return {"table": tbl.astype(dtype)}
+
+
+def embed_axes() -> dict:
+    return {"table": ("vocab", "embed")}
+
+
+def embed_lookup(params: dict, tokens: jax.Array, *, scale: bool, d: int) -> jax.Array:
+    x = params["table"][tokens]
+    if scale:
+        x = x * jnp.asarray(np.sqrt(d), dtype=x.dtype)
+    return x
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    """Tied head: logits = x @ table.T (f32 accumulation)."""
+    return jnp.einsum("...d,vd->...v", x, params["table"],
+                      preferred_element_type=jnp.float32)
+
+
+def softcap(logits: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return logits
+    return (cap * jnp.tanh(logits / cap)).astype(logits.dtype)
+
+
+# ------------------------------------------------------------ initializers
+def dense_init(key, shape: tuple[int, ...], dtype, *, in_axis: int = 0) -> jax.Array:
+    fan_in = shape[in_axis]
+    w = jax.random.normal(key, shape, dtype=jnp.float32) / np.sqrt(fan_in)
+    return w.astype(dtype)
+
+
+def stack_init(init_fn, key, repeat: int):
+    """Initialize ``repeat`` stacked copies of a layer (for scan)."""
+    keys = jax.random.split(key, repeat)
+    return jax.vmap(init_fn)(keys)

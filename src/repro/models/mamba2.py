@@ -1,0 +1,201 @@
+"""Mamba-2 block: SSD (state-space duality) with chunked scan [arXiv:2405.21060].
+
+Layout conventions:
+  d_inner = expand · d_model;  heads H = d_inner / head_dim P;  state N.
+  in_proj emits [z (d_inner) | x (d_inner) | B (N) | C (N) | dt (H)];
+  (x|B|C) pass through a causal depthwise conv (width W) + SiLU;
+  SSD recurrence  h_t = exp(dt·A)·h_{t-1} + dt·B_t ⊗ x_t,   y_t = C_t·h_t + D·x_t;
+  output: rmsnorm(y · silu(z)) → out_proj.  (n_groups = 1: B/C shared by heads.)
+
+The chunked scan computes, per chunk of Q steps, the intra-chunk quadratic
+part and a per-chunk state, then runs a tiny sequential scan over chunk
+states — O(S·Q) work instead of O(S²), MXU-friendly.  The same math has a
+Pallas kernel in kernels/ssd; this file is the pure-JAX reference/XLA path.
+
+Decode carries {"conv": (B, W-1, conv_dim), "ssm": (B, H, P, N)} — O(1) state,
+which is why SSM archs run the 500k-context cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, dtype_of, rmsnorm, rmsnorm_axes, rmsnorm_init
+
+
+# ------------------------------------------------------------------ params
+def mamba_init(key, cfg: ModelConfig) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.conv_width
+    conv_dim = di + 2 * N
+    dt = dtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(k1, (d, 2 * di + 2 * N + H), dt),
+        "conv_w": dense_init(k2, (W, conv_dim), dt),
+        "conv_b": jnp.zeros((conv_dim,), dtype=dt),
+        "A_log": jnp.zeros((H,), dtype=jnp.float32),      # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((H,), dtype=jnp.float32),
+        "out_norm": rmsnorm_init(di, dt),
+        "out_proj": dense_init(k4, (di, d), dt),
+    }
+
+
+def mamba_axes(cfg: ModelConfig) -> dict:
+    return {
+        "in_proj": ("embed", "ffn"),
+        "conv_w": (None, "ffn"),
+        "conv_b": ("ffn",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "out_norm": rmsnorm_axes(),
+        "out_proj": ("ffn", "embed"),
+    }
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int) -> dict:
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_dim = di + 2 * N
+    dt = dtype_of(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype=dt),
+        "ssm": jnp.zeros((batch, H, P, N), dtype=jnp.float32),
+    }
+
+
+def mamba_cache_axes() -> dict:
+    return {"conv": ("cache_batch", None, "ffn"),
+            "ssm": ("cache_batch", "heads", None, None)}
+
+
+# ------------------------------------------------------------------- split
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di : 2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """(B,S,C) depthwise causal conv, width W."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xBC.shape[1], :] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+# --------------------------------------------------------------- SSD scan
+def ssd_chunked(x, dt, A, B_, C_, *, chunk: int, h0: jax.Array | None = None):
+    """SSD over a full sequence.
+
+    x: (B,S,H,P)  dt: (B,S,H) (already softplus'd)  A: (H,) negative
+    B_, C_: (B,S,N).  Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    NC = Sp // Q
+    xc = x.reshape(Bb, NC, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bb, NC, Q, H).astype(jnp.float32)
+    Bc = B_.reshape(Bb, NC, Q, N).astype(jnp.float32)
+    Cc = C_.reshape(Bb, NC, Q, N).astype(jnp.float32)
+
+    a = dtc * A                                           # (B,NC,Q,H) log-decay
+    cum_a = jnp.cumsum(a, axis=2)
+    dtx = dtc[..., None] * xc                             # (B,NC,Q,H,P)
+
+    # intra-chunk (quadratic within chunk)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)            # (B,NC,Q,Q)
+    rel = cum_a[:, :, :, None, :] - cum_a[:, :, None, :, :]   # (B,NC,Q,Q,H) i,j
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    decay = jnp.where(causal, jnp.exp(rel), 0.0)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", CB, decay, dtx)
+
+    # per-chunk states
+    seg = jnp.exp(cum_a[:, :, -1:, :] - cum_a)            # decay from j to end
+    S_chunk = jnp.einsum("bckn,bckh,bckhp->bchpn", Bc, seg, dtx)
+
+    # inter-chunk sequential scan (NC steps)
+    chunk_decay = jnp.exp(cum_a[:, :, -1, :])             # (B,NC,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), dtype=jnp.float32)
+
+    def step(h, inp):
+        dec, s_new = inp                                  # (B,H), (B,H,P,N)
+        h_prev = h
+        h = h * dec[:, :, None, None] + s_new
+        return h, h_prev
+
+    hs_in = (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_chunk, 1, 0))
+    h_final, h_prevs = jax.lax.scan(step, h0, hs_in)
+    prev_states = jnp.moveaxis(h_prevs, 0, 1)             # (B,NC,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, prev_states,
+                         jnp.exp(cum_a))
+    y = (y_intra + y_inter).reshape(Bb, Sp, H, P)[:, :S]
+    return y, h_final
+
+
+def ssd_decode_step(h, x, dt, A, B_, C_):
+    """One token. h: (B,H,P,N); x: (B,H,P); dt: (B,H); B_,C_: (B,N)."""
+    dec = jnp.exp(dt * A)                                 # (B,H)
+    dtx = (dt[..., None] * x).astype(jnp.float32)         # (B,H,P)
+    h = h * dec[:, :, None, None] + dtx[..., None] * B_[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, C_.astype(jnp.float32))
+    return y, h
+
+
+# ------------------------------------------------------------------- block
+def mamba_block(params: dict, x: jax.Array, *, cfg: ModelConfig,
+                cache: dict | None = None) -> tuple[jax.Array, dict | None]:
+    """x: (B,S,d).  cache=None → full-sequence; cache → single-step decode
+    (S must be 1) or prefill-with-state-capture (S>1)."""
+    Bb, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    A = -jnp.exp(params["A_log"])
+    proj = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    if cache is not None and S == 1:
+        # decode: conv via ring window
+        win = jnp.concatenate([cache["conv"], xBC], axis=1)       # (B,W,conv)
+        conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", win, params["conv_w"])
+                               + params["conv_b"])[:, None, :]
+        new_conv = win[:, 1:, :]
+        xs = conv_out[..., :di].reshape(Bb, H, P)
+        B_ = conv_out[:, 0, di : di + N]
+        C_ = conv_out[:, 0, di + N :]
+        y, h = ssd_decode_step(cache["ssm"], xs, dt[:, 0], A, B_, C_)
+        y = y + params["D"][None, :, None] * xs
+        y = y.reshape(Bb, 1, di).astype(x.dtype)
+        new_cache = {"conv": new_conv, "ssm": h}
+    else:
+        conv_out = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+        xs = conv_out[..., :di].reshape(Bb, S, H, P)
+        B_ = conv_out[..., di : di + N]
+        C_ = conv_out[..., di + N :]
+        h0 = cache["ssm"] if cache is not None else None
+        y, h_final = ssd_chunked(xs, dt, A, B_, C_, chunk=cfg.ssm_chunk, h0=h0)
+        y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(Bb, S, di).astype(x.dtype)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": xBC[:, -(cfg.conv_width - 1):, :], "ssm": h_final}
+
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["out_norm"], y)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out, new_cache

@@ -1,0 +1,35 @@
+"""Gated MLP (SwiGLU/GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, dtype_of
+
+
+def mlp_init(key, cfg: ModelConfig, *, d_in: int | None = None,
+             d_out: int | None = None, d_ff: int | None = None) -> dict:
+    d_in = d_in or cfg.d_model
+    d_out = d_out or cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_in, d_ff), dt),
+        "w_up": dense_init(k2, (d_in, d_ff), dt),
+        "w_down": dense_init(k3, (d_ff, d_out), dt),
+    }
+
+
+def mlp_axes() -> dict:
+    return {"w_gate": ("embed", "ffn"),
+            "w_up": ("embed", "ffn"),
+            "w_down": ("ffn", "embed")}
+
+
+def mlp(params: dict, x: jax.Array, *, activation: str = "silu") -> jax.Array:
+    g = jnp.einsum("btd,df->btf", x, params["w_gate"])
+    u = jnp.einsum("btd,df->btf", x, params["w_up"])
+    act = jax.nn.gelu(g) if activation == "gelu" else jax.nn.silu(g)
+    return jnp.einsum("btf,fd->btd", act * u, params["w_down"])

@@ -1,0 +1,132 @@
+"""The serving engine: Cascade hosting applied to LM inference.
+
+One engine replica = one DFG vertex (a lambda bound to /serve/<name>) whose
+"computation" is prefill+decode over a model whose weights live in the
+replica's device store — data/compute collocation: requests (small objects)
+move to the weights (the largest dependency), never the reverse (§2, §3.5).
+
+Continuous batching: a fixed pool of KV slots; each engine tick decodes all
+active slots in ONE jitted step (the fast path — no host round-trips between
+stages), then admits waiting prefills into freed slots.  Prefill is its own
+jitted program; splice into the slot is device-side.
+
+The engine also exposes the Cascade put/latency ladder for benchmarks:
+``step_fused`` counts one host dispatch per tick regardless of batch size.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pools import DispatchPolicy
+from repro.models import decode_step, prefill
+from repro.models.config import ModelConfig
+
+from .kvcache import CacheManager
+from .scheduler import Request, Scheduler
+
+
+@dataclass
+class EngineStats:
+    ticks: int = 0
+    tokens_out: int = 0
+    prefills: int = 0
+    ttft_s: list = field(default_factory=list)     # time to first token
+    tpot_s: list = field(default_factory=list)     # time per output token
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
+                 max_len: int = 512, temperature: float = 0.0,
+                 scheduler: Scheduler | None = None, replica_id: int = 0) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.cm = CacheManager(cfg, n_slots, max_len)
+        self.scheduler = scheduler or Scheduler(n_replicas=1)
+        self.replica_id = replica_id
+        self.temperature = temperature
+        self.stats = EngineStats()
+        self.live: dict[int, Request] = {}
+        self._last_tokens = jnp.zeros((n_slots,), jnp.int32)
+
+        self._prefill = jax.jit(
+            lambda p, toks, pos: prefill(p, toks, pos, cfg, max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, caches, toks, pos: decode_step(p, caches, toks, pos, cfg))
+
+    # ------------------------------------------------------------- client
+    def submit(self, req: Request) -> None:
+        self.scheduler.submit(req)
+
+    # ------------------------------------------------------------- engine
+    def _admit(self) -> None:
+        free = self.cm.n_slots - self.cm.n_active
+        for req in self.scheduler.admit(self.replica_id, free):
+            slot = self.cm.acquire(req.request_id)
+            assert slot is not None
+            prompt = jnp.asarray(req.prompt)
+            if prompt.ndim == 1:
+                prompt = prompt[None, :]
+            S = prompt.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (1, S))
+            logits, one_caches = self._prefill(self.params, prompt, pos)
+            self.cm.insert_prefill(slot, one_caches, S)
+            tok = self._sample(logits)
+            req.slot = slot
+            req.tokens.append(int(tok[0]))
+            req.first_token_s = time.monotonic()
+            self.stats.ttft_s.append(req.first_token_s - req.arrived_s)
+            self.stats.prefills += 1
+            self.stats.tokens_out += 1
+            self.live[slot] = req
+            self._last_tokens = self._last_tokens.at[slot].set(tok[0])
+
+    def _sample(self, logits) -> jnp.ndarray:
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        key = jax.random.PRNGKey(self.stats.ticks)
+        return jax.random.categorical(key, logits / self.temperature).astype(jnp.int32)
+
+    def tick(self) -> int:
+        """One engine step: admit prefills, decode all active slots."""
+        self._admit()
+        if not self.live:
+            self.stats.ticks += 1
+            return 0
+        t0 = time.monotonic()
+        positions = self.cm.positions()[:, None]               # (B,1)
+        toks = self._last_tokens
+        logits, self.cm.caches = self._decode(self.params, self.cm.caches,
+                                              toks, positions)
+        new_toks = self._sample(logits)
+        self._last_tokens = new_toks
+        self.cm.advance()
+        dt = time.monotonic() - t0
+        done = []
+        n_emitted = 0
+        for slot, req in list(self.live.items()):
+            req.tokens.append(int(new_toks[slot]))
+            n_emitted += 1
+            self.stats.tpot_s.append(dt)
+            if len(req.tokens) >= req.max_new_tokens:
+                req.done_s = time.monotonic()
+                done.append(slot)
+        for slot in done:
+            self.cm.release(slot)
+            del self.live[slot]
+        self.stats.ticks += 1
+        self.stats.tokens_out += n_emitted
+        return n_emitted
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            pending = self.scheduler.pending(self.replica_id)
+            if not pending and not self.live:
+                return
+            self.tick()
+        raise TimeoutError("engine did not drain")

@@ -1,0 +1,73 @@
+"""KV-cache slot manager for continuous batching.
+
+The engine owns one global cache tree (batch dim = n_slots).  Each slot is
+leased to a live request; prefill produces a single-sequence cache that is
+spliced into the slot (a device-side dynamic_update_slice per leaf — no host
+copies, per the fast-path discipline).  Slot position counters live on host;
+cache tensors never leave the device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import init_decode_caches
+from repro.models.config import ModelConfig
+
+
+def _splice_slot(global_caches, one_caches, slot: int):
+    """Write a B=1 cache tree into batch row `slot` of the global tree.
+
+    Cache leaves are stacked (R, B, ...): batch is axis 1 for array leaves
+    of rank>=2; mamba 'ssm'/'conv' leaves follow the same convention.
+    """
+    def splice(g, o):
+        return jax.lax.dynamic_update_slice_in_dim(g, o.astype(g.dtype), slot, axis=1)
+    return jax.tree.map(splice, global_caches, one_caches)
+
+
+@dataclass
+class SlotState:
+    request_id: str | None = None
+    pos: int = 0            # next absolute position to decode
+    active: bool = False
+
+
+class CacheManager:
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int) -> None:
+        self.cfg, self.n_slots, self.max_len = cfg, n_slots, max_len
+        self.caches = init_decode_caches(cfg, n_slots, max_len)
+        self.slots = [SlotState() for _ in range(n_slots)]
+        self._splice = jax.jit(_splice_slot, static_argnums=(2,))
+
+    def acquire(self, request_id: str) -> int | None:
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                self.slots[i] = SlotState(request_id=request_id, active=True)
+                return i
+        return None
+
+    def release(self, slot: int) -> None:
+        self.slots[slot] = SlotState()
+
+    def insert_prefill(self, slot: int, one_caches, prompt_len: int) -> None:
+        self.caches = self._splice(self.caches, one_caches, slot)
+        self.slots[slot].pos = prompt_len
+
+    def active_mask(self) -> jnp.ndarray:
+        return jnp.asarray([s.active for s in self.slots], dtype=bool)
+
+    def positions(self) -> jnp.ndarray:
+        return jnp.asarray([s.pos for s in self.slots], dtype=jnp.int32)
+
+    def advance(self) -> None:
+        for s in self.slots:
+            if s.active:
+                s.pos += 1
+
+    @property
+    def n_active(self) -> int:
+        return sum(s.active for s in self.slots)

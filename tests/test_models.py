@@ -1,0 +1,158 @@
+"""Model zoo behaviour: forward shapes, decode-vs-forward parity, MoE
+equivalence, SSD chunking invariance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (ModelConfig, decode_step, forward,
+                          init_decode_caches, init_params, param_axes, prefill)
+
+
+def tiny(family="dense", **kw):
+    base = dict(name="t", family=family, n_layers=4, d_model=64, n_heads=4,
+                n_kv_heads=2, d_ff=128, vocab_size=256, dtype="float32",
+                max_target_length=64, q_chunk=16, ssm_chunk=8)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+FAMILIES = {
+    "dense": tiny(),
+    "swa": tiny(window=8),
+    "gemma_style": tiny(window=8, local_global_pattern=1,
+                        attn_logit_softcap=50.0, final_logit_softcap=30.0,
+                        post_norm=True, embed_scale=True),
+    "qknorm": tiny(qk_norm=True, local_global_pattern=3, window=8),
+    "moe": tiny("moe", n_experts=8, top_k=2, n_shared_experts=1, moe_d_ff=32,
+                first_layer_dense=True),
+    "moe_interleaved": tiny("moe", n_experts=4, top_k=1, moe_every=2),
+    "ssm": tiny("ssm", ssm_state=16, ssm_head_dim=16),
+    "hybrid": tiny("hybrid", ssm_state=16, ssm_head_dim=16,
+                   shared_attn_every=2, head_dim=32),
+    "embeds": tiny("audio", input_mode="embeds"),
+}
+
+
+def _inputs(cfg, B=2, S=24, seed=0):
+    key = jax.random.PRNGKey(seed)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.input_mode == "embeds":
+        return jax.random.normal(key, (B, S, cfg.d_model)), pos
+    return jax.random.randint(key, (B, S), 0, cfg.vocab_size), pos
+
+
+@pytest.mark.parametrize("name", list(FAMILIES))
+def test_forward_shapes_no_nan(name):
+    cfg = FAMILIES[name]
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    inp, pos = _inputs(cfg)
+    logits, aux = forward(params, inp, pos, cfg, mode="score")
+    assert logits.shape == (2, 24, cfg.vocab_size)
+    assert not jnp.isnan(logits).any()
+    assert not jnp.isnan(aux)
+
+
+@pytest.mark.parametrize("name", ["dense", "swa", "gemma_style", "qknorm",
+                                  "ssm", "hybrid", "embeds"])
+def test_decode_matches_forward(name):
+    """prefill(S-1) + decode_step(last) == forward at the last position."""
+    cfg = FAMILIES[name]
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    inp, pos = _inputs(cfg)
+    B, S = 2, 24
+    logits, _ = forward(params, inp, pos, cfg, mode="score")
+    _, caches = prefill(params, inp[:, : S - 1], pos[:, : S - 1], cfg,
+                        max_len=32)
+    last = inp[:, S - 1] if cfg.input_mode == "tokens" else inp[:, S - 1 : S]
+    dec, _ = decode_step(params, caches, last, pos[:, S - 1 : S], cfg)
+    np.testing.assert_allclose(dec, logits[:, -1], rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("name", ["moe", "moe_interleaved"])
+def test_moe_decode_matches_forward_no_drop(name):
+    """With generous capacity (no token drops) MoE decode == forward."""
+    cfg = FAMILIES[name].replace(capacity_factor=16.0)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    inp, pos = _inputs(cfg)
+    B, S = 2, 24
+    logits, _ = forward(params, inp, pos, cfg, mode="score")
+    _, caches = prefill(params, inp[:, : S - 1], pos[:, : S - 1], cfg, max_len=32)
+    dec, _ = decode_step(params, caches, inp[:, S - 1], pos[:, S - 1 : S], cfg)
+    np.testing.assert_allclose(dec, logits[:, -1], rtol=2e-4, atol=2e-4)
+
+
+def test_moe_einsum_scatter_equivalent():
+    cfg_e = FAMILIES["moe"].replace(capacity_factor=16.0, moe_impl="einsum")
+    cfg_s = cfg_e.replace(moe_impl="scatter")
+    params = init_params(jax.random.PRNGKey(1), cfg_e)
+    inp, pos = _inputs(cfg_e)
+    le, _ = forward(params, inp, pos, cfg_e, mode="score")
+    ls, _ = forward(params, inp, pos, cfg_s, mode="score")
+    np.testing.assert_allclose(le, ls, rtol=1e-4, atol=1e-4)
+
+
+def test_moe_aux_loss_positive_and_bounded():
+    cfg = FAMILIES["moe"]
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    inp, pos = _inputs(cfg)
+    _, aux = forward(params, inp, pos, cfg, mode="score")
+    assert float(aux) >= 1.0 - 1e-3  # Switch loss lower bound at balance
+    assert float(aux) < cfg.n_experts * 3  # sanity upper bound
+
+
+def test_ssd_chunk_invariance():
+    """SSD output must not depend on the chunk size."""
+    cfg8 = FAMILIES["ssm"]
+    cfg4 = cfg8.replace(ssm_chunk=4)
+    params = init_params(jax.random.PRNGKey(1), cfg8)
+    inp, pos = _inputs(cfg8)
+    l8, _ = forward(params, inp, pos, cfg8, mode="score")
+    l4, _ = forward(params, inp, pos, cfg4, mode="score")
+    np.testing.assert_allclose(l8, l4, rtol=2e-4, atol=2e-4)
+
+
+def test_q_chunk_invariance():
+    """Chunked attention must not depend on the chunk size."""
+    cfg = FAMILIES["swa"]
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    inp, pos = _inputs(cfg)
+    a, _ = forward(params, inp, pos, cfg, mode="score")
+    b, _ = forward(params, inp, pos, cfg.replace(q_chunk=7), mode="score")
+    c, _ = forward(params, inp, pos, cfg.replace(q_chunk=64), mode="score")
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(a, c, rtol=2e-4, atol=2e-4)
+
+
+def test_param_axes_structure_matches_params():
+    for name, cfg in FAMILIES.items():
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        axes = param_axes(cfg)
+        ps = jax.tree.structure(params)
+        axs = jax.tree.structure(
+            axes, is_leaf=lambda x: isinstance(x, tuple) and
+            all(isinstance(e, (str, type(None))) for e in x))
+        assert ps == axs, name
+        # every axes tuple has one entry per param dim
+        flat_p = jax.tree.leaves(params)
+        flat_a = jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple) and
+                                 all(isinstance(e, (str, type(None))) for e in x))
+        for p, a in zip(flat_p, flat_a):
+            assert p.ndim == len(a), (name, p.shape, a)
+
+
+def test_sliding_window_actually_limits_attention():
+    """Tokens beyond the window must not influence the output."""
+    cfg = tiny(window=4, n_layers=1)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    B, S = 1, 16
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    l1, _ = forward(params, toks, pos, cfg, mode="score")
+    # perturb a token far outside the window of the last position
+    toks2 = toks.at[0, 2].set((toks[0, 2] + 1) % cfg.vocab_size)
+    l2, _ = forward(params, toks2, pos, cfg, mode="score")
+    np.testing.assert_allclose(l1[0, -1], l2[0, -1], rtol=1e-5, atol=1e-5)
+    # ...but it does influence positions inside its window
+    assert not np.allclose(l1[0, 3], l2[0, 3])

@@ -1,0 +1,178 @@
+"""K/V store semantics (paper §3.2): versioning, seqlock, replication,
+trigger/volatile/persistent puts, temporal gets, access control."""
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CascadeObject, CascadeService, CascadeStore,
+                        DispatchPolicy, Persistence, PoolSpec, Worker)
+from repro.core.objects import monotonic_ns
+from repro.core.versioning import SeqlockCell, VersionChain
+
+
+# ---------------------------------------------------------------- seqlock
+def test_seqlock_basic():
+    c = SeqlockCell()
+    assert c.load() is None
+    o = CascadeObject(key="/k", payload=b"1")
+    c.store(o)
+    assert c.load().payload == b"1"
+
+
+def test_seqlock_under_race():
+    """A reader never observes a torn write (paper's v_a/v_b argument)."""
+    c = SeqlockCell()
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            c.store(CascadeObject(key="/k", payload=f"{i:012d}".encode() * 4))
+            i += 1
+
+    def reader():
+        while not stop.is_set():
+            o = c.load()
+            if o is not None:
+                s = o.payload
+                chunks = {s[j : j + 12] for j in range(0, 48, 12)}
+                if len(chunks) > 1:  # torn payload mixes two versions
+                    errors.append(s)
+
+    ts = [threading.Thread(target=writer), threading.Thread(target=reader),
+          threading.Thread(target=reader)]
+    for t in ts:
+        t.start()
+    time.sleep(0.2)
+    stop.set()
+    for t in ts:
+        t.join()
+    assert not errors
+
+
+# ----------------------------------------------------------- version chain
+@given(st.lists(st.binary(min_size=1, max_size=8), min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_chain_version_queries(payloads):
+    ch = VersionChain()
+    for i, p in enumerate(payloads):
+        ch.append(CascadeObject(key="/k", payload=p), i)
+    assert ch.latest().payload == payloads[-1]
+    for i, p in enumerate(payloads):
+        assert ch.at_version(i).payload == p
+    full = ch.version_range(0, len(payloads) - 1)
+    assert [o.payload for o in full] == payloads
+    hi = max(1, len(payloads) - 2)
+    mid = ch.version_range(1, hi)
+    assert [o.version for o in mid] == [v for v in range(len(payloads)) if 1 <= v <= hi]
+
+
+def test_chain_temporal():
+    ch = VersionChain()
+    stamps = []
+    for i in range(5):
+        o = ch.append(CascadeObject(key="/k", payload=str(i).encode()), i)
+        stamps.append(o.timestamp_ns)
+    for i, ts in enumerate(stamps):
+        assert ch.at_time(ts).version == i
+    assert ch.at_time(stamps[0] - 1) is None
+    got = ch.time_range(stamps[1], stamps[3])
+    assert [o.version for o in got] == [1, 2, 3]
+
+
+# ------------------------------------------------------------------ store
+def make_store(n=4, **kw):
+    return CascadeStore([Worker(i, **kw) for i in range(n)])
+
+
+def test_volatile_put_replicates_to_all_members():
+    s = make_store()
+    s.create_pool(PoolSpec(path="/v", replication=4))
+    s.put("/v/k", b"x")
+    holders = [w for w in s.workers.values() if w.load_latest("/v/k")]
+    assert len(holders) == 4
+    s.close()
+
+
+def test_trigger_put_stores_nothing():
+    s = make_store()
+    s.create_pool(PoolSpec(path="/t", persistence=Persistence.TRANSIENT))
+    r = s.trigger_put("/t/k", b"x")
+    assert all(w.load_latest("/t/k") is None for w in s.workers.values())
+    assert s.get("/t/k") is None
+    s.close()
+
+
+def test_get_any_member_consistent():
+    s = make_store()
+    s.create_pool(PoolSpec(path="/v", replication=2))
+    for i in range(10):
+        s.put("/v/k", str(i).encode())
+    for _ in range(20):  # get picks a random member; all must agree
+        assert s.get("/v/k").payload == b"9"
+    s.close()
+
+
+def test_version_monotonic_per_key():
+    s = make_store()
+    s.create_pool(PoolSpec(path="/v", replication=2))
+    versions = [s.put("/v/k", str(i).encode()).obj.version for i in range(5)]
+    assert versions == sorted(versions)
+    assert len(set(versions)) == 5
+    s.close()
+
+
+def test_persistent_put_survives_in_log(tmp_path):
+    s = CascadeStore([Worker(i, log_dir=str(tmp_path / f"w{i}")) for i in range(2)])
+    s.create_pool(PoolSpec(path="/p", persistence=Persistence.PERSISTENT,
+                           replication=2))
+    s.put("/p/k", b"alpha")
+    s.put("/p/k", b"beta")
+    w = next(iter(s.workers.values()))
+    log = w.logs["/p"]
+    objs = log.version_range_from_disk("/p/k", 0, 10)
+    assert [o.payload for o in objs] == [b"alpha", b"beta"]
+    s.close()
+
+
+def test_temporal_get_through_log(tmp_path):
+    s = CascadeStore([Worker(0, log_dir=str(tmp_path / "w0"))])
+    s.create_pool(PoolSpec(path="/p", persistence=Persistence.PERSISTENT))
+    r1 = s.put("/p/k", b"one")
+    time.sleep(0.002)
+    r2 = s.put("/p/k", b"two")
+    assert s.get_time("/p/k", r1.obj.timestamp_ns).payload == b"one"
+    assert s.get_time("/p/k", r2.obj.timestamp_ns).payload == b"two"
+    s.close()
+
+
+def test_access_control():
+    s = make_store()
+    s.create_pool(PoolSpec(path="/acl", writers=frozenset({"alice"})))
+    with pytest.raises(PermissionError):
+        s.put("/acl/k", b"x", principal="bob")
+    s.put("/acl/k", b"x", principal="alice")
+    s.close()
+
+
+def test_pool_routing_longest_prefix():
+    s = make_store()
+    s.create_pool(PoolSpec(path="/a"))
+    s.create_pool(PoolSpec(path="/a/b", replication=2))
+    spec, members = s._route("/a/b/k")
+    assert spec.path == "/a/b" and len(members) == 2
+    spec2, _ = s._route("/a/x")
+    assert spec2.path == "/a"
+    s.close()
+
+
+def test_affinity_hash_groups_related_keys():
+    from repro.core.pools import affinity_shard_hash
+    h1 = affinity_shard_hash("/cams/cam0/frame/1")
+    h2 = affinity_shard_hash("/cams/cam0/frame/2")
+    h3 = affinity_shard_hash("/cams/cam1/frame/1")
+    assert h1 == h2  # same camera → same home shard
+    assert h1 != h3 or True  # different camera usually differs (no guarantee)

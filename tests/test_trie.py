@@ -1,0 +1,63 @@
+"""PathTrie unit + property tests (paper §3.3: trie prefix matching)."""
+import string
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.trie import PathTrie, split_path
+
+COMP = st.text(alphabet=string.ascii_lowercase, min_size=1, max_size=4)
+PATH = st.lists(COMP, min_size=1, max_size=5).map(lambda cs: "/" + "/".join(cs))
+
+
+def test_basic_match():
+    t = PathTrie()
+    t.insert("/sf/detect_animal", "filter")
+    t.insert("/sf", "root")
+    assert t.match("/sf/detect_animal/cam0/f1") == ["root", "filter"]
+    assert t.match("/sf/other") == ["root"]
+    assert t.match("/other") == []
+
+
+def test_multi_lambda_one_prefix():
+    t = PathTrie()
+    t.insert("/p", "a")
+    t.insert("/p", "b")
+    assert t.match("/p/x") == ["a", "b"]
+
+
+def test_remove():
+    t = PathTrie()
+    t.insert("/p/q", 1)
+    assert t.remove("/p/q", 1)
+    assert not t.remove("/p/q", 1)
+    assert t.match("/p/q/r") == []
+
+
+def test_longest_prefix():
+    t = PathTrie()
+    t.insert("/a", "shallow")
+    t.insert("/a/b/c", "deep")
+    path, vals = t.longest_prefix("/a/b/c/d")
+    assert path == "/a/b/c" and vals == ["deep"]
+
+
+@given(st.lists(st.tuples(PATH, st.integers()), max_size=20), PATH)
+@settings(max_examples=100, deadline=None)
+def test_match_equals_bruteforce(entries, key):
+    """Property: trie match == brute-force component-prefix scan."""
+    t = PathTrie()
+    for p, v in entries:
+        t.insert(p, v)
+    got = t.match(key)
+    kc = split_path(key)
+    expected = [v for p, v in entries if kc[: len(split_path(p))] == split_path(p)]
+    assert sorted(map(repr, got)) == sorted(map(repr, expected))
+
+
+def test_iter_prefixes():
+    t = PathTrie()
+    t.insert("/a/b", 1)
+    t.insert("/c", 2)
+    got = dict(t.iter_prefixes())
+    assert got == {"/a/b": [1], "/c": [2]}

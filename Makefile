@@ -1,0 +1,16 @@
+# Tier-1 verification and common dev entry points.
+# `make test` is the exact command CI runs; a collection error (e.g. a test
+# module importing a missing optional dep) fails it immediately.
+
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench serve-example
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run $(if $(ONLY),--only $(ONLY))
+
+serve-example:
+	PYTHONPATH=$(PYTHONPATH) python examples/serve_cluster.py

@@ -30,6 +30,7 @@ def main() -> None:
         ("trie_ns_per_level", fastpath.bench_trie),
         ("fig10_smart_farming", pipelines.bench_farming),
         ("fig11_collision_detection", pipelines.bench_collision),
+        ("serve_cluster_ttft_tpot", pipelines.bench_serve_cluster),
         ("roofline_table", lambda out: roofline.table(out)),
     ]
 

@@ -18,6 +18,7 @@ uploaded to Cascade; here ``DFG.from_json`` accepts exactly that shape:
 from __future__ import annotations
 
 import json
+from bisect import insort
 from dataclasses import dataclass, field
 from typing import Iterable
 
@@ -92,6 +93,9 @@ class DFG:
             raise ValueError(f"DFG {self.name} has a cycle")
 
     def topo_order(self) -> list[Vertex]:
+        """Deterministic Kahn order: the frontier is kept sorted, so vertices
+        with equal indegree come out lexicographically regardless of the
+        order vertices/edges were added (deployments must be reproducible)."""
         self.validate()
         order: list[Vertex] = []
         indeg = {n: 0 for n in self.vertices}
@@ -105,7 +109,7 @@ class DFG:
                 if s == n:
                     indeg[d] -= 1
                     if indeg[d] == 0:
-                        frontier.append(d)
+                        insort(frontier, d)
         return order
 
     # -- JSON round trip -----------------------------------------------------

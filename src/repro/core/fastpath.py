@@ -110,7 +110,15 @@ class FastPathPipeline:
 
     stages: Sequence[Stage]
 
-    def build(self) -> Callable[..., Any]:
+    def build(self, *, donate_input: bool = False) -> Callable[..., Any]:
+        """Compile the plan.  Zero-copy donation discipline (§3.4, rung 1):
+        every group after the first consumes an intermediate activation that
+        only the pipeline references, so its input buffer is always donated
+        and XLA may overwrite it in place.  The FIRST group consumes the
+        caller's own array, which must not be invalidated behind the caller's
+        back — it is donated only when the caller opts in via
+        ``donate_input=True``.
+        """
         groups: list[list[Stage]] = []
         for st in self.stages:
             if groups and _same_place(groups[-1][-1], st):
@@ -118,8 +126,8 @@ class FastPathPipeline:
             else:
                 groups.append([st])
         compiled: list[tuple[Callable[..., Any], jax.sharding.Sharding | None]] = []
-        for g in groups:
-            fn = fuse_stages(g, donate=False)
+        for gi, g in enumerate(groups):
+            fn = fuse_stages(g, donate=donate_input if gi == 0 else True)
             compiled.append((fn, g[0].out_sharding))
 
         def run(x, *extra):

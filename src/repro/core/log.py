@@ -94,6 +94,23 @@ class PersistentLog:
         ``wait_stable`` the call returns only after the bytes are durable —
         this is the paper's persistent-put acknowledgement point.
         """
+        obj, done = self.append_nowait(key, payload, ts_ns=ts_ns)
+        if wait_stable:
+            done.wait()
+        return obj
+
+    def append_nowait(self, key: str, payload: bytes, *, ts_ns: int | None = None
+                      ) -> tuple[CascadeObject, threading.Event]:
+        """Queue a record and return (stamped object, its OWN stability
+        event), so a caller can await this record's durability without
+        waiting for the whole queue to drain (other writers' records).
+
+        Version stamping and enqueueing happen under ONE critical section:
+        otherwise a preempted writer could enqueue a higher version first,
+        writing the log out of version order and regressing the stability
+        frontier.  (The write-back thread never holds _queue_cv while taking
+        _meta_lock, so this nesting cannot deadlock.)
+        """
         with self._meta_lock:
             version = self._next_version
             self._next_version += 1
@@ -102,15 +119,14 @@ class PersistentLog:
                 chain = self._chains[key] = VersionChain()
             obj = chain.append(CascadeObject(key=key, payload=payload), version,
                                ts_ns=ts_ns)
-        rec = _PendingRecord(key, payload, version, obj.timestamp_ns, threading.Event())
-        with self._queue_cv:
-            self._queue.append(rec)
-            self._pending += 1
-            self._pending_zero.clear()
-            self._queue_cv.notify()
-        if wait_stable:
-            rec.done.wait()
-        return obj
+            rec = _PendingRecord(key, payload, version, obj.timestamp_ns,
+                                 threading.Event())
+            with self._queue_cv:
+                self._queue.append(rec)
+                self._pending += 1
+                self._pending_zero.clear()
+                self._queue_cv.notify()
+        return obj, rec.done
 
     def _write_back_loop(self) -> None:
         while True:

@@ -8,8 +8,10 @@ accessed objects, and the fast-path machinery (dispatcher + upcall pool).
 pool→shard maps, and implements the three put flavors:
 
 - ``trigger_put`` — deliver the object to ONE member of the home shard (round
-  robin, emulating the paper's random P2P choice deterministically) and
-  dispatch upcalls there.  Nothing is stored (§3.2).
+  robin for RR pools, emulating the paper's random P2P choice
+  deterministically; key-hash for FIFO pools so same-key/session objects keep
+  one node and stay ordered) and dispatch upcalls there.  Nothing is stored
+  (§3.2).
 - ``put`` on a volatile pool — atomic multicast: deliver to ALL members of
   the home shard in sequence order so replicas stay identical; upcalls are
   dispatched on the round-robin-selected processing member (§3.5).
@@ -33,7 +35,7 @@ from .dispatcher import Dispatcher, LambdaHandle, UpcallEvent, UpcallThreadPool
 from .log import PersistentLog
 from .objects import INVALID_VERSION, CascadeObject, monotonic_ns
 from .placement import LRUCache, RoundRobin, ShardMap, build_shard_map
-from .pools import Persistence, PoolRegistry, PoolSpec
+from .pools import DispatchPolicy, Persistence, PoolRegistry, PoolSpec
 from .versioning import VersionChain
 
 
@@ -46,6 +48,7 @@ class Worker:
         self.volatile: dict[str, VersionChain] = {}
         self._volatile_lock = threading.Lock()
         self.logs: dict[str, PersistentLog] = {}
+        self._logs_lock = threading.Lock()
         self.lru = LRUCache(lru_bytes)
         self.upcalls = UpcallThreadPool(n_upcall_threads, name=f"w{worker_id}-upcall")
         self.dispatcher = Dispatcher(self.upcalls)
@@ -65,17 +68,25 @@ class Worker:
         self.stored_objects += 1
         return stamped
 
-    def persist(self, pool: PoolSpec, obj: CascadeObject, *, wait: bool = True) -> CascadeObject:
+    def persist_async(self, pool: PoolSpec, obj: CascadeObject):
+        """Queue the record; returns (stamped obj, this record's stability
+        event) so the caller can overlap replicas' disk I/O and then await
+        exactly its own records."""
         log = self.logs.get(pool.path)
         if log is None:
-            base = self._log_dir or os.path.join(".cascade_logs", f"w{self.worker_id}")
-            fname = pool.path.strip("/").replace("/", "_") + ".log"
-            log = self.logs[pool.path] = PersistentLog(os.path.join(base, fname))
+            with self._logs_lock:  # two first-puts must not double-open the file
+                log = self.logs.get(pool.path)
+                if log is None:
+                    base = self._log_dir or os.path.join(".cascade_logs",
+                                                         f"w{self.worker_id}")
+                    fname = pool.path.strip("/").replace("/", "_") + ".log"
+                    log = self.logs[pool.path] = PersistentLog(
+                        os.path.join(base, fname))
         payload = obj.payload
         if not isinstance(payload, (bytes, bytearray)):
             payload = _to_bytes(payload)
-        return log.append(obj.key, bytes(payload), wait_stable=wait,
-                          ts_ns=obj.timestamp_ns or None)
+        return log.append_nowait(obj.key, bytes(payload),
+                                 ts_ns=obj.timestamp_ns or None)
 
     def load_latest(self, key: str) -> CascadeObject | None:
         chain = self.volatile.get(key)
@@ -153,11 +164,27 @@ class CascadeStore:
         return k, lock
 
     def trigger_put(self, key: str, payload: Any, *, principal: str = "") -> PutReceipt:
-        """P2P send to one member + upcall; nothing stored, nothing replicated."""
+        """P2P send to one member + upcall; nothing stored, nothing replicated.
+
+        Member selection follows the pool's dispatch policy, mirroring the
+        dispatcher's queue selection (§3.3) one level up: ROUND_ROBIN spreads
+        trigger-puts across the home shard, FIFO picks the member by the
+        pool's key hash so same-key (or, with ``affinity_shard_hash``,
+        same-session) objects always land on the same node, in order.
+        """
         spec, members = self._route(key)
         if not spec.can_write(principal):
             raise PermissionError(f"{principal!r} cannot write {spec.path}")
-        target = self._rr.pick(("trig", spec.path), members)
+        if spec.dispatch is DispatchPolicy.FIFO:
+            # The low bits of the hash already chose the home shard
+            # (h % n_shards); pick the member from the HIGH bits so the two
+            # moduli are decorrelated — otherwise gcd(n_shards, replication)
+            # > 1 leaves whole member subsets permanently unreachable.
+            h = spec.shard_hash(key)
+            n_shards = len(self._shard_maps[spec.path].shards)
+            target = members[(h // max(1, n_shards)) % len(members)]
+        else:
+            target = self._rr.pick(("trig", spec.path), members)
         obj = CascadeObject(key=key, payload=payload, version=INVALID_VERSION,
                             timestamp_ns=monotonic_ns())
         events = self.workers[target].dispatcher.dispatch(obj)
@@ -181,8 +208,17 @@ class CascadeStore:
                 stamped = self.workers[wid].store(obj, version)
         if spec.persistence is Persistence.PERSISTENT:
             # All replicas persist before the put is acknowledged (§3.2).
-            for wid in members:
-                self.workers[wid].persist(spec, obj, wait=(wid == members[-1]))
+            # Appends are issued without waiting so the members' write-back
+            # threads overlap their disk I/O, then stability is awaited for
+            # THIS put's record on EVERY member's log — not just the last
+            # one's, and not the whole queue (concurrent puts stay
+            # independent).
+            pending = [self.workers[wid].persist_async(spec, obj)[1]
+                       for wid in members]
+            for done in pending:
+                if not done.wait(10.0):
+                    raise TimeoutError(
+                        "persistent put did not stabilize on all replicas")
         # Round-robin processing member (§3.5); replicas all HOLD the data,
         # exactly one dispatches the upcall for this object.
         proc = self._rr.pick(("proc", spec.path, shard_idx), members)

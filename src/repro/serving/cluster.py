@@ -1,0 +1,194 @@
+"""Multi-replica serving cluster on the Cascade fast path (§3.3, §3.5).
+
+``ServeCluster`` hosts N ``ServeEngine`` replicas the way the paper hosts any
+lambda: each replica lives on one Cascade ``Worker`` and is registered on the
+``/serve/<model>/req`` pool, so requests ARRIVE as ``trigger_put``s through
+the store → dispatcher → upcall-thread fast path (nothing is stored or
+copied; the upcall carries references).  Completed responses are ``put`` back
+into the ``/serve/<model>/out`` pool, where clients read them with ``get``.
+
+Replica selection is the store's trigger-put member pick, i.e. the paper's
+two dispatch policies end-to-end:
+
+- ``ROUND_ROBIN`` — trigger-puts spread evenly over the home shard's members
+  (one engine replica per member): load balancing.
+- ``FIFO`` — the member is chosen by ``affinity_shard_hash`` over the
+  ``/serve/<model>/req/<session>`` prefix, so every turn of a session lands
+  on the SAME replica, and the single upcall thread per worker keeps the
+  session's turns in submission order (KV/session locality, §3.3's
+  same-key-same-queue rule lifted to the cluster level).
+
+Request keys: ``/serve/<model>/req/<session>/<request_id>``; payloads are
+small dicts (prompt + decode budget) — the request moves to the weights, the
+weights never move (§2 data/compute collocation).
+
+The decode loop itself is the overhauled engine tick: batched prefill
+admission, masked fused decode, one device→host transfer per tick.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core.dispatcher import LambdaHandle
+from repro.core.objects import CascadeObject
+from repro.core.pools import (DispatchPolicy, Persistence, PoolSpec,
+                              affinity_shard_hash)
+from repro.core.store import CascadeStore, Worker
+from repro.models.config import ModelConfig
+
+from .engine import ServeEngine
+from .scheduler import Request, Scheduler
+
+# key = /serve/<model>/req/<session>/<request_id> → 5 components; hashing the
+# first 4 ("serve", model, "req", session) gives per-session affinity.
+_SESSION_DEPTH = 4
+
+
+class ServeCluster:
+    """N engine replicas as lambdas on a Cascade store (one per worker)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_replicas: int = 2,
+                 n_slots: int = 4, max_len: int = 64,
+                 policy: DispatchPolicy = DispatchPolicy.ROUND_ROBIN,
+                 model_name: str | None = None,
+                 temperature: float = 0.0) -> None:
+        self.cfg = cfg
+        self.policy = policy
+        name = model_name or cfg.name
+        self.req_prefix = f"/serve/{name}/req"
+        self.out_prefix = f"/serve/{name}/out"
+        # One worker per replica; a single upcall thread per worker keeps
+        # FIFO sessions ordered (the dispatcher's same-queue guarantee).
+        self.workers = [Worker(i, n_upcall_threads=1)
+                        for i in range(n_replicas)]
+        self.store = CascadeStore(self.workers)
+        self.store.create_pool(PoolSpec(
+            path=self.req_prefix, persistence=Persistence.TRANSIENT,
+            replication=n_replicas, dispatch=policy,
+            shard_hash=functools.partial(affinity_shard_hash,
+                                         depth=_SESSION_DEPTH)))
+        self.store.create_pool(PoolSpec(path=self.out_prefix, replication=1))
+        self.engines = [
+            ServeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                        temperature=temperature, scheduler=Scheduler(n_replicas=1),
+                        on_complete=self._on_complete, seed_offset=r)
+            for r in range(n_replicas)
+        ]
+        # Collocated replicas run identical programs: share the jitted
+        # callables so each (batch, prompt-length) bucket compiles once per
+        # cluster, not once per replica.
+        for eng in self.engines[1:]:
+            eng._prefill = self.engines[0]._prefill
+            eng._step = self.engines[0]._step
+        for r in range(n_replicas):
+            handle = LambdaHandle(
+                name=f"serve-replica-{r}", prefix=self.req_prefix,
+                fn=functools.partial(self._on_request, r), dispatch=policy)
+            self.store.register_lambda(handle, worker_ids=[r])
+        # request_id → replica index, for introspection/tests; bounded so a
+        # long-running cluster doesn't grow it without limit.
+        self.routed: dict[str, int] = {}
+        self._routed_cap = 4096
+        self._lock = threading.Lock()
+        self._submitted = 0
+        self._completed = 0
+
+    # ------------------------------------------------------------- lambdas
+    def _on_request(self, replica: int, obj: CascadeObject, _event) -> str:
+        """The serving lambda: runs on the replica worker's upcall thread."""
+        comps = obj.key.split("/")
+        session, request_id = comps[-2], comps[-1]
+        payload = obj.payload
+        req = Request(request_id=request_id, session_key=session,
+                      prompt=payload["prompt"],
+                      max_new_tokens=int(payload.get("max_new_tokens", 16)))
+        with self._lock:
+            self.routed[request_id] = replica
+            while len(self.routed) > self._routed_cap:
+                self.routed.pop(next(iter(self.routed)))
+        self.engines[replica].submit(req)
+        return request_id
+
+    def _on_complete(self, req: Request) -> None:
+        """Engine completion hook: the response lands back in the store."""
+        self.store.put(f"{self.out_prefix}/{req.request_id}",
+                       np.asarray(req.tokens, np.int32))
+        with self._lock:
+            self._completed += 1
+
+    # ------------------------------------------------------------- clients
+    def submit(self, session_key: str, request_id: str, prompt: Any, *,
+               max_new_tokens: int = 16):
+        """Fire a request into the fast path (trigger_put; nothing stored)."""
+        key = f"{self.req_prefix}/{session_key}/{request_id}"
+        with self._lock:
+            self._submitted += 1
+        return self.store.trigger_put(
+            key, {"prompt": np.asarray(prompt),
+                  "max_new_tokens": max_new_tokens})
+
+    def result(self, request_id: str) -> np.ndarray | None:
+        obj = self.store.get(f"{self.out_prefix}/{request_id}")
+        return None if obj is None else np.asarray(obj.payload)
+
+    # -------------------------------------------------------------- driver
+    def _idle(self) -> bool:
+        return all(eng.scheduler.pending(eng.replica_id) == 0 and not eng.live
+                   for eng in self.engines)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        """Tick every busy replica until all submitted requests completed.
+
+        In the paper's deployment each replica's engine loop runs on its own
+        node; here one driver thread round-robins the ticks (the jitted step
+        releases the GIL into XLA either way), while upcall threads keep
+        feeding the schedulers concurrently.
+        """
+        for _ in range(max_ticks):
+            busy = False
+            for eng in self.engines:
+                if eng.scheduler.pending(eng.replica_id) or eng.live:
+                    eng.tick()
+                    busy = True
+            if not busy:
+                with self._lock:
+                    done = self._completed == self._submitted
+                if done and self._idle():
+                    return
+                time.sleep(0.0002)   # in-flight upcalls not yet enqueued
+        raise TimeoutError("cluster did not drain")
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> dict[str, Any]:
+        """Aggregate latency/throughput stats across replicas."""
+        ttft = sorted(t for e in self.engines for t in e.stats.ttft_s)
+        tpot = sorted(t for e in self.engines for t in e.stats.tpot_s)
+
+        def pct(xs: list[float], q: float) -> float:
+            return xs[min(len(xs) - 1, int(q * len(xs)))] if xs else float("nan")
+
+        return {
+            "n_replicas": len(self.engines),
+            "requests": sum(e.stats.prefills for e in self.engines),
+            "tokens_out": sum(e.stats.tokens_out for e in self.engines),
+            "per_replica_requests": [e.stats.prefills for e in self.engines],
+            "host_syncs": sum(e.stats.host_syncs for e in self.engines),
+            "decode_ticks": sum(e.stats.decode_ticks for e in self.engines),
+            "prefill_batches": sum(e.stats.prefill_batches for e in self.engines),
+            "ttft_p50_s": pct(ttft, 0.50), "ttft_p99_s": pct(ttft, 0.99),
+            "tpot_p50_s": pct(tpot, 0.50), "tpot_p99_s": pct(tpot, 0.99),
+        }
+
+    def close(self) -> None:
+        self.store.close()
+
+    def __enter__(self) -> "ServeCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -7,11 +7,21 @@ move to the weights (the largest dependency), never the reverse (§2, §3.5).
 
 Continuous batching: a fixed pool of KV slots; each engine tick decodes all
 active slots in ONE jitted step (the fast path — no host round-trips between
-stages), then admits waiting prefills into freed slots.  Prefill is its own
-jitted program; splice into the slot is device-side.
+stages), then admits waiting prefills into freed slots.
 
-The engine also exposes the Cascade put/latency ladder for benchmarks:
-``step_fused`` counts one host dispatch per tick regardless of batch size.
+Fast-path discipline inside the tick:
+
+- **Batched prefill admission** — requests admitted in the same tick are
+  batched over contiguous same-shape runs (admission order preserved) and
+  each run executes ONE jitted prefill with B=k (no padding, so the path is
+  safe for ring caches and SSM state alike); each row is spliced into its
+  KV slot device-side.
+- **Masked decode** — sampling is fused into the jitted decode step and
+  inactive slots are masked there, so garbage rows never leak into
+  ``_last_tokens`` and the host sees a single ready-to-read token vector.
+- **One device→host transfer per tick** — the decode step's new tokens are
+  pulled once via ``np.asarray`` (``stats.host_syncs`` counts every pull;
+  one per decode tick plus one per prefill group, never per slot).
 """
 from __future__ import annotations
 
@@ -23,7 +33,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.pools import DispatchPolicy
 from repro.models import decode_step, prefill
 from repro.models.config import ModelConfig
 
@@ -36,6 +45,9 @@ class EngineStats:
     ticks: int = 0
     tokens_out: int = 0
     prefills: int = 0
+    prefill_batches: int = 0                       # jitted prefill dispatches
+    decode_ticks: int = 0                          # ticks that ran a decode
+    host_syncs: int = 0                            # device→host transfers
     ttft_s: list = field(default_factory=list)     # time to first token
     tpot_s: list = field(default_factory=list)     # time per output token
 
@@ -43,54 +55,122 @@ class EngineStats:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
                  max_len: int = 512, temperature: float = 0.0,
-                 scheduler: Scheduler | None = None, replica_id: int = 0) -> None:
+                 scheduler: Scheduler | None = None, replica_id: int = 0,
+                 on_complete: Callable[[Request], None] | None = None,
+                 seed_offset: int | None = None) -> None:
         self.cfg = cfg
         self.params = params
         self.cm = CacheManager(cfg, n_slots, max_len)
         self.scheduler = scheduler or Scheduler(n_replicas=1)
         self.replica_id = replica_id
         self.temperature = temperature
+        self.on_complete = on_complete
         self.stats = EngineStats()
         self.live: dict[int, Request] = {}
         self._last_tokens = jnp.zeros((n_slots,), jnp.int32)
+        # Sampling seed stream: one fresh seed per jitted dispatch, offset by
+        # replica so same-tick prefill groups / decode steps / sibling
+        # replicas never share a PRNG key.
+        self._seed_base = (seed_offset if seed_offset is not None
+                           else replica_id) * 1_000_003
+        self._dispatches = 0
 
-        self._prefill = jax.jit(
-            lambda p, toks, pos: prefill(p, toks, pos, cfg, max_len=max_len))
-        self._decode = jax.jit(
-            lambda p, caches, toks, pos: decode_step(p, caches, toks, pos, cfg))
+        temp = temperature
+
+        def _sample(logits, seed):
+            if temp <= 0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            key = jax.random.PRNGKey(seed)
+            return jax.random.categorical(key, logits / temp).astype(jnp.int32)
+
+        def _prefill_step(p, toks, pos, seed):
+            logits, caches = prefill(p, toks, pos, cfg, max_len=max_len)
+            return _sample(logits, seed), caches
+
+        def _decode_tick(p, caches, toks, pos, active, seed):
+            logits, new_caches = decode_step(p, caches, toks, pos, cfg)
+            sampled = _sample(logits, seed)
+            # masked decode: inactive slots keep their last token so stale
+            # rows never feed garbage back into the next step
+            return jnp.where(active, sampled, toks), new_caches
+
+        self._prefill = jax.jit(_prefill_step)
+        self._step = jax.jit(_decode_tick)
 
     # ------------------------------------------------------------- client
     def submit(self, req: Request) -> None:
         self.scheduler.submit(req)
 
     # ------------------------------------------------------------- engine
+    def _next_seed(self) -> jnp.ndarray:
+        self._dispatches += 1
+        return jnp.int32(self._seed_base + self._dispatches)
+
+    def _to_host(self, arr) -> np.ndarray:
+        """THE device→host sync point; everything host-side reads through
+        here so tests/benchmarks can assert the one-transfer-per-tick rule."""
+        self.stats.host_syncs += 1
+        return np.asarray(arr)
+
+    @staticmethod
+    def _norm_prompt(prompt) -> np.ndarray:
+        """(S,) tokens or (S,d) embeds; squeeze a legacy leading batch dim."""
+        p = np.asarray(prompt)
+        if p.ndim >= 2 and p.shape[0] == 1:
+            p = p[0]
+        if np.issubdtype(p.dtype, np.integer):
+            p = p.astype(np.int32)
+        return p
+
     def _admit(self) -> None:
         free = self.cm.n_slots - self.cm.n_active
-        for req in self.scheduler.admit(self.replica_id, free):
-            slot = self.cm.acquire(req.request_id)
-            assert slot is not None
-            prompt = jnp.asarray(req.prompt)
-            if prompt.ndim == 1:
-                prompt = prompt[None, :]
-            S = prompt.shape[1]
-            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (1, S))
-            logits, one_caches = self._prefill(self.params, prompt, pos)
-            self.cm.insert_prefill(slot, one_caches, S)
-            tok = self._sample(logits)
-            req.slot = slot
-            req.tokens.append(int(tok[0]))
-            req.first_token_s = time.monotonic()
-            self.stats.ttft_s.append(req.first_token_s - req.arrived_s)
-            self.stats.prefills += 1
-            self.stats.tokens_out += 1
-            self.live[slot] = req
-            self._last_tokens = self._last_tokens.at[slot].set(tok[0])
+        reqs = self.scheduler.admit(self.replica_id, free)
+        if not reqs:
+            return
+        # Batched multi-request prefill: batch CONTIGUOUS same-shape runs
+        # (equal-length bucketing — no padding, so ring caches and SSM state
+        # stay exact), one jitted prefill and ONE host pull per run.
+        # Contiguity (not a shape→list dict) preserves admission order, so
+        # a FIFO session's turns can never be prefilled out of order.
+        groups: list[tuple[tuple, list[tuple[Request, np.ndarray]]]] = []
+        for req in reqs:
+            p = self._norm_prompt(req.prompt)
+            if groups and groups[-1][0] == p.shape:
+                groups[-1][1].append((req, p))
+            else:
+                groups.append((p.shape, [(req, p)]))
+        for shape, group in groups:
+            prompts = jnp.asarray(np.stack([p for _, p in group]))
+            S = shape[0]
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                   (len(group), S))
+            toks, group_caches = self._prefill(self.params, prompts, pos,
+                                               self._next_seed())
+            host_toks = self._to_host(toks)            # one sync per group
+            self.stats.prefill_batches += 1
+            now = time.monotonic()
+            for row, (req, _) in enumerate(group):
+                slot = self.cm.acquire(req.request_id)
+                assert slot is not None
+                self.cm.insert_prefill(slot, group_caches, S, row)
+                tok = int(host_toks[row])
+                req.slot = slot
+                req.tokens.append(tok)
+                req.first_token_s = now
+                self.stats.ttft_s.append(now - req.arrived_s)
+                self.stats.prefills += 1
+                self.stats.tokens_out += 1
+                self._last_tokens = self._last_tokens.at[slot].set(tok)
+                if len(req.tokens) >= req.max_new_tokens:
+                    self.cm.release(slot)              # done at first token
+                    self._complete(req)
+                else:
+                    self.live[slot] = req
 
-    def _sample(self, logits) -> jnp.ndarray:
-        if self.temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        key = jax.random.PRNGKey(self.stats.ticks)
-        return jax.random.categorical(key, logits / self.temperature).astype(jnp.int32)
+    def _complete(self, req: Request) -> None:
+        req.done_s = time.monotonic()
+        if self.on_complete is not None:
+            self.on_complete(req)
 
     def tick(self) -> int:
         """One engine step: admit prefills, decode all active slots."""
@@ -100,26 +180,28 @@ class ServeEngine:
             return 0
         t0 = time.monotonic()
         positions = self.cm.positions()[:, None]               # (B,1)
-        toks = self._last_tokens
-        logits, self.cm.caches = self._decode(self.params, self.cm.caches,
-                                              toks, positions)
-        new_toks = self._sample(logits)
+        active = self.cm.active_mask()
+        new_toks, self.cm.caches = self._step(
+            self.params, self.cm.caches, self._last_tokens, positions,
+            active, self._next_seed())
         self._last_tokens = new_toks
+        host_toks = self._to_host(new_toks)       # the ONE sync of this tick
         self.cm.advance()
         dt = time.monotonic() - t0
         done = []
         n_emitted = 0
         for slot, req in list(self.live.items()):
-            req.tokens.append(int(new_toks[slot]))
+            req.tokens.append(int(host_toks[slot]))
             n_emitted += 1
             self.stats.tpot_s.append(dt)
             if len(req.tokens) >= req.max_new_tokens:
-                req.done_s = time.monotonic()
                 done.append(slot)
         for slot in done:
+            req = self.live.pop(slot)
             self.cm.release(slot)
-            del self.live[slot]
+            self._complete(req)
         self.stats.ticks += 1
+        self.stats.decode_ticks += 1
         self.stats.tokens_out += n_emitted
         return n_emitted
 

@@ -18,15 +18,26 @@ from repro.models import init_decode_caches
 from repro.models.config import ModelConfig
 
 
-def _splice_slot(global_caches, one_caches, slot: int):
-    """Write a B=1 cache tree into batch row `slot` of the global tree.
+def _splice_slot(global_caches, src_caches, slot, row):
+    """Write row ``row`` of a B=k cache tree into batch row ``slot`` of the
+    global tree (device-side; no host copies).
+
+    ``slot``/``row`` are traced operands (not static), so every
+    (slot, row, k) splice for a given source batch size shares one compiled
+    program instead of compiling per index pair.
 
     Cache leaves are stacked (R, B, ...): batch is axis 1 for array leaves
     of rank>=2; mamba 'ssm'/'conv' leaves follow the same convention.
     """
     def splice(g, o):
-        return jax.lax.dynamic_update_slice_in_dim(g, o.astype(g.dtype), slot, axis=1)
-    return jax.tree.map(splice, global_caches, one_caches)
+        one = jax.lax.dynamic_slice_in_dim(o, row, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(g, one.astype(g.dtype), slot, axis=1)
+    return jax.tree.map(splice, global_caches, src_caches)
+
+
+# Jitted once at module scope: every CacheManager (hence every cluster
+# replica) shares one compilation per (cache structure, source batch) shape.
+_splice_jit = jax.jit(_splice_slot)
 
 
 @dataclass
@@ -41,7 +52,7 @@ class CacheManager:
         self.cfg, self.n_slots, self.max_len = cfg, n_slots, max_len
         self.caches = init_decode_caches(cfg, n_slots, max_len)
         self.slots = [SlotState() for _ in range(n_slots)]
-        self._splice = jax.jit(_splice_slot, static_argnums=(2,))
+        self._splice = _splice_jit
 
     def acquire(self, request_id: str) -> int | None:
         for i, s in enumerate(self.slots):
@@ -53,8 +64,12 @@ class CacheManager:
     def release(self, slot: int) -> None:
         self.slots[slot] = SlotState()
 
-    def insert_prefill(self, slot: int, one_caches, prompt_len: int) -> None:
-        self.caches = self._splice(self.caches, one_caches, slot)
+    def insert_prefill(self, slot: int, src_caches, prompt_len: int,
+                       row: int = 0) -> None:
+        """Splice row ``row`` of a (possibly batched) prefill cache tree into
+        ``slot``; batched admission splices one row per admitted request."""
+        self.caches = self._splice(self.caches, src_caches,
+                                   jnp.int32(slot), jnp.int32(row))
         self.slots[slot].pos = prompt_len
 
     def active_mask(self) -> jnp.ndarray:

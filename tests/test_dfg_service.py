@@ -20,6 +20,31 @@ def test_dfg_json_roundtrip():
     assert dfg2.edges == [("a", "b")]
 
 
+def test_topo_order_deterministic_across_insertion_orders():
+    """Equal-indegree vertices must come out in a stable (lexicographic)
+    order no matter how the DFG was assembled."""
+    import itertools
+    import random
+
+    names = ["d", "b", "a", "c", "e"]
+    edges = [("a", "d"), ("b", "d"), ("c", "e")]  # {a,b,c} then {d,e}
+    orders = []
+    for seed in range(6):
+        rng = random.Random(seed)
+        vs = names[:]
+        es = edges[:]
+        rng.shuffle(vs)
+        rng.shuffle(es)
+        dfg = DFG(name="t")
+        for n in vs:
+            dfg.add_vertex(Vertex(n, f"/t/{n}"))
+        for s, d in es:
+            dfg.add_edge(s, d)
+        orders.append([v.name for v in dfg.topo_order()])
+    assert all(o == orders[0] for o in orders)
+    assert orders[0] == ["a", "b", "c", "d", "e"]
+
+
 def test_dfg_cycle_rejected():
     dfg = DFG(name="bad")
     dfg.add_vertex(Vertex("a", "/x/a"))

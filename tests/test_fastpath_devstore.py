@@ -39,6 +39,46 @@ def test_fastpath_pipeline_groups_collocated_stages():
                                rtol=1e-6)
 
 
+def test_fastpath_pipeline_donates_intermediate_groups(monkeypatch):
+    """Regression: build() must keep the zero-copy donation discipline for
+    every group after the one consuming the caller's input (no extra buffer
+    per inter-group handoff)."""
+    from repro.core import fastpath as fp
+
+    seen = []
+    real = fp.fuse_stages
+
+    def spy(stages, *, donate=True):
+        seen.append(donate)
+        return real(stages, donate=donate)
+
+    monkeypatch.setattr(fp, "fuse_stages", spy)
+    # three placement groups: None, sharded, None
+    dev = jax.devices()[0]
+    place = jax.sharding.SingleDeviceSharding(dev)
+    stages = [
+        Stage("a", lambda x: x * 2.0),
+        Stage("b", lambda x: x + 1.0),
+        Stage("c", lambda x: x - 3.0, out_sharding=place),
+        Stage("d", lambda x: jnp.tanh(x)),
+    ]
+    run = fp.FastPathPipeline(stages).build()
+    assert seen == [False, True, True]
+    x = jnp.arange(8.0)
+    out = run(x)
+    np.testing.assert_allclose(out, jnp.tanh(jnp.arange(8.0) * 2.0 + 1.0 - 3.0),
+                               rtol=1e-6)
+    # the caller's input was NOT donated and is still readable
+    np.testing.assert_allclose(np.asarray(x), np.arange(8.0))
+
+    seen.clear()
+    run2 = fp.FastPathPipeline(stages).build(donate_input=True)
+    assert seen == [True, True, True]
+    np.testing.assert_allclose(run2(jnp.arange(8.0)),
+                               jnp.tanh(jnp.arange(8.0) * 2.0 + 1.0 - 3.0),
+                               rtol=1e-6)
+
+
 def test_fused_program_is_single_dispatch():
     """Fusion compiles the chain into one executable (the DLL-lambda rung)."""
     fused = fuse_stages(_stages(), donate=False)

@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import ARCH_IDS, SHAPES, get_config
 from repro.core.pools import DispatchPolicy

@@ -19,7 +19,7 @@ def main() -> None:
                     help="substring filter on benchmark name")
     args = ap.parse_args()
 
-    from . import fastpath, kv_store, pipelines, roofline
+    from . import fastpath, kv_store, pipelines, roofline, serve
 
     benches = [
         ("table1_kv_latency", kv_store.bench_kv_latency),
@@ -31,6 +31,7 @@ def main() -> None:
         ("fig10_smart_farming", pipelines.bench_farming),
         ("fig11_collision_detection", pipelines.bench_collision),
         ("serve_cluster_ttft_tpot", pipelines.bench_serve_cluster),
+        ("serve_prefix_reuse", serve.bench_serve_prefix_reuse),
         ("roofline_table", lambda out: roofline.table(out)),
     ]
 

@@ -27,17 +27,23 @@ def main() -> None:
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
 
-    # ---- FIFO: three chat sessions, four turns each, pinned per replica
+    # ---- FIFO: three chat sessions, four turns each, pinned per replica.
+    # Each turn's prompt extends the session's full history, so the replica's
+    # prefix trie (paged KV) lets warm turns skip the cached prefix blocks.
     with ServeCluster(cfg, params, n_replicas=2, n_slots=4, max_len=64,
                       policy=DispatchPolicy.FIFO) as cluster:
         sessions, turns = ["alice", "bob", "carol"], 4
+        history = {s: rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+                   for s in sessions}
         for t in range(turns):
             for s in sessions:
-                prompt = rng.integers(0, cfg.vocab_size,
-                                      (int(rng.integers(4, 12)),))
-                cluster.submit(s, f"{s}-t{t}", prompt.astype(np.int32),
-                               max_new_tokens=6)
-        cluster.run_until_drained()
+                cluster.submit(s, f"{s}-t{t}", history[s], max_new_tokens=6)
+            cluster.run_until_drained()
+            for s in sessions:
+                reply = cluster.result(f"{s}-t{t}")
+                new = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+                history[s] = np.concatenate(
+                    [history[s], reply.astype(np.int32), new])
         st = cluster.stats()
         print(f"[FIFO] {st['requests']} requests over "
               f"{st['n_replicas']} replicas "
@@ -48,6 +54,10 @@ def main() -> None:
             print(f"  session {s}: replica {sorted(replicas)}, "
                   f"last turn → {toks.tolist()}")
             assert len(replicas) == 1, "FIFO must pin a session to one replica"
+        print(f"       prefix reuse: {st['prefix_hit_tokens']} of "
+              f"{st['prompt_tokens']} prompt tokens served from cached "
+              f"blocks ({st['prefix_hits']} warm turns)")
+        assert st["prefix_hit_tokens"] > 0, "warm turns must hit the trie"
         assert st["host_syncs"] == st["decode_ticks"] + st["prefill_batches"]
 
     # ---- ROUND_ROBIN: independent requests, load spread evenly

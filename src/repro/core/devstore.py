@@ -9,6 +9,10 @@ Versioning is functional: a put installs a new array as the latest version
 and retains up to ``keep_versions`` predecessors (the volatile pools of the
 paper keep only the latest; persistent pools keep the chain — for arrays the
 chain also backs time-travel debugging and checkpoint export).
+
+Values may be single arrays or pytrees of arrays (e.g. a serving replica's
+whole paged-KV block pool): placement, the zero-copy donate fast path, and
+byte accounting are all tree-aware.
 """
 from __future__ import annotations
 
@@ -31,6 +35,30 @@ class _DevEntry:
     versions: OrderedDict[int, jax.Array] = field(default_factory=OrderedDict)
     timestamps: dict[int, int] = field(default_factory=dict)
     latest: int = -1
+
+
+def _tree_nbytes(value: Any) -> int:
+    return sum(int(getattr(leaf, "nbytes", 0))
+               for leaf in jax.tree.leaves(value))
+
+
+def _tree_placed(value: Any, dst: NamedSharding) -> bool:
+    """True iff every leaf is already a device array resident where ``dst``
+    would put it (exact sharding match, or same single-device placement)."""
+    leaves = jax.tree.leaves(value)
+    if not leaves:
+        return False
+    single = len(dst.device_set) == 1
+    for leaf in leaves:
+        if not isinstance(leaf, jax.Array):
+            return False
+        if leaf.sharding == dst:
+            continue
+        # the device-set fallback is only sound when one device is involved
+        # (layouts cannot differ there); multi-device needs the exact match
+        if not (single and set(leaf.devices()) == set(dst.device_set)):
+            return False
+    return True
 
 
 class DeviceStore:
@@ -62,7 +90,7 @@ class DeviceStore:
         if spec is None:
             raise KeyError(f"no device pool owns {key!r}")
         dst = self.sharding_for(key)
-        if donate and isinstance(value, jax.Array) and value.sharding == dst:
+        if donate and _tree_placed(value, dst):
             arr = value
         else:
             arr = jax.device_put(value, dst)
@@ -92,7 +120,7 @@ class DeviceStore:
             cand = [v for v in e.versions if v <= version]
             arr = e.versions[max(cand)] if cand else None
         if arr is not None:
-            self.lru.put(key, arr, int(arr.nbytes) if hasattr(arr, "nbytes") else 0)
+            self.lru.put(key, arr, _tree_nbytes(arr))
         return arr
 
     def get_time(self, key: str, ts_ns: int) -> jax.Array | None:
@@ -113,7 +141,7 @@ class DeviceStore:
         total = 0
         for e in self._entries.values():
             for arr in e.versions.values():
-                total += int(getattr(arr, "nbytes", 0))
+                total += _tree_nbytes(arr)
         return total
 
     # -- export for checkpointing ------------------------------------------------
@@ -124,5 +152,5 @@ class DeviceStore:
             if key.startswith(prefix):
                 arr = self.get(key)
                 if arr is not None:
-                    out[key] = np.asarray(arr)
+                    out[key] = jax.tree.map(np.asarray, arr)
         return out

@@ -34,6 +34,12 @@ class LambdaHandle:
     prefix: str
     fn: UpcallFn
     dispatch: DispatchPolicy = DispatchPolicy.ROUND_ROBIN
+    # FIFO queue pick hash; None = crc32 over the full key.  Mirrors the
+    # store-level trigger-put member pick: pools with an affinity hash (e.g.
+    # ``affinity_shard_hash`` over a session prefix) can group related keys
+    # onto ONE upcall queue even when the worker runs several, instead of
+    # only same-key objects sharing a queue.
+    queue_hash: Callable[[str], int] | None = None
 
 
 @dataclass
@@ -119,7 +125,8 @@ class Dispatcher:
         for handle in self._trie.match(obj.key):
             ev = UpcallEvent(obj=obj, handle=handle)
             if handle.dispatch is DispatchPolicy.FIFO:
-                qi = zlib.crc32(obj.key.encode())
+                qi = (handle.queue_hash(obj.key) if handle.queue_hash
+                      else zlib.crc32(obj.key.encode()))
             else:
                 with self._lock:
                     qi = self._rr

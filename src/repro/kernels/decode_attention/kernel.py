@@ -18,6 +18,17 @@ are streamed alongside K/V and masking is positional, so the same kernel
 serves full caches, sliding-window rings, and partially-filled prefixes.
 
 Grid: (B, K, num_kv_blocks); blocks: q (G,D), k/v (bk,D), pos (bk,).
+
+Paged variant (``paged_decode_attention_fwd``): K/V live in a global block
+pool (num_blocks, block_size, K, D) shared by every request; each request
+brings a block table (its logical→physical block mapping).  The table and the
+query positions are scalar-prefetch operands, so the BlockSpec index map
+resolves ``table[b, j]`` BEFORE the kernel body runs and the DMA engine
+streams exactly the blocks the request owns — no host gather, no densified
+copy of the cache.  Slot positions are implicit (logical block j covers
+absolute positions [j·bs, (j+1)·bs)), so causal masking doubles as validity
+masking: padded table entries (clamped to block 0) always sit beyond the
+query position.
 """
 from __future__ import annotations
 
@@ -117,4 +128,98 @@ def decode_attention_fwd(q, k_cache, v_cache, q_pos, cache_pos, *,
         ],
         interpret=interpret,
     )(q_pos, qh, kt, vt, pos2)
+    return out.reshape(B, H, D)
+
+
+def _paged_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float,
+                  softcap: float | None, window: int | None,
+                  block_size: int, num_logical_blocks: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)                        # (G, D)
+    k = k_ref[...].astype(jnp.float32)                        # (bs, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    # logical block j covers absolute positions [j*bs, (j+1)*bs): masking is
+    # positional, so clamped pad blocks (positions beyond qp) vanish here.
+    kpos = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)                        # (1, bs)
+    qp = qpos_ref[b]
+    mask = kpos <= qp
+    if window is not None:
+        mask &= (qp - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)                           # (G, bs) via bcast
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[...].astype(jnp.float32)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == num_logical_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, q_pos, *,
+                               scale: float, softcap: float | None,
+                               window: int | None, interpret: bool = False):
+    """q: (B,H,D); pools (N,bs,K,D); block_tables (B,nb) int32, -1 = unused;
+    q_pos (B,) absolute position of the query token."""
+    B, H, D = q.shape
+    N, bs, K, _ = k_pool.shape
+    G = H // K
+    nb = block_tables.shape[1]
+    # -1 pads clamp to block 0 (the engine's reserved null block); their
+    # implicit positions j*bs+p exceed q_pos, so the causal mask kills them.
+    bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
+
+    qh = q.reshape(B, K, G, D)
+    kt = k_pool.transpose(0, 2, 1, 3)                         # (N,K,bs,D)
+    vt = v_pool.transpose(0, 2, 1, 3)
+
+    kern = functools.partial(_paged_kernel, scale=scale, softcap=softcap,
+                             window=window, block_size=bs,
+                             num_logical_blocks=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                                # bt, q_pos
+        grid=(B, K, nb),
+        in_specs=[
+            pl.BlockSpec((None, None, G, D),
+                         lambda b, h, j, bt, qp: (b, h, 0, 0)),       # q
+            pl.BlockSpec((None, None, bs, D),
+                         lambda b, h, j, bt, qp: (bt[b, j], h, 0, 0)),  # k
+            pl.BlockSpec((None, None, bs, D),
+                         lambda b, h, j, bt, qp: (bt[b, j], h, 0, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((None, None, G, D),
+                               lambda b, h, j, bt, qp: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        interpret=interpret,
+    )(bt, q_pos.astype(jnp.int32), qh, kt, vt)
     return out.reshape(B, H, D)

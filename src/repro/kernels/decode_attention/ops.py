@@ -1,12 +1,12 @@
-"""Jit'd public wrapper for the decode-attention kernel."""
+"""Jit'd public wrappers for the decode-attention kernels (dense + paged)."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
-from .kernel import decode_attention_fwd
-from .ref import decode_attention_ref
+from .kernel import decode_attention_fwd, paged_decode_attention_fwd
+from .ref import decode_attention_ref, paged_decode_attention_ref
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
@@ -23,4 +23,25 @@ def decode_attention(q, k_cache, v_cache, q_pos, cache_pos, *,
                                 block_k=block_k, interpret=interpret)
 
 
-__all__ = ["decode_attention", "decode_attention_ref"]
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos, *,
+                           window: int | None = None,
+                           softcap: float | None = None,
+                           scale: float | None = None,
+                           interpret: bool = False):
+    """One-token decode attention over a paged KV pool.
+
+    q: (B,H,D); pools (num_blocks, block_size, K, D); block_tables (B,nb)
+    int32 physical block ids (-1 = unused); q_pos (B,) absolute positions.
+    The kernel streams each request's blocks straight out of the shared pool
+    via scalar-prefetched table lookups (no densifying gather)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    return paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, q_pos,
+                                      scale=scale, softcap=softcap,
+                                      window=window, interpret=interpret)
+
+
+__all__ = ["decode_attention", "decode_attention_ref",
+           "paged_decode_attention", "paged_decode_attention_ref"]

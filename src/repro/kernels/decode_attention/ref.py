@@ -30,3 +30,40 @@ def decode_attention_ref(q, k_cache, v_cache, q_pos, cache_pos, *,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+def densify_pool(k_pool, v_pool, block_tables):
+    """Gather a paged pool into dense per-request caches.
+
+    pools (N,bs,K,D); block_tables (B,nb) int32, -1 = unused (clamped to
+    block 0).  Returns (k, v, cache_pos) with caches (B, nb*bs, K, D) and
+    cache_pos (B, nb*bs) holding each slot's implicit absolute position
+    (logical block j covers [j*bs, (j+1)*bs)), -1 for pad slots.
+
+    THE canonical layout rule: the paged XLA fallback in models/attention.py
+    and every parity test densify through here, so the -1-pad convention
+    lives in one place."""
+    N, bs, K, D = k_pool.shape
+    B, nb = block_tables.shape
+    bt = jnp.maximum(block_tables, 0)
+    k = k_pool[bt].reshape(B, nb * bs, K, D)
+    v = v_pool[bt].reshape(B, nb * bs, K, D)
+    flat = jnp.arange(nb * bs, dtype=jnp.int32)[None, :]
+    valid = jnp.repeat(block_tables >= 0, bs, axis=1)
+    cache_pos = jnp.where(valid, flat, -1)
+    return k, v, cache_pos
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, q_pos, *,
+                               window: int | None = None,
+                               softcap: float | None = None,
+                               scale: float | None = None):
+    """Oracle for the paged kernel: densify the block pool through the block
+    tables, then run the dense oracle.
+
+    q: (B,H,D); pools (N,bs,K,D); block_tables (B,nb) int32 (-1 = unused);
+    q_pos (B,).  Logical block j of request b holds absolute positions
+    [j*bs, (j+1)*bs)."""
+    k, v, cache_pos = densify_pool(k_pool, v_pool, block_tables)
+    return decode_attention_ref(q, k, v, q_pos, cache_pos, window=window,
+                                softcap=softcap, scale=scale)

@@ -157,7 +157,50 @@ def _cache_write(cache: dict, k_new, v_new, positions) -> dict:
     }
 
 
+# ------------------------------------------------------------------ paging
+def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int) -> dict:
+    """One layer's share of the global KV block pool.
+
+    Unlike the dense per-slot cache there is no batch axis and no "pos" leaf:
+    blocks are a flat pool shared by every request, and the absolute position
+    of slot p in a request's logical block j is implicit (j·bs + p), fixed by
+    the request's block table.  Local-window layers use the same full-length
+    pool and mask positionally (a paged ring would forbid block sharing)."""
+    K, D = cfg.n_kv_heads, cfg.head_dim
+    dt = dtype_of(cfg)
+    return {"k": jnp.zeros((num_blocks, block_size, K, D), dtype=dt),
+            "v": jnp.zeros((num_blocks, block_size, K, D), dtype=dt)}
+
+
+def _paged_write(pool: dict, k_new, v_new, positions, block_table) -> dict:
+    """Scatter T new K/V entries into pool blocks via the block table.
+
+    positions: (B,T) absolute; block_table: (B,nb) physical ids, -1 unused.
+    Pad entries clamp to block 0 — the allocator's reserved null block — so
+    masked rows (inactive decode slots) scribble harmlessly there."""
+    bs = pool["k"].shape[1]
+    blk = jnp.take_along_axis(block_table, positions // bs, axis=1)
+    blk = jnp.maximum(blk, 0)                                # (B, T)
+    slot = positions % bs
+    return {"k": pool["k"].at[blk, slot].set(k_new.astype(pool["k"].dtype)),
+            "v": pool["v"].at[blk, slot].set(v_new.astype(pool["v"].dtype))}
+
+
 # ------------------------------------------------------------------- apply
+def _qkv(params: dict, x: jax.Array, positions: jax.Array, *,
+         cfg: ModelConfig, spec: LayerSpec):
+    """Shared projection + qk-norm + RoPE front end of every attention path."""
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = rope(q, positions, spec.rope_theta)
+    k = rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
 def attention(params: dict, x: jax.Array, positions: jax.Array, *,
               cfg: ModelConfig, spec: LayerSpec,
               cache: dict | None = None) -> tuple[jax.Array, dict | None]:
@@ -168,16 +211,8 @@ def attention(params: dict, x: jax.Array, positions: jax.Array, *,
     (decode: T=1; prefill-into-cache: T=S).
     """
     B, T, _ = x.shape
-    H, K, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
-    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
-    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
-    if cfg.qk_norm:
-        q = rmsnorm(params["q_norm"], q)
-        k = rmsnorm(params["k_norm"], k)
-    q = rope(q, positions, spec.rope_theta)
-    k = rope(k, positions, spec.rope_theta)
-    scale = D ** -0.5
+    q, k, v = _qkv(params, x, positions, cfg=cfg, spec=spec)
+    scale = cfg.head_dim ** -0.5
     cap = cfg.attn_logit_softcap
 
     if cache is not None:
@@ -206,17 +241,45 @@ def prefill_cache(params: dict, x: jax.Array, positions: jax.Array, *,
     """Run attention over the prompt AND build the layer's decode cache."""
     B, S, _ = x.shape
     cache = init_cache(cfg, spec, B, max_len)
-    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])
-    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])
-    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
-    if cfg.qk_norm:
-        q = rmsnorm(params["q_norm"], q)
-        k = rmsnorm(params["k_norm"], k)
-    q = rope(q, positions, spec.rope_theta)
-    k = rope(k, positions, spec.rope_theta)
+    q, k, v = _qkv(params, x, positions, cfg=cfg, spec=spec)
     out = _attend_chunked(q, k, v, positions, positions,
                           window=spec.window, cap=cfg.attn_logit_softcap,
                           scale=cfg.head_dim ** -0.5, q_chunk=cfg.q_chunk)
     cache = _cache_write(cache, k, v, positions)
     y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
     return y, cache
+
+
+def paged_attention(params: dict, x: jax.Array, positions: jax.Array, *,
+                    cfg: ModelConfig, spec: LayerSpec, pool: dict,
+                    block_table: jax.Array) -> tuple[jax.Array, dict]:
+    """Attention against the paged KV pool: write x's K/V into this request's
+    blocks, then attend over everything the block table maps — which includes
+    any prefix blocks shared with other requests.
+
+    Serves both roles of the paged fast path:
+    - suffix prefill (T = S - reused_len): tokens enter at positions starting
+      past the reused prefix and attend to the cached prefix KV for free;
+    - decode (T = 1): the Pallas block-gather kernel when cfg.attn_backend is
+      pallas/pallas_interpret, else an XLA gather + masked softmax.
+    """
+    B, T, _ = x.shape
+    K, D = cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _qkv(params, x, positions, cfg=cfg, spec=spec)
+    scale = D ** -0.5
+    cap = cfg.attn_logit_softcap
+    pool = _paged_write(pool, k, v, positions, block_table)
+    backend = cfg.attn_backend
+    if T == 1 and backend in ("pallas", "pallas_interpret"):
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.paged_decode_attention(
+            q[:, 0], pool["k"], pool["v"], block_table, positions[:, 0],
+            window=spec.window, softcap=cap, scale=scale,
+            interpret=(backend == "pallas_interpret"))[:, None]
+    else:
+        from repro.kernels.decode_attention.ref import densify_pool
+        kd, vd, kpos = densify_pool(pool["k"], pool["v"], block_table)
+        out = _attend(q, kd, vd, positions, kpos, window=spec.window,
+                      cap=cap, scale=scale)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+    return y, pool

@@ -158,9 +158,18 @@ def _barrier(y, cfg: ModelConfig):
 
 
 def _apply_block(block_params, x, positions, *, cfg: ModelConfig,
-                 spec: LayerSpec, cache, shared_params, embeds0, mode: str):
-    """One layer. Returns (x, new_cache, aux)."""
+                 spec: LayerSpec, cache, shared_params, embeds0, mode: str,
+                 block_table=None):
+    """One layer. Returns (x, new_cache, aux).
+
+    With ``block_table`` set, ``cache`` is the layer's slice of the paged KV
+    pool and attention goes through the paged path (suffix prefill or paged
+    decode); only pure-attention layer kinds support it (see supports_paged).
+    """
     aux = jnp.zeros((), jnp.float32)
+    if block_table is not None and spec.kind not in ("attn_mlp", "attn_moe"):
+        raise NotImplementedError(
+            f"paged KV cache does not support layer kind {spec.kind!r}")
     if spec.kind == "mamba":
         h = rmsnorm(block_params["norm"], x)
         y, new_cache = mamba_mod.mamba_block(block_params["mamba"], h, cfg=cfg,
@@ -185,7 +194,11 @@ def _apply_block(block_params, x, positions, *, cfg: ModelConfig,
 
     # attn_mlp / attn_moe
     h = rmsnorm(block_params["norm_attn"], x)
-    if mode == "prefill":
+    if block_table is not None:
+        y, new_cache = attn_mod.paged_attention(
+            block_params["attn"], h, positions, cfg=cfg, spec=spec,
+            pool=cache, block_table=block_table)
+    elif mode == "prefill":
         y, new_cache = attn_mod.prefill_cache(
             block_params["attn"], h, positions, cfg=cfg, spec=spec,
             max_len=cache["pos"].shape[1])
@@ -206,11 +219,14 @@ def _apply_block(block_params, x, positions, *, cfg: ModelConfig,
 
 
 def _run_segment(seg_params, x, positions, *, cfg: ModelConfig, seg: Segment,
-                 caches, shared_params, embeds0, mode: str):
+                 caches, shared_params, embeds0, mode: str, block_table=None):
     """Scan over the segment's `repeat` axis.
 
     caches: tuple per pattern position of stacked (R,...) cache trees, or
-    None (train/score).  Returns (x, aux_sum, new_caches|None).
+    None (train/score).  block_table (paged serving) is one (B,nb) mapping
+    shared by every layer — each layer owns its own pool slice but the
+    logical→physical block mapping is per-request, not per-layer.
+    Returns (x, aux_sum, new_caches|None).
     """
     with_cache = caches is not None
 
@@ -223,7 +239,8 @@ def _run_segment(seg_params, x, positions, *, cfg: ModelConfig, seg: Segment,
             x, nc, aux_i = _apply_block(layer_params[i], x, positions, cfg=cfg,
                                         spec=spec, cache=c_i,
                                         shared_params=shared_params,
-                                        embeds0=embeds0, mode=mode)
+                                        embeds0=embeds0, mode=mode,
+                                        block_table=block_table)
             aux = aux + aux_i
             new_caches.append(nc if with_cache else jnp.zeros((), jnp.int8))
         return (x, aux), tuple(new_caches)
@@ -325,6 +342,74 @@ def prefill(params, inputs, positions, cfg: ModelConfig, *, max_len: int):
         new_caches.append(nc)
     logits = _head(params, x[:, -1:, :], cfg)
     return logits[:, 0, :], tuple(new_caches)
+
+
+# ===================================================================== paged
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Paged KV serving needs token inputs (the prefix trie is keyed by
+    token blocks) and pure-attention layers (SSM/conv state is O(1) per
+    request and carries the whole history — it cannot be block-shared)."""
+    return cfg.input_mode == "tokens" and all(
+        s.kind in ("attn_mlp", "attn_moe")
+        for seg in cfg.layout() for s in seg.pattern)
+
+
+def init_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int):
+    """Global KV block pool, same tree layout as init_decode_caches but with
+    (num_blocks, block_size) replacing the (batch, seq) plane."""
+    pools = []
+    for seg in cfg.layout():
+        pos_pools = []
+        for spec in seg.pattern:
+            one = attn_mod.init_paged_pool(cfg, num_blocks, block_size)
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (seg.repeat,) + a.shape), one)
+            pos_pools.append(stacked)
+        pools.append(tuple(pos_pools))
+    return tuple(pools)
+
+
+def paged_prefill(params, pools, block_tables, inputs, positions,
+                  cfg: ModelConfig):
+    """Prefill a (possibly block-aligned-truncated) prompt suffix against the
+    paged pool.  inputs (B,T) are the suffix tokens, positions (B,T) their
+    absolute positions (row b starts at its reused prefix length L_b); the
+    suffix attends to the reused prefix KV through the block table without
+    recomputing it.  Returns (last-token logits, new pools)."""
+    x = _embed_inputs(params, inputs, cfg)
+    embeds0 = x
+    new_pools = []
+    for seg, seg_params, seg_pools in zip(cfg.layout(), params["segments"],
+                                          pools):
+        x, _, np_ = _run_segment(seg_params, x, positions, cfg=cfg, seg=seg,
+                                 caches=seg_pools,
+                                 shared_params=params.get("shared_attn"),
+                                 embeds0=embeds0, mode="prefill",
+                                 block_table=block_tables)
+        new_pools.append(np_)
+    logits = _head(params, x[:, -1:, :], cfg)
+    return logits[:, 0, :], tuple(new_pools)
+
+
+def paged_decode_step(params, pools, block_tables, inputs, positions,
+                      cfg: ModelConfig):
+    """One decode step over the paged pool. inputs: (B,) tokens;
+    positions (B,1).  Returns (logits (B,V), new pools)."""
+    if inputs.ndim == 1:
+        inputs = inputs[:, None]
+    x = _embed_inputs(params, inputs, cfg)
+    embeds0 = x
+    new_pools = []
+    for seg, seg_params, seg_pools in zip(cfg.layout(), params["segments"],
+                                          pools):
+        x, _, np_ = _run_segment(seg_params, x, positions, cfg=cfg, seg=seg,
+                                 caches=seg_pools,
+                                 shared_params=params.get("shared_attn"),
+                                 embeds0=embeds0, mode="decode",
+                                 block_table=block_tables)
+        new_pools.append(np_)
+    logits = _head(params, x, cfg)
+    return logits[:, 0, :], tuple(new_pools)
 
 
 def decode_step(params, caches, inputs, positions, cfg: ModelConfig):

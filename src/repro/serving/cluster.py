@@ -32,13 +32,16 @@ import threading
 import time
 from typing import Any
 
+import jax
 import numpy as np
 
+from repro.core.devstore import DeviceStore
 from repro.core.dispatcher import LambdaHandle
 from repro.core.objects import CascadeObject
 from repro.core.pools import (DispatchPolicy, Persistence, PoolSpec,
                               affinity_shard_hash)
 from repro.core.store import CascadeStore, Worker
+from repro.models import supports_paged
 from repro.models.config import ModelConfig
 
 from .engine import ServeEngine
@@ -50,35 +53,59 @@ _SESSION_DEPTH = 4
 
 
 class ServeCluster:
-    """N engine replicas as lambdas on a Cascade store (one per worker)."""
+    """N engine replicas as lambdas on a Cascade store (one per worker).
+
+    Pure-attention token models serve from paged KV by default: each replica
+    owns a block pool + prefix trie (kvcache.PagedCacheManager), and all the
+    pools live on ONE shared DeviceStore under ``/kv/replica<r>`` — FIFO
+    session affinity makes the per-replica trie pay: every turn of a session
+    lands where its prefix blocks already sit.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, n_replicas: int = 2,
                  n_slots: int = 4, max_len: int = 64,
                  policy: DispatchPolicy = DispatchPolicy.ROUND_ROBIN,
                  model_name: str | None = None,
-                 temperature: float = 0.0) -> None:
+                 temperature: float = 0.0, paged: bool | None = None,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 prefix_cache: bool = True) -> None:
         self.cfg = cfg
         self.policy = policy
         name = model_name or cfg.name
         self.req_prefix = f"/serve/{name}/req"
         self.out_prefix = f"/serve/{name}/out"
+        self.paged = supports_paged(cfg) if paged is None else paged
         # One worker per replica; a single upcall thread per worker keeps
         # FIFO sessions ordered (the dispatcher's same-queue guarantee).
         self.workers = [Worker(i, n_upcall_threads=1)
                         for i in range(n_replicas)]
         self.store = CascadeStore(self.workers)
+        session_hash = functools.partial(affinity_shard_hash,
+                                         depth=_SESSION_DEPTH)
         self.store.create_pool(PoolSpec(
             path=self.req_prefix, persistence=Persistence.TRANSIENT,
             replication=n_replicas, dispatch=policy,
-            shard_hash=functools.partial(affinity_shard_hash,
-                                         depth=_SESSION_DEPTH)))
+            shard_hash=session_hash))
         self.store.create_pool(PoolSpec(path=self.out_prefix, replication=1))
-        self.engines = [
-            ServeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
-                        temperature=temperature, scheduler=Scheduler(n_replicas=1),
-                        on_complete=self._on_complete, seed_offset=r)
-            for r in range(n_replicas)
-        ]
+        # One device store for every replica's KV block pool (keep_versions=1:
+        # decode rewrites all leaves each tick, retaining predecessors would
+        # double pool memory).
+        self.kv_store: DeviceStore | None = None
+        if self.paged:
+            self.kv_store = DeviceStore(jax.make_mesh((1, 1), ("data", "model")),
+                                        keep_versions=1)
+            self.kv_store.create_pool(PoolSpec(path="/kv"))
+        self.engines = []
+        for r in range(n_replicas):
+            kw: dict[str, Any] = dict(paged=self.paged)
+            if self.paged:
+                kw.update(block_size=block_size, num_blocks=num_blocks,
+                          prefix_cache=prefix_cache, devstore=self.kv_store,
+                          kv_key=f"/kv/replica{r}/pool")
+            self.engines.append(ServeEngine(
+                cfg, params, n_slots=n_slots, max_len=max_len,
+                temperature=temperature, scheduler=Scheduler(n_replicas=1),
+                on_complete=self._on_complete, seed_offset=r, **kw))
         # Collocated replicas run identical programs: share the jitted
         # callables so each (batch, prompt-length) bucket compiles once per
         # cluster, not once per replica.
@@ -88,7 +115,11 @@ class ServeCluster:
         for r in range(n_replicas):
             handle = LambdaHandle(
                 name=f"serve-replica-{r}", prefix=self.req_prefix,
-                fn=functools.partial(self._on_request, r), dispatch=policy)
+                fn=functools.partial(self._on_request, r), dispatch=policy,
+                # dispatcher-level mirror of the store's member pick: FIFO
+                # queue selection hashes the session prefix, not the full key
+                queue_hash=session_hash if policy is DispatchPolicy.FIFO
+                else None)
             self.store.register_lambda(handle, worker_ids=[r])
         # request_id → replica index, for introspection/tests; bounded so a
         # long-running cluster doesn't grow it without limit.
@@ -180,6 +211,12 @@ class ServeCluster:
             "host_syncs": sum(e.stats.host_syncs for e in self.engines),
             "decode_ticks": sum(e.stats.decode_ticks for e in self.engines),
             "prefill_batches": sum(e.stats.prefill_batches for e in self.engines),
+            "prompt_tokens": sum(e.stats.prompt_tokens for e in self.engines),
+            "prefill_tokens": sum(e.stats.prefill_tokens for e in self.engines),
+            "prefix_hit_tokens": sum(e.stats.prefix_hit_tokens
+                                     for e in self.engines),
+            "prefix_hits": sum(e.stats.prefix_hits for e in self.engines),
+            "blocks_in_use": sum(e.stats.blocks_in_use for e in self.engines),
             "ttft_p50_s": pct(ttft, 0.50), "ttft_p99_s": pct(ttft, 0.99),
             "tpot_p50_s": pct(tpot, 0.50), "tpot_p99_s": pct(tpot, 0.99),
         }

@@ -22,9 +22,20 @@ Fast-path discipline inside the tick:
 - **One device→host transfer per tick** — the decode step's new tokens are
   pulled once via ``np.asarray`` (``stats.host_syncs`` counts every pull;
   one per decode tick plus one per prefill group, never per slot).
+
+Paged mode (default for pure-attention token models, see
+``models.supports_paged``): KV lives in a global block pool with per-request
+block tables and a per-replica prefix cache (kvcache.PagedCacheManager).
+Admission matches each prompt against the trie of cached token blocks and
+prefills ONLY the suffix past the last matched block — the reused prefix's
+KV is attended to through the block table without being recomputed
+(``stats.prefix_hit_tokens`` counts the skipped tokens, so warm multi-turn
+sessions show strictly fewer prefill FLOPs).  Suffix-length grouping
+replaces full-prompt-shape grouping; the tick discipline above is unchanged.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -33,10 +44,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, prefill
+from repro.models import (decode_step, paged_decode_step, paged_prefill,
+                          prefill, supports_paged)
 from repro.models.config import ModelConfig
 
-from .kvcache import CacheManager
+from .kvcache import CacheManager, PagedCacheManager
 from .scheduler import Request, Scheduler
 
 
@@ -48,6 +60,11 @@ class EngineStats:
     prefill_batches: int = 0                       # jitted prefill dispatches
     decode_ticks: int = 0                          # ticks that ran a decode
     host_syncs: int = 0                            # device→host transfers
+    prompt_tokens: int = 0                         # total prompt tokens seen
+    prefill_tokens: int = 0                        # tokens actually prefilled
+    prefix_hit_tokens: int = 0                     # tokens reused from cache
+    prefix_hits: int = 0                           # requests with a hit
+    blocks_in_use: int = 0                         # gauge, sampled per tick
     ttft_s: list = field(default_factory=list)     # time to first token
     tpot_s: list = field(default_factory=list)     # time per output token
 
@@ -57,10 +74,22 @@ class ServeEngine:
                  max_len: int = 512, temperature: float = 0.0,
                  scheduler: Scheduler | None = None, replica_id: int = 0,
                  on_complete: Callable[[Request], None] | None = None,
-                 seed_offset: int | None = None) -> None:
+                 seed_offset: int | None = None, paged: bool | None = None,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 prefix_cache: bool = True, devstore=None,
+                 kv_key: str | None = None) -> None:
         self.cfg = cfg
         self.params = params
-        self.cm = CacheManager(cfg, n_slots, max_len)
+        self.paged = supports_paged(cfg) if paged is None else paged
+        if self.paged and not supports_paged(cfg):
+            raise ValueError(f"config {cfg.name} cannot use the paged cache")
+        if self.paged:
+            self.cm: Any = PagedCacheManager(
+                cfg, n_slots, max_len, block_size=block_size,
+                num_blocks=num_blocks, prefix_cache=prefix_cache,
+                devstore=devstore, kv_key=kv_key)
+        else:
+            self.cm = CacheManager(cfg, n_slots, max_len)
         self.scheduler = scheduler or Scheduler(n_replicas=1)
         self.replica_id = replica_id
         self.temperature = temperature
@@ -83,16 +112,26 @@ class ServeEngine:
             key = jax.random.PRNGKey(seed)
             return jax.random.categorical(key, logits / temp).astype(jnp.int32)
 
-        def _prefill_step(p, toks, pos, seed):
-            logits, caches = prefill(p, toks, pos, cfg, max_len=max_len)
-            return _sample(logits, seed), caches
+        if self.paged:
+            def _prefill_step(p, pools, bt, toks, pos, seed):
+                logits, pools = paged_prefill(p, pools, bt, toks, pos, cfg)
+                return _sample(logits, seed), pools
 
-        def _decode_tick(p, caches, toks, pos, active, seed):
-            logits, new_caches = decode_step(p, caches, toks, pos, cfg)
-            sampled = _sample(logits, seed)
-            # masked decode: inactive slots keep their last token so stale
-            # rows never feed garbage back into the next step
-            return jnp.where(active, sampled, toks), new_caches
+            def _decode_tick(p, pools, bt, toks, pos, active, seed):
+                logits, pools = paged_decode_step(p, pools, bt, toks, pos, cfg)
+                sampled = _sample(logits, seed)
+                return jnp.where(active, sampled, toks), pools
+        else:
+            def _prefill_step(p, toks, pos, seed):
+                logits, caches = prefill(p, toks, pos, cfg, max_len=max_len)
+                return _sample(logits, seed), caches
+
+            def _decode_tick(p, caches, toks, pos, active, seed):
+                logits, new_caches = decode_step(p, caches, toks, pos, cfg)
+                sampled = _sample(logits, seed)
+                # masked decode: inactive slots keep their last token so stale
+                # rows never feed garbage back into the next step
+                return jnp.where(active, sampled, toks), new_caches
 
         self._prefill = jax.jit(_prefill_step)
         self._step = jax.jit(_decode_tick)
@@ -122,9 +161,25 @@ class ServeEngine:
             p = p.astype(np.int32)
         return p
 
+    def _block_cost(self, req: Request) -> int:
+        """Worst-case block footprint of a request (reuse only shrinks it)."""
+        S = len(self._norm_prompt(req.prompt))
+        written_max = S + max(0, req.max_new_tokens - 1)
+        return min(self.cm.max_blocks, math.ceil(written_max / self.cm.block_size))
+
     def _admit(self) -> None:
         free = self.cm.n_slots - self.cm.n_active
-        reqs = self.scheduler.admit(self.replica_id, free)
+        if self.paged:
+            reqs = self.scheduler.admit(
+                self.replica_id, free,
+                free_blocks=self.cm.available_for_admission(),
+                block_cost=self._block_cost)
+            self._admit_paged(reqs)
+        else:
+            reqs = self.scheduler.admit(self.replica_id, free)
+            self._admit_dense(reqs)
+
+    def _admit_dense(self, reqs: list[Request]) -> None:
         if not reqs:
             return
         # Batched multi-request prefill: batch CONTIGUOUS same-shape runs
@@ -149,23 +204,78 @@ class ServeEngine:
             host_toks = self._to_host(toks)            # one sync per group
             self.stats.prefill_batches += 1
             now = time.monotonic()
-            for row, (req, _) in enumerate(group):
+            for row, (req, p) in enumerate(group):
                 slot = self.cm.acquire(req.request_id)
                 assert slot is not None
                 self.cm.insert_prefill(slot, group_caches, S, row)
-                tok = int(host_toks[row])
-                req.slot = slot
-                req.tokens.append(tok)
-                req.first_token_s = now
-                self.stats.ttft_s.append(now - req.arrived_s)
-                self.stats.prefills += 1
-                self.stats.tokens_out += 1
-                self._last_tokens = self._last_tokens.at[slot].set(tok)
-                if len(req.tokens) >= req.max_new_tokens:
-                    self.cm.release(slot)              # done at first token
-                    self._complete(req)
-                else:
-                    self.live[slot] = req
+                self.stats.prompt_tokens += S
+                self.stats.prefill_tokens += S
+                self._finish_admission(req, slot, int(host_toks[row]), now)
+
+    def _admit_paged(self, reqs: list[Request]) -> None:
+        if not reqs:
+            return
+        # Same contiguous-run batching, but grouped by SUFFIX length: rows
+        # with different prompt lengths batch together as long as the token
+        # count left after prefix reuse matches (positions are per-row).
+        groups: list[tuple[int, list[tuple[Request, np.ndarray, int]]]] = []
+        for req in reqs:
+            p = self._norm_prompt(req.prompt)
+            slot = self.cm.acquire(req.request_id)
+            assert slot is not None
+            seq = self.cm.begin(slot, p, req.max_new_tokens)
+            assert seq is not None, "admission exceeded the block budget"
+            suffix_len = len(p) - seq.reused
+            self.stats.prompt_tokens += len(p)
+            self.stats.prefill_tokens += suffix_len
+            self.stats.prefix_hit_tokens += seq.reused
+            if seq.reused:
+                self.stats.prefix_hits += 1
+            if groups and groups[-1][0] == suffix_len:
+                groups[-1][1].append((req, p, slot))
+            else:
+                groups.append((suffix_len, [(req, p, slot)]))
+        for suffix_len, group in groups:
+            rows = [slot for _, _, slot in group]
+            starts = [self.cm.slots[s].reused for s in rows]
+            prompts = jnp.asarray(np.stack(
+                [p[L:] for (_, p, _), L in zip(group, starts)]))
+            pos = jnp.asarray(np.stack(
+                [L + np.arange(suffix_len, dtype=np.int32) for L in starts]))
+            bt = jnp.asarray(self.cm.block_tables(rows))
+            toks, pools = self._prefill(self.params, self.cm.pools, bt,
+                                        prompts, pos, self._next_seed())
+            self.cm.pools = pools
+            host_toks = self._to_host(toks)            # one sync per group
+            self.stats.prefill_batches += 1
+            now = time.monotonic()
+            for row, (req, p, slot) in enumerate(group):
+                # prefill K/V for this group is committed before any LATER
+                # group reads the pool, so its blocks are safe to share now
+                self.cm.commit_prompt(slot)
+                self._finish_admission(req, slot, int(host_toks[row]), now)
+        self.cm.publish()
+
+    def _finish_admission(self, req: Request, slot: int, tok: int,
+                          now: float) -> None:
+        req.slot = slot
+        req.tokens.append(tok)
+        req.first_token_s = now
+        self.stats.ttft_s.append(now - req.arrived_s)
+        self.stats.prefills += 1
+        self.stats.tokens_out += 1
+        self._last_tokens = self._last_tokens.at[slot].set(tok)
+        if len(req.tokens) >= req.max_new_tokens:
+            self._release_slot(slot, req)              # done at first token
+            self._complete(req)
+        else:
+            self.live[slot] = req
+
+    def _release_slot(self, slot: int, req: Request) -> None:
+        if self.paged:
+            self.cm.finish(slot, req.tokens)
+        else:
+            self.cm.release(slot)
 
     def _complete(self, req: Request) -> None:
         req.done_s = time.monotonic()
@@ -181,9 +291,19 @@ class ServeEngine:
         t0 = time.monotonic()
         positions = self.cm.positions()[:, None]               # (B,1)
         active = self.cm.active_mask()
-        new_toks, self.cm.caches = self._step(
-            self.params, self.cm.caches, self._last_tokens, positions,
-            active, self._next_seed())
+        if self.paged:
+            self.cm.ensure_decode_blocks()
+            bt = jnp.asarray(self.cm.block_tables())
+            new_toks, pools = self._step(
+                self.params, self.cm.pools, bt, self._last_tokens, positions,
+                active, self._next_seed())
+            self.cm.pools = pools
+            self.cm.publish()
+            self.stats.blocks_in_use = self.cm.blocks_in_use
+        else:
+            new_toks, self.cm.caches = self._step(
+                self.params, self.cm.caches, self._last_tokens, positions,
+                active, self._next_seed())
         self._last_tokens = new_toks
         host_toks = self._to_host(new_toks)       # the ONE sync of this tick
         self.cm.advance()
@@ -198,7 +318,7 @@ class ServeEngine:
                 done.append(slot)
         for slot in done:
             req = self.live.pop(slot)
-            self.cm.release(slot)
+            self._release_slot(slot, req)
             self._complete(req)
         self.stats.ticks += 1
         self.stats.decode_ticks += 1

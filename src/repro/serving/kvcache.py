@@ -1,20 +1,49 @@
-"""KV-cache slot manager for continuous batching.
+"""KV-cache managers for continuous batching: dense slots + paged blocks.
 
-The engine owns one global cache tree (batch dim = n_slots).  Each slot is
-leased to a live request; prefill produces a single-sequence cache that is
-spliced into the slot (a device-side dynamic_update_slice per leaf — no host
-copies, per the fast-path discipline).  Slot position counters live on host;
-cache tensors never leave the device.
+Dense manager (``CacheManager``): the engine owns one global cache tree
+(batch dim = n_slots).  Each slot is leased to a live request; prefill
+produces a single-sequence cache that is spliced into the slot (a device-side
+dynamic_update_slice per leaf — no host copies, per the fast-path
+discipline).  Slot position counters live on host; cache tensors never leave
+the device.  This remains the path for architectures whose decode state
+cannot be paged (SSM/conv state carries the whole history in O(1) per
+request) and for embeds-mode frontends.
+
+KV paging & prefix cache (``PagedCacheManager``)
+------------------------------------------------
+For pure-attention models the per-slot dense tree is replaced by a **global
+block pool**: every layer holds (num_blocks, block_size, K, D) K/V tensors,
+and a request's cache is a *block table* — the list of physical blocks that
+back its logical positions [0, ctx).  The pool is a Cascade object: it is
+``put`` on a ``core.devstore.DeviceStore`` under the engine's ``/kv`` pool
+key after every mutation (a reference install, never a copy), so KV state
+gets the same placement/versioning treatment as any other device object.
+
+On top of the pool sits a **per-replica prefix cache**: a trie over prompt
+token *blocks* (``core.trie.PathTrie`` — the dispatcher's path-prefix
+matcher — keyed by one path component per block of tokens).  A new request
+walks the trie with its prompt; every matched block is reused by reference
+(refcount++) and prefill skips straight to the first divergent block,
+computing only the suffix.  Because sharing is block-aligned, copy-on-write
+degenerates to refcounting: a shared block is never written (a request's own
+tokens always land in its private tail blocks), so the "copy" arm of COW
+never executes.  Completed requests donate their full blocks (prompt AND
+generated tokens) back to the trie; unreferenced cached blocks are reclaimed
+LRU-first when the free list runs dry.  Block 0 is a reserved null block:
+inactive decode rows are clamped onto it so masked lanes scribble harmlessly.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.models import init_decode_caches
+from repro.core.trie import PathTrie
+from repro.models import init_decode_caches, init_paged_pools
 from repro.models.config import ModelConfig
 
 
@@ -86,3 +115,352 @@ class CacheManager:
     @property
     def n_active(self) -> int:
         return sum(s.active for s in self.slots)
+
+
+# ======================================================================
+# Paged KV cache with trie-based prefix reuse
+# ======================================================================
+@dataclass
+class _CachedBlock:
+    """Trie residency record for one full token block."""
+    block: int
+    key: str                 # trie path ("/<blk0>/<blk1>/.../<blki>")
+    parent: str | None
+    children: int = 0        # cached child blocks (pin: can't evict parents)
+    last_used: int = 0       # allocator clock at last touch (LRU)
+
+
+class PrefixBlockAllocator:
+    """Host-side block accounting: free list, refcounts, and the token-block
+    prefix trie.  Touches no device memory — it only hands out block ids.
+
+    The trie reuses ``core.trie.PathTrie`` (the dispatcher's Fig-2 prefix
+    matcher): a prompt's i-th full block becomes the path component
+    ``"-".join(tokens[i*bs:(i+1)*bs])``, so ``PathTrie.match`` over the whole
+    prompt path returns exactly the chain of consecutive cached blocks —
+    prefix matching on keys and prefix matching on token histories are the
+    same operation.  A cached block's KV is valid for any request whose
+    prompt shares the full path down to it, because K/V at a position is a
+    deterministic function of (params, all preceding tokens, position).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, *,
+                 enable_cache: bool = True) -> None:
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.enable_cache = enable_cache
+        # block 0 reserved: the null block masked lanes are clamped onto
+        self.free: list[int] = list(range(num_blocks - 1, 0, -1))
+        self.refcount = [0] * num_blocks
+        self.trie: PathTrie[_CachedBlock] = PathTrie()
+        self._cached: dict[str, _CachedBlock] = {}
+        self._by_block: dict[int, _CachedBlock] = {}
+        self._clock = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------- helpers
+    def _components(self, tokens: Sequence[int], n_blocks: int) -> list[str]:
+        bs = self.block_size
+        return ["-".join(str(int(t)) for t in tokens[i * bs:(i + 1) * bs])
+                for i in range(n_blocks)]
+
+    def _touch(self, meta: _CachedBlock) -> None:
+        self._clock += 1
+        meta.last_used = self._clock
+
+    # --------------------------------------------------------------- match
+    def match(self, tokens: Sequence[int], max_blocks: int) -> list[int]:
+        """Longest chain of cached blocks covering a prefix of ``tokens``
+        (capped at ``max_blocks``); matched blocks are ref'd and LRU-touched.
+        """
+        if not self.enable_cache:
+            return []
+        n_full = min(len(tokens) // self.block_size, max_blocks)
+        if n_full <= 0:
+            return []
+        key = "/" + "/".join(self._components(tokens, n_full))
+        chain = self.trie.match(key)          # shallow → deep, consecutive
+        out = []
+        for meta in chain:
+            self.refcount[meta.block] += 1
+            self._touch(meta)
+            out.append(meta.block)
+        return out
+
+    # ------------------------------------------------------------ allocate
+    def allocate(self, n: int) -> list[int] | None:
+        """Pop ``n`` fresh blocks, evicting LRU unreferenced cached blocks
+        as needed.  Returns None (allocating nothing) if that's impossible."""
+        if n <= 0:
+            return []
+        while len(self.free) < n:
+            if not self._evict_one():
+                return None
+        out = [self.free.pop() for _ in range(n)]
+        for b in out:
+            self.refcount[b] += 1
+        return out
+
+    def _evict_one(self) -> bool:
+        best: _CachedBlock | None = None
+        for meta in self._cached.values():
+            if self.refcount[meta.block] == 0 and meta.children == 0:
+                if best is None or meta.last_used < best.last_used:
+                    best = meta
+        if best is None:
+            return False
+        self.trie.remove(best.key, best)
+        del self._cached[best.key]
+        del self._by_block[best.block]
+        if best.parent is not None:
+            self._cached[best.parent].children -= 1
+        self.free.append(best.block)
+        self.evictions += 1
+        return True
+
+    def available(self) -> int:
+        """Blocks obtainable right now: free + evictable (cached, unref'd).
+        An unreferenced cached block's descendants are also unreferenced
+        (a request that refs a child always refs the whole parent chain),
+        so every unreferenced cached block is eventually reclaimable."""
+        evictable = sum(1 for m in self._cached.values()
+                        if self.refcount[m.block] == 0)
+        return len(self.free) + evictable
+
+    @property
+    def blocks_in_use(self) -> int:
+        """Non-null blocks currently held (leased to requests or cached)."""
+        return self.num_blocks - 1 - len(self.free)
+
+    # --------------------------------------------------------------- cache
+    def cache_blocks(self, tokens: Sequence[int], table: Sequence[int]) -> int:
+        """Donate the full blocks of ``tokens`` (backed by ``table``) to the
+        trie.  Chains strictly: block i is cached only under an existing
+        (or just-created) parent path, so every trie chain is consecutive.
+        Returns how many blocks were newly cached."""
+        if not self.enable_cache:
+            return 0
+        n_full = min(len(tokens) // self.block_size, len(table))
+        comps = self._components(tokens, n_full)
+        added = 0
+        key = ""
+        for i in range(n_full):
+            parent = key or None
+            key += "/" + comps[i]
+            meta = self._cached.get(key)
+            if meta is not None:
+                self._touch(meta)     # content already cached (ours or a
+                continue              # duplicate); keep the incumbent
+            blk = int(table[i])
+            if blk in self._by_block:
+                # this physical block is already cached under another path
+                # (can't happen for consistent tables; guard anyway)
+                continue
+            meta = _CachedBlock(block=blk, key=key, parent=parent)
+            self.trie.insert(key, meta)
+            self._cached[key] = meta
+            self._by_block[blk] = meta
+            if parent is not None:
+                self._cached[parent].children += 1
+            self._touch(meta)
+            added += 1
+        return added
+
+    # --------------------------------------------------------------- unref
+    def unref(self, table: Sequence[int]) -> None:
+        """Drop one reference per block; uncached blocks return to the free
+        list at zero, cached blocks stay resident (evictable)."""
+        for blk in table:
+            blk = int(blk)
+            self.refcount[blk] -= 1
+            assert self.refcount[blk] >= 0, f"refcount underflow on {blk}"
+            if self.refcount[blk] == 0 and blk not in self._by_block:
+                self.free.append(blk)
+
+    @property
+    def n_cached(self) -> int:
+        return len(self._cached)
+
+
+@dataclass
+class PagedSeq:
+    """Per-slot request state: block table + positions + prompt tokens."""
+    request_id: str | None = None
+    prompt: np.ndarray | None = None   # host prompt tokens (trie keys)
+    table: list[int] = field(default_factory=list)
+    reused: int = 0                    # reused prefix length, tokens
+    reserve: int = 0                   # worst-case total blocks this request
+    pos: int = 0                       # next absolute position to decode
+    active: bool = False
+
+
+class PagedCacheManager:
+    """Paged drop-in for ``CacheManager``: same slot/position interface, but
+    cache state is (pools, block tables) instead of a per-slot dense tree.
+
+    ``devstore``/``kv_key``: when given, the pool tree is installed on the
+    DeviceStore after every mutation (``publish``) so KV blocks live on the
+    Cascade store like any other device object; by default a private
+    single-device store is created (keep_versions=1 — decode rewrites every
+    leaf each tick, so retaining predecessors would double pool memory).
+    """
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int, *,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 prefix_cache: bool = True, devstore=None,
+                 kv_key: str | None = None) -> None:
+        self.cfg, self.n_slots, self.max_len = cfg, n_slots, max_len
+        self.block_size = block_size
+        self.max_blocks = max(1, math.ceil(max_len / block_size))
+        if num_blocks is None:
+            # every slot can grow to max_len, plus null block, plus slack so
+            # the prefix cache can retain blocks past their request
+            num_blocks = 1 + (n_slots + 2) * self.max_blocks
+        self.num_blocks = num_blocks
+        self.alloc = PrefixBlockAllocator(num_blocks, block_size,
+                                          enable_cache=prefix_cache)
+        self.pools = init_paged_pools(cfg, num_blocks, block_size)
+        self.slots = [PagedSeq() for _ in range(n_slots)]
+        if devstore is None:
+            from repro.core.devstore import DeviceStore
+            from repro.core.pools import PoolSpec
+            mesh = jax.make_mesh((1, 1), ("data", "model"))
+            devstore = DeviceStore(mesh, keep_versions=1)
+            devstore.create_pool(PoolSpec(path="/kv"))
+            kv_key = kv_key or "/kv/pool"
+        self.devstore = devstore
+        self.kv_key = kv_key or "/kv/pool"
+        self.publish()
+
+    # ----------------------------------------------------- devstore bridge
+    def publish(self) -> None:
+        """Install the current pool tree on the device store (reference
+        move — the leaves already live on the right devices)."""
+        self.devstore.put(self.kv_key, self.pools, donate=True)
+
+    # ------------------------------------------------------ slot interface
+    def acquire(self, request_id: str) -> int | None:
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                self.slots[i] = PagedSeq(request_id=request_id, active=True)
+                return i
+        return None
+
+    def release(self, slot: int) -> None:
+        """Release without caching (error paths); ``finish`` is the normal
+        completion route."""
+        seq = self.slots[slot]
+        if seq.table:
+            self.alloc.unref(seq.table)
+        self.slots[slot] = PagedSeq()
+
+    def begin(self, slot: int, prompt_tokens: np.ndarray,
+              max_new_tokens: int) -> PagedSeq | None:
+        """Build the request's block table: reuse every cached block of a
+        block-aligned prompt prefix, allocate fresh blocks for the rest.
+        At least one prompt token is always left to prefill (the last-token
+        logits must be computed), so a fully-cached prompt reuses one block
+        less than it matched.  Returns None if blocks are exhausted."""
+        seq = self.slots[slot]
+        S = len(prompt_tokens)
+        if S > self.max_len:
+            # fail fast with a real error: a too-long prompt would otherwise
+            # overflow the fixed-width block table mid-admission
+            self.release(slot)
+            raise ValueError(f"prompt of {S} tokens exceeds max_len="
+                             f"{self.max_len}")
+        n_prompt_blocks = math.ceil(S / self.block_size)
+        reuse_cap = (S - 1) // self.block_size
+        matched = self.alloc.match(prompt_tokens, reuse_cap)
+        fresh = self.alloc.allocate(n_prompt_blocks - len(matched))
+        if fresh is None:
+            self.alloc.unref(matched)
+            self.release(slot)
+            return None
+        seq.prompt = np.asarray(prompt_tokens)
+        seq.table = matched + fresh
+        seq.reused = len(matched) * self.block_size
+        written_max = S + max(0, max_new_tokens - 1)
+        seq.reserve = min(self.max_blocks,
+                          math.ceil(written_max / self.block_size))
+        return seq
+
+    def commit_prompt(self, slot: int) -> int:
+        """After the slot's prefill has been dispatched (its K/V writes are
+        ordered before any later prefill group's reads), donate the prompt's
+        full blocks to the trie and start decoding at pos=S."""
+        seq = self.slots[slot]
+        added = self.alloc.cache_blocks(seq.prompt, seq.table)
+        seq.pos = len(seq.prompt)
+        return added
+
+    def finish(self, slot: int, generated: Sequence[int]) -> None:
+        """Normal completion: cache the full blocks of everything whose K/V
+        was actually written — prompt plus generated[:-1] (the final sampled
+        token is never fed back) — then drop the request's references."""
+        seq = self.slots[slot]
+        written = np.concatenate([
+            seq.prompt, np.asarray(list(generated[:-1]), dtype=np.int64)
+        ]) if len(generated) > 1 else seq.prompt
+        self.alloc.cache_blocks(written, seq.table)
+        self.alloc.unref(seq.table)
+        self.slots[slot] = PagedSeq()
+
+    # ---------------------------------------------------------- decode I/O
+    def ensure_decode_blocks(self) -> None:
+        """Grow each active slot's table to cover the position it is about to
+        write.  Admission reserves worst-case block budgets, so allocation
+        here cannot fail unless the caller overran max_len."""
+        for seq in self.slots:
+            if not seq.active:
+                continue
+            blk_idx = seq.pos // self.block_size
+            if blk_idx >= self.max_blocks:
+                raise RuntimeError(
+                    f"request {seq.request_id} overran max_len={self.max_len}")
+            while blk_idx >= len(seq.table):
+                got = self.alloc.allocate(1)
+                if got is None:
+                    raise RuntimeError("KV block pool exhausted mid-decode "
+                                       "(admission budget violated)")
+                seq.table.extend(got)
+
+    def block_tables(self, slots: list[int] | None = None) -> np.ndarray:
+        """(B, max_blocks) int32 table, -1 = unused (clamped to the null
+        block device-side).  Default: one row per slot, inactive rows all -1.
+        """
+        idxs = list(range(self.n_slots)) if slots is None else list(slots)
+        bt = np.full((len(idxs), self.max_blocks), -1, np.int32)
+        for r, i in enumerate(idxs):
+            t = self.slots[i].table
+            bt[r, :len(t)] = t
+        return bt
+
+    def available_for_admission(self) -> int:
+        """Free+evictable blocks minus what active requests may still claim
+        for decode growth — the budget the scheduler admits against."""
+        outstanding = sum(max(0, s.reserve - len(s.table))
+                          for s in self.slots if s.active)
+        return self.alloc.available() - outstanding
+
+    # ------------------------------------------- dense-compatible counters
+    def active_mask(self) -> jnp.ndarray:
+        return jnp.asarray([s.active for s in self.slots], dtype=bool)
+
+    def positions(self) -> jnp.ndarray:
+        return jnp.asarray([s.pos for s in self.slots], dtype=jnp.int32)
+
+    def advance(self) -> None:
+        for s in self.slots:
+            if s.active:
+                s.pos += 1
+
+    @property
+    def n_active(self) -> int:
+        return sum(s.active for s in self.slots)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.alloc.blocks_in_use

@@ -10,6 +10,10 @@ Admission: waiting requests are admitted to free KV slots oldest-first
 (continuous batching); an optional `prefill_budget` bounds how many prefills
 are spliced per decode step so long prompts cannot starve decodes — the
 paper's "latency floor under load" discipline applied to token serving.
+With a paged KV cache the engine also passes a per-request *block* budget:
+admission stops before the pool's free+evictable blocks are oversubscribed,
+counting each candidate's worst-case footprint (prefix reuse only makes the
+realized footprint smaller, so the bound is safe).
 """
 from __future__ import annotations
 
@@ -55,11 +59,24 @@ class Scheduler:
         self.waiting[r].append(req)
         return r
 
-    def admit(self, replica: int, free_slots: int) -> list[Request]:
-        """Oldest-first admission bounded by slots and prefill budget."""
+    def admit(self, replica: int, free_slots: int, *,
+              free_blocks: int | None = None,
+              block_cost: Any = None) -> list[Request]:
+        """Oldest-first admission bounded by slots, prefill budget, and —
+        when the engine serves from a paged pool — KV block budget.
+
+        ``block_cost(req)`` returns the request's worst-case block demand;
+        admission is head-of-line (a too-big head blocks the queue rather
+        than starving while smaller latecomers leapfrog it)."""
         out = []
         q = self.waiting[replica]
+        budget = free_blocks
         while q and len(out) < min(free_slots, self.prefill_budget):
+            if budget is not None and block_cost is not None:
+                need = block_cost(q[0])
+                if need > budget:
+                    break
+                budget -= need
             out.append(q.popleft())
         return out
 

@@ -75,6 +75,40 @@ def test_rr_spreads_across_queues():
     pool.stop()
 
 
+def test_fifo_affinity_queue_hash_groups_sessions():
+    """Pool-configurable FIFO pick: with a queue_hash over the session
+    prefix, ALL of a session's keys share one upcall thread (mirroring the
+    store-level affinity member pick), even though the full-key hash would
+    scatter them."""
+    import functools
+
+    from repro.core.pools import affinity_shard_hash
+
+    pool, d = make(n_threads=4)
+    by_session: dict[str, set[str]] = {}
+    lock = threading.Lock()
+
+    def lam(o, ev):
+        sess = o.key.split("/")[2]
+        with lock:
+            by_session.setdefault(sess, set()).add(
+                threading.current_thread().name)
+
+    d.register(LambdaHandle(
+        "f", "/req", lam, dispatch=DispatchPolicy.FIFO,
+        queue_hash=functools.partial(affinity_shard_hash, depth=2)))
+    evs = []
+    for sess in ("alice", "bob", "carol", "dave"):
+        for i in range(6):
+            evs += d.dispatch(CascadeObject(key=f"/req/{sess}/r{i}",
+                                            payload=b""))
+    for ev in evs:
+        ev.completion.wait(5)
+    assert all(len(threads) == 1 for threads in by_session.values()), \
+        by_session
+    pool.stop()
+
+
 def test_error_surfaces_not_swallowed():
     pool, d = make()
 

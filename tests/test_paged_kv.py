@@ -1,0 +1,252 @@
+"""Paged KV cache + trie prefix reuse: allocator bookkeeping (refcounts, LRU
+eviction, COW-by-alignment), block-budget admission, and the serving engine
+on the paged fast path (warm sessions skip prefix prefill; one device→host
+sync per tick still holds; paged == dense token streams)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_params, supports_paged
+from repro.serving.engine import ServeEngine
+from repro.serving.kvcache import PagedCacheManager, PrefixBlockAllocator
+from repro.serving.scheduler import Request, Scheduler
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32, n_heads=4,
+                  n_kv_heads=2, d_ff=64, vocab_size=128, dtype="float32",
+                  q_chunk=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _toks(rng, n):
+    return rng.integers(0, CFG.vocab_size, (n,)).astype(np.int32)
+
+
+# ===================================================== allocator bookkeeping
+def test_allocator_match_then_reuse_refcounts():
+    a = PrefixBlockAllocator(num_blocks=8, block_size=4)
+    toks = list(range(12))                        # 3 full blocks
+    table = a.allocate(3)
+    assert a.cache_blocks(toks, table) == 3
+    a.unref(table)                                # request done; blocks cached
+    assert a.available() == 7                     # all reclaimable, none free
+    assert len(a.free) == 4
+    # a new prompt sharing 2 blocks then diverging matches exactly 2
+    toks2 = list(range(8)) + [99, 98, 97, 96]
+    m = a.match(toks2, max_blocks=3)
+    assert m == table[:2]
+    assert a.refcount[m[0]] == 1 and a.refcount[m[1]] == 1
+    a.unref(m)
+    assert a.refcount[m[0]] == 0
+
+
+def test_allocator_block_aligned_reuse_never_writes_shared():
+    """COW degenerates to refcounting: reuse is capped below the full prompt,
+    so the suffix (>=1 token) always lands in fresh private blocks."""
+    a = PrefixBlockAllocator(num_blocks=8, block_size=4)
+    toks = list(range(8))                         # exactly 2 full blocks
+    t1 = a.allocate(2)
+    a.cache_blocks(toks, t1)
+    a.unref(t1)
+    # same prompt again: at most (S-1)//bs = 1 block may be reused — the
+    # last block is recomputed so last-token logits exist
+    m = a.match(toks, max_blocks=(len(toks) - 1) // 4)
+    assert m == t1[:1]
+    a.unref(m)
+
+
+def test_allocator_lru_eviction_order_and_child_pinning():
+    a = PrefixBlockAllocator(num_blocks=4, block_size=2)   # 3 usable blocks
+    t1 = a.allocate(2)
+    a.cache_blocks([1, 2, 3, 4], t1)              # chain: parent + child
+    a.unref(t1)
+    t2 = a.allocate(1)
+    a.cache_blocks([9, 9], t2)
+    a.unref(t2)
+    assert a.n_cached == 3 and len(a.free) == 0
+    # the [1,2] parent is the globally-oldest entry but is PINNED by its
+    # cached child, so eviction takes the child (oldest unpinned), not [9,9]
+    t3 = a.allocate(1)
+    assert t3 is not None and a.evictions == 1
+    assert set(m.key for m in a._cached.values()) == {"/1-2", "/9-9"}
+    # now the parent is unpinned and older than [9,9] → evicted next
+    t4 = a.allocate(1)
+    assert t4 is not None and a.evictions == 2
+    assert [m.key for m in a._cached.values()] == ["/9-9"]
+    a.unref(t3 + t4)
+    assert a.match([9, 9, 5, 5], max_blocks=1) != []
+
+
+def test_allocator_exhaustion_returns_none():
+    a = PrefixBlockAllocator(num_blocks=4, block_size=2)
+    t = a.allocate(3)
+    assert t is not None
+    assert a.allocate(1) is None                  # all blocks referenced
+    a.unref(t)
+    assert a.allocate(1) is not None
+
+
+def test_manager_rejects_prompt_longer_than_max_len():
+    """An oversized prompt must fail fast with a clear error (not overflow
+    the fixed-width block table mid-admission) and leak nothing."""
+    cm = PagedCacheManager(CFG, n_slots=1, max_len=16, block_size=8,
+                           num_blocks=12)
+    slot = cm.acquire("r1")
+    with pytest.raises(ValueError, match="max_len"):
+        cm.begin(slot, np.arange(24, dtype=np.int32), max_new_tokens=4)
+    assert cm.n_active == 0 and cm.blocks_in_use == 0
+    assert cm.block_tables().shape == (1, 2)
+
+
+def test_manager_reserves_decode_growth():
+    cm = PagedCacheManager(CFG, n_slots=2, max_len=32, block_size=8,
+                           num_blocks=9)          # 8 usable
+    slot = cm.acquire("r1")
+    seq = cm.begin(slot, np.arange(8, dtype=np.int32), max_new_tokens=17)
+    assert seq is not None and len(seq.table) == 1
+    # 8 prompt + 16 written decode tokens → reserve 3 blocks, 2 outstanding
+    assert seq.reserve == 3
+    assert cm.available_for_admission() == 8 - 1 - 2
+
+
+# ====================================================== scheduler admission
+def test_scheduler_block_budget_is_head_of_line():
+    s = Scheduler(n_replicas=1, prefill_budget=8)
+    for i, n in enumerate((4, 1, 1)):
+        s.submit(Request(request_id=f"r{i}", session_key="s", prompt=None,
+                         max_new_tokens=n))
+    cost = {"r0": 4, "r1": 1, "r2": 1}
+    got = s.admit(0, free_slots=3, free_blocks=3,
+                  block_cost=lambda r: cost[r.request_id])
+    # r0 does not fit; r1/r2 must NOT leapfrog it (FIFO sessions stay ordered)
+    assert got == []
+    got = s.admit(0, free_slots=3, free_blocks=5,
+                  block_cost=lambda r: cost[r.request_id])
+    assert [r.request_id for r in got] == ["r0", "r1"]
+
+
+# ========================================================== engine fast path
+def _run(params, reqs, **kw):
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=96, **kw)
+    done = []
+    eng.on_complete = done.append
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    return eng, {r.request_id: list(r.tokens) for r in done}
+
+
+def test_paged_engine_matches_dense_tokens(params):
+    rng = np.random.default_rng(0)
+    prompts = [_toks(rng, L) for L in (5, 40, 17, 40, 3)]
+    mk = lambda: [Request(request_id=f"r{i}", session_key="s", prompt=p,
+                          max_new_tokens=4) for i, p in enumerate(prompts)]
+    _, dense = _run(params, mk(), paged=False)
+    eng, paged = _run(params, mk(), paged=True, block_size=16)
+    assert dense == paged
+    assert eng.stats.host_syncs == \
+        eng.stats.decode_ticks + eng.stats.prefill_batches
+
+
+def test_warm_session_skips_prefix_prefill(params):
+    """The acceptance check: a warm multi-turn session reuses its prefix —
+    prefix_hit_tokens > 0 and strictly fewer tokens are prefilled than the
+    prompt carries (skipped-block count × block size) — while the
+    one-sync-per-tick rule still holds and outputs match a cold engine."""
+    rng = np.random.default_rng(1)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=96, paged=True,
+                      block_size=16)
+    done = []
+    eng.on_complete = done.append
+    p1 = _toks(rng, 40)
+    eng.submit(Request(request_id="t1", session_key="s", prompt=p1,
+                       max_new_tokens=4))
+    eng.run_until_drained()
+    assert eng.stats.prefix_hit_tokens == 0            # cold
+    # turn 2: the session's history (prompt + all generated tokens) plus new
+    # user tokens — exactly what FIFO affinity delivers back to this replica
+    p2 = np.concatenate([p1, np.asarray(done[0].tokens, np.int32),
+                         _toks(rng, 7)])
+    eng.submit(Request(request_id="t2", session_key="s", prompt=p2,
+                       max_new_tokens=4))
+    eng.run_until_drained()
+    # turn 1 wrote KV for 40 + 3 tokens → 2 full blocks of 16 are cached
+    assert eng.stats.prefix_hit_tokens == 32
+    assert eng.stats.prefix_hits == 1
+    skipped_blocks = eng.stats.prefix_hit_tokens // 16
+    assert skipped_blocks == 2
+    # strictly fewer prefill FLOPs: prefilled tokens < prompt tokens
+    assert eng.stats.prefill_tokens == eng.stats.prompt_tokens - 32
+    assert eng.stats.host_syncs == \
+        eng.stats.decode_ticks + eng.stats.prefill_batches
+    assert eng.stats.blocks_in_use > 0
+    # reused-prefix decode must equal a cold full recompute
+    _, cold = _run(params, [Request(request_id="t2", session_key="s",
+                                    prompt=p2, max_new_tokens=4)], paged=False)
+    assert cold["t2"] == done[1].tokens
+
+
+def test_paged_decode_via_pallas_kernel_matches_xla(params):
+    """The block-gather Pallas kernel wired through the model: same tokens
+    as the XLA gather path."""
+    rng = np.random.default_rng(2)
+    p = _toks(rng, 20)
+    mk = lambda: [Request(request_id="k", session_key="s", prompt=p,
+                          max_new_tokens=3)]
+    _, xla = _run(params, mk(), paged=True, block_size=16)
+    cfg_p = CFG.replace(attn_backend="pallas_interpret")
+    eng = ServeEngine(cfg_p, params, n_slots=4, max_len=96, paged=True,
+                      block_size=16)
+    done = []
+    eng.on_complete = done.append
+    eng.submit(mk()[0])
+    eng.run_until_drained()
+    assert list(done[0].tokens) == xla["k"]
+
+
+def test_prefix_cache_eviction_under_pressure(params):
+    """A tiny pool: old sessions' cached blocks are evicted LRU-first and
+    serving keeps going (admission never overruns the pool)."""
+    rng = np.random.default_rng(3)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=64, paged=True,
+                      block_size=16, num_blocks=9)     # 8 usable blocks
+    for i in range(6):
+        eng.submit(Request(request_id=f"r{i}", session_key=f"s{i}",
+                           prompt=_toks(rng, 33), max_new_tokens=2))
+    eng.run_until_drained()
+    assert eng.stats.prefills == 6
+    assert eng.cm.alloc.evictions > 0
+    assert eng.cm.n_active == 0
+    assert eng.stats.host_syncs == \
+        eng.stats.decode_ticks + eng.stats.prefill_batches
+
+
+def test_supports_paged_gating():
+    assert supports_paged(CFG)
+    mamba = ModelConfig(name="m", family="ssm", n_layers=2, d_model=32,
+                        n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64,
+                        dtype="float32")
+    assert not supports_paged(mamba)
+    with pytest.raises(ValueError):
+        ServeEngine(mamba, None, paged=True)
+
+
+def test_kv_pool_lives_on_devstore(params):
+    """KV blocks are Cascade objects: the engine's pool tree is installed on
+    the device store and re-installed (same leaves, no copy) every tick."""
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=32, paged=True,
+                      block_size=16)
+    stored = eng.cm.devstore.get(eng.cm.kv_key)
+    assert stored is not None
+    assert jax.tree.structure(stored) == jax.tree.structure(eng.cm.pools)
+    rng = np.random.default_rng(4)
+    eng.submit(Request(request_id="r", session_key="s", prompt=_toks(rng, 5),
+                       max_new_tokens=2))
+    eng.run_until_drained()
+    stored = eng.cm.devstore.get(eng.cm.kv_key)
+    # zero-copy install: the stored leaves ARE the live pool leaves
+    assert all(a is b for a, b in zip(jax.tree.leaves(stored),
+                                      jax.tree.leaves(eng.cm.pools)))

@@ -279,7 +279,10 @@ def paged_attention(params: dict, x: jax.Array, positions: jax.Array, *,
     else:
         from repro.kernels.decode_attention.ref import densify_pool
         kd, vd, kpos = densify_pool(pool["k"], pool["v"], block_table)
-        out = _attend(q, kd, vd, positions, kpos, window=spec.window,
-                      cap=cap, scale=scale)
+        # chunked for suffix prefill (T may approach max_len, and the full
+        # (B,K,G,T,nb*bs) f32 score tensor is the dominant buffer exactly as
+        # in dense prefill); decode's T=1 short-circuits to plain _attend
+        out = _attend_chunked(q, kd, vd, positions, kpos, window=spec.window,
+                              cap=cap, scale=scale, q_chunk=cfg.q_chunk)
     y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
     return y, pool

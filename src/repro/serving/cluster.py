@@ -146,7 +146,14 @@ class ServeCluster:
         return request_id
 
     def _on_complete(self, req: Request) -> None:
-        """Engine completion hook: the response lands back in the store."""
+        """Engine completion hook: the response lands back in the store.
+        A rejected request (oversized prompt, impossible block demand) still
+        completes — empty tokens at the normal key, and its reason under
+        ``<request_id>/error`` so clients can tell refusal from a short
+        generation (read it with ``error()``)."""
+        if req.error is not None:
+            self.store.put(f"{self.out_prefix}/{req.request_id}/error",
+                           req.error)
         self.store.put(f"{self.out_prefix}/{req.request_id}",
                        np.asarray(req.tokens, np.int32))
         with self._lock:
@@ -166,6 +173,11 @@ class ServeCluster:
     def result(self, request_id: str) -> np.ndarray | None:
         obj = self.store.get(f"{self.out_prefix}/{request_id}")
         return None if obj is None else np.asarray(obj.payload)
+
+    def error(self, request_id: str) -> str | None:
+        """Why a request was rejected; None while pending or on success."""
+        obj = self.store.get(f"{self.out_prefix}/{request_id}/error")
+        return None if obj is None else str(obj.payload)
 
     # -------------------------------------------------------------- driver
     def _idle(self) -> bool:

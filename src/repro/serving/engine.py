@@ -35,7 +35,6 @@ replaces full-prompt-shape grouping; the tick discipline above is unchanged.
 """
 from __future__ import annotations
 
-import math
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -133,12 +132,58 @@ class ServeEngine:
                 # rows never feed garbage back into the next step
                 return jnp.where(active, sampled, toks), new_caches
 
-        self._prefill = jax.jit(_prefill_step)
-        self._step = jax.jit(_decode_tick)
+        # Paged mode donates the pool operand: decode scatters into every
+        # layer's pool leaf, and without donation XLA must copy the whole
+        # global block pool ((num_blocks, block_size, K, D) per layer) on
+        # every dispatch — at realistic pool sizes that copy negates the
+        # paging win.  Each dispatch replaces ``cm.pools`` with the returned
+        # tree and ``publish()`` re-installs the fresh leaves.  Discipline:
+        # between a dispatch and its publish() the devstore's /kv entry
+        # aliases the donated (deleted) buffers, so KV reads through the
+        # store must come from the tick thread (the engine's one-driver
+        # model), never concurrently from another thread.
+        donate = (1,) if self.paged else ()
+        self._prefill = jax.jit(_prefill_step, donate_argnums=donate)
+        self._step = jax.jit(_decode_tick, donate_argnums=donate)
 
     # ------------------------------------------------------------- client
     def submit(self, req: Request) -> None:
+        """Enqueue a request, or reject it up front through the completion
+        path (``req.error`` set, ``on_complete`` fired, nothing enqueued)
+        when it could never be served: an oversized request must not blow up
+        mid-admission batch, and one whose worst-case block demand exceeds
+        what the pool can EVER provide must not park at the head of the
+        queue forever."""
+        req.prompt = self._norm_prompt(req.prompt)   # normalize ONCE: every
+        err = self._validate(req)                    # later pass is a no-op
+        if err is not None:
+            self._reject(req, err)
+            return
         self.scheduler.submit(req)
+
+    def _validate(self, req: Request) -> str | None:
+        S = len(self._norm_prompt(req.prompt))
+        if S > self.cm.max_len:
+            return f"prompt of {S} tokens exceeds max_len={self.cm.max_len}"
+        if self.paged:
+            # the paged pool has no ring fallback: a decode that reaches
+            # max_len has no block to write and would kill the whole tick
+            if self.cm.written_max(S, req.max_new_tokens) > self.cm.max_len:
+                return (f"prompt of {S} tokens + {req.max_new_tokens} new "
+                        f"tokens would write past max_len={self.cm.max_len}")
+            # with the pool drained and the prefix cache fully evicted, at
+            # most num_blocks-1 blocks exist (block 0 is the null block)
+            cap = self.cm.num_blocks - 1
+            need = self._block_cost(req)
+            if need > cap:
+                return (f"request needs up to {need} KV blocks but the pool "
+                        f"can ever provide {cap} (raise num_blocks or lower "
+                        f"max_new_tokens)")
+        return None
+
+    def _reject(self, req: Request, err: str) -> None:
+        req.error = err
+        self._complete(req)
 
     # ------------------------------------------------------------- engine
     def _next_seed(self) -> jnp.ndarray:
@@ -157,15 +202,14 @@ class ServeEngine:
         p = np.asarray(prompt)
         if p.ndim >= 2 and p.shape[0] == 1:
             p = p[0]
-        if np.issubdtype(p.dtype, np.integer):
+        if np.issubdtype(p.dtype, np.integer) and p.dtype != np.int32:
             p = p.astype(np.int32)
         return p
 
     def _block_cost(self, req: Request) -> int:
         """Worst-case block footprint of a request (reuse only shrinks it)."""
         S = len(self._norm_prompt(req.prompt))
-        written_max = S + max(0, req.max_new_tokens - 1)
-        return min(self.cm.max_blocks, math.ceil(written_max / self.cm.block_size))
+        return self.cm.block_cost(S, req.max_new_tokens)
 
     def _admit(self) -> None:
         free = self.cm.n_slots - self.cm.n_active
@@ -173,7 +217,8 @@ class ServeEngine:
             reqs = self.scheduler.admit(
                 self.replica_id, free,
                 free_blocks=self.cm.available_for_admission(),
-                block_cost=self._block_cost)
+                block_cost=self._block_cost,
+                max_blocks=self.cm.num_blocks - 1)
             self._admit_paged(reqs)
         else:
             reqs = self.scheduler.admit(self.replica_id, free)
@@ -219,12 +264,25 @@ class ServeEngine:
         # with different prompt lengths batch together as long as the token
         # count left after prefix reuse matches (positions are per-row).
         groups: list[tuple[int, list[tuple[Request, np.ndarray, int]]]] = []
-        for req in reqs:
+        for i, req in enumerate(reqs):
+            err = self._validate(req)
+            if err is not None:
+                # unservable request enqueued behind submit()'s back (e.g.
+                # straight into the scheduler): fail it alone, keep the batch
+                self._reject(req, err)
+                continue
             p = self._norm_prompt(req.prompt)
             slot = self.cm.acquire(req.request_id)
-            assert slot is not None
-            seq = self.cm.begin(slot, p, req.max_new_tokens)
-            assert seq is not None, "admission exceeded the block budget"
+            seq = (self.cm.begin(slot, p, req.max_new_tokens)
+                   if slot is not None else None)
+            if seq is None:
+                # slot/block accounting drift (begin released the slot): put
+                # this and every not-yet-begun request back at the HEAD of
+                # the queue in order — admitting later arrivals now would
+                # reorder a FIFO session's turns — and retry next tick
+                for r in reversed(reqs[i:]):
+                    self.scheduler.requeue(self.replica_id, r)
+                break
             suffix_len = len(p) - seq.reused
             self.stats.prompt_tokens += len(p)
             self.stats.prefill_tokens += suffix_len

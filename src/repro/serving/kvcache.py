@@ -27,7 +27,12 @@ walks the trie with its prompt; every matched block is reused by reference
 computing only the suffix.  Because sharing is block-aligned, copy-on-write
 degenerates to refcounting: a shared block is never written (a request's own
 tokens always land in its private tail blocks), so the "copy" arm of COW
-never executes.  Completed requests donate their full blocks (prompt AND
+never executes.  Requests that prefill the same not-yet-cached prefix in
+one tick each compute a private copy; whoever commits second adopts the
+incumbent's blocks and frees its duplicates (commit-time dedup), so block
+references always follow the trie's own chains and the allocator's
+free+evictable accounting stays exact.  Completed requests donate their
+full blocks (prompt AND
 generated tokens) back to the trie; unreferenced cached blocks are reclaimed
 LRU-first when the free list runs dry.  Block 0 is a reserved null block:
 inactive decode rows are clamped onto it so masked lanes scribble harmlessly.
@@ -159,6 +164,7 @@ class PrefixBlockAllocator:
         self._by_block: dict[int, _CachedBlock] = {}
         self._clock = 0
         self.evictions = 0
+        self.dedup_blocks = 0    # duplicate blocks swapped for incumbents
 
     # ------------------------------------------------------------- helpers
     def _components(self, tokens: Sequence[int], n_blocks: int) -> list[str]:
@@ -222,9 +228,12 @@ class PrefixBlockAllocator:
 
     def available(self) -> int:
         """Blocks obtainable right now: free + evictable (cached, unref'd).
-        An unreferenced cached block's descendants are also unreferenced
-        (a request that refs a child always refs the whole parent chain),
-        so every unreferenced cached block is eventually reclaimable."""
+        References land only on trie-incumbent blocks (``match`` refs
+        root-consecutive chains; ``cache_blocks`` swaps duplicates for
+        incumbents at commit), so a referenced cached block's ancestors are
+        referenced too — equivalently, an unreferenced cached block heads an
+        unreferenced subtree, which leaf-first iterated eviction can always
+        reclaim."""
         evictable = sum(1 for m in self._cached.values()
                         if self.refcount[m.block] == 0)
         return len(self.free) + evictable
@@ -235,11 +244,19 @@ class PrefixBlockAllocator:
         return self.num_blocks - 1 - len(self.free)
 
     # --------------------------------------------------------------- cache
-    def cache_blocks(self, tokens: Sequence[int], table: Sequence[int]) -> int:
+    def cache_blocks(self, tokens: Sequence[int], table: list[int]) -> int:
         """Donate the full blocks of ``tokens`` (backed by ``table``) to the
         trie.  Chains strictly: block i is cached only under an existing
         (or just-created) parent path, so every trie chain is consecutive.
-        Returns how many blocks were newly cached."""
+
+        Commit-time dedup: when a path is already cached under a DIFFERENT
+        physical block (two same-tick requests prefilled a shared prefix
+        before either could cache it), ``table`` is rewritten in place to
+        the cached incumbent and the duplicate block is released — its K/V
+        is identical (same tokens, same positions).  This keeps every
+        reference on the trie's own chain, so a referenced cached block's
+        ancestors are always referenced too; ``available`` counts on that
+        invariant.  Returns how many blocks were newly cached."""
         if not self.enable_cache:
             return 0
         n_full = min(len(tokens) // self.block_size, len(table))
@@ -251,8 +268,20 @@ class PrefixBlockAllocator:
             key += "/" + comps[i]
             meta = self._cached.get(key)
             if meta is not None:
-                self._touch(meta)     # content already cached (ours or a
-                continue              # duplicate); keep the incumbent
+                self._touch(meta)
+                blk = int(table[i])
+                if blk != meta.block:
+                    # duplicate computation of cached content: adopt the
+                    # incumbent, free our copy
+                    self.refcount[meta.block] += 1
+                    self.refcount[blk] -= 1
+                    assert self.refcount[blk] >= 0, \
+                        f"refcount underflow on {blk}"
+                    if self.refcount[blk] == 0 and blk not in self._by_block:
+                        self.free.append(blk)
+                    table[i] = meta.block
+                    self.dedup_blocks += 1
+                continue
             blk = int(table[i])
             if blk in self._by_block:
                 # this physical block is already cached under another path
@@ -356,6 +385,22 @@ class PagedCacheManager:
             self.alloc.unref(seq.table)
         self.slots[slot] = PagedSeq()
 
+    @staticmethod
+    def written_max(prompt_len: int, max_new_tokens: int) -> int:
+        """Number of positions whose K/V gets written: the prompt plus
+        max_new-1 fed-back tokens (the final sample is never written).  THE
+        write-accounting rule — admission validation, block budgeting, and
+        ``begin``'s reserve all derive from this one definition."""
+        return prompt_len + max(0, max_new_tokens - 1)
+
+    def block_cost(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Worst-case block footprint of a request.  ``begin`` reserves
+        exactly this, so scheduler admission and decode-time growth can
+        never disagree."""
+        return min(self.max_blocks,
+                   math.ceil(self.written_max(prompt_len, max_new_tokens)
+                             / self.block_size))
+
     def begin(self, slot: int, prompt_tokens: np.ndarray,
               max_new_tokens: int) -> PagedSeq | None:
         """Build the request's block table: reuse every cached block of a
@@ -382,9 +427,7 @@ class PagedCacheManager:
         seq.prompt = np.asarray(prompt_tokens)
         seq.table = matched + fresh
         seq.reused = len(matched) * self.block_size
-        written_max = S + max(0, max_new_tokens - 1)
-        seq.reserve = min(self.max_blocks,
-                          math.ceil(written_max / self.block_size))
+        seq.reserve = self.block_cost(S, max_new_tokens)
         return seq
 
     def commit_prompt(self, slot: int) -> int:

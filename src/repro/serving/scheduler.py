@@ -38,6 +38,7 @@ class Request:
     tokens: list[int] = field(default_factory=list)
     first_token_s: float | None = None
     done_s: float | None = None
+    error: str | None = None        # set when the engine rejects the request
 
 
 class Scheduler:
@@ -61,24 +62,40 @@ class Scheduler:
 
     def admit(self, replica: int, free_slots: int, *,
               free_blocks: int | None = None,
-              block_cost: Any = None) -> list[Request]:
+              block_cost: Any = None,
+              max_blocks: int | None = None) -> list[Request]:
         """Oldest-first admission bounded by slots, prefill budget, and —
         when the engine serves from a paged pool — KV block budget.
 
         ``block_cost(req)`` returns the request's worst-case block demand;
         admission is head-of-line (a too-big head blocks the queue rather
-        than starving while smaller latecomers leapfrog it)."""
+        than starving while smaller latecomers leapfrog it).  A head whose
+        demand exceeds ``max_blocks`` — the pool's ABSOLUTE capacity, never
+        attainable even fully drained — is popped through anyway so the
+        engine's admission validation can reject it via the completion path;
+        without that escape hatch it would stall the queue forever.  (Engine
+        ``submit`` already rejects such requests up front; this covers
+        requests enqueued directly into the scheduler.)"""
         out = []
         q = self.waiting[replica]
         budget = free_blocks
         while q and len(out) < min(free_slots, self.prefill_budget):
             if budget is not None and block_cost is not None:
                 need = block_cost(q[0])
+                if max_blocks is not None and need > max_blocks:
+                    out.append(q.popleft())     # unservable: engine rejects
+                    continue
                 if need > budget:
                     break
                 budget -= need
             out.append(q.popleft())
         return out
+
+    def requeue(self, replica: int, req: Request) -> None:
+        """Return an admitted-but-unplaced request to the HEAD of its queue
+        (oldest-first order is preserved when callers requeue a contiguous
+        admitted run in reverse)."""
+        self.waiting[replica].appendleft(req)
 
     def pending(self, replica: int) -> int:
         return len(self.waiting[replica])

@@ -224,6 +224,156 @@ def test_prefix_cache_eviction_under_pressure(params):
         eng.stats.decode_ticks + eng.stats.prefill_batches
 
 
+# ============================================ review regressions (PR 2 fixes)
+def test_allocator_commit_dedup_swaps_duplicates():
+    """Two tables caching the same not-yet-cached prefix: the second commit
+    must adopt the incumbent blocks (table rewritten in place) and free its
+    duplicates, so available() only counts truly reclaimable blocks."""
+    a = PrefixBlockAllocator(num_blocks=8, block_size=4)
+    shared = [1, 2, 3, 4, 5, 6, 7, 8]             # 2 full blocks
+    ta = a.allocate(3)
+    tb = a.allocate(3)
+    a.cache_blocks(shared + [10, 11, 12, 13], ta)
+    dup = list(tb)
+    assert a.cache_blocks(shared + [20, 21, 22, 23], tb) == 1  # divergent only
+    assert tb[:2] == ta[:2] and a.dedup_blocks == 2
+    assert a.refcount[ta[0]] == 2 and a.refcount[ta[1]] == 2
+    assert a.refcount[dup[0]] == 0 and dup[0] in a.free and dup[1] in a.free
+    a.unref(ta)
+    a.unref(tb)
+    assert a.available() == 7
+    got = a.allocate(7)                           # every counted block is
+    assert got is not None and len(set(got)) == 7  # actually obtainable
+
+
+def test_same_tick_divergent_prefix_never_strands_blocks(params):
+    """High-severity regression: A and B admitted in ONE tick share two
+    blocks of prompt then diverge in their third; A finishes while B keeps
+    decoding, and C then needs every block available() advertises.  Without
+    commit-time dedup, B pins A's incumbent chain via a cached divergent
+    child while holding duplicate physical blocks, available() overcounts,
+    C is over-admitted, and begin() returning None crashed the engine."""
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=32, paged=True,
+                      block_size=4, num_blocks=11)      # 10 usable blocks
+    done = []
+    eng.on_complete = done.append
+    shared = _toks(rng, 8)
+    mk = lambda rid, tail, n: Request(
+        request_id=rid, session_key=rid,
+        prompt=np.concatenate([shared, tail]), max_new_tokens=n)
+    eng.submit(mk("a", _toks(rng, 4), 2))               # cost 4 blocks
+    eng.submit(mk("b", _toks(rng, 4), 6))               # cost 5 blocks
+    eng.tick()                                          # both prefill; A done
+    assert [r.request_id for r in done] == ["a"] and eng.cm.n_active == 1
+    assert eng.cm.alloc.dedup_blocks == 2               # B adopted A's prefix
+    eng.submit(Request(request_id="c", session_key="c",
+                       prompt=_toks(rng, 20), max_new_tokens=1))  # cost 5
+    eng.run_until_drained()
+    assert sorted(r.request_id for r in done) == ["a", "b", "c"]
+    assert all(r.error is None for r in done)
+    a = eng.cm.alloc
+    assert a.available() == a.num_blocks - 1
+    got = a.allocate(a.num_blocks - 1)       # drain: all blocks reclaimable
+    assert got is not None and len(set(got)) == a.num_blocks - 1
+
+
+def test_oversized_prompt_fails_via_completion_path(params):
+    """Medium regression: an oversized prompt mid-batch must fail ALONE
+    through the completion path (error set, no tokens) without stranding
+    the same-tick requests admitted before it."""
+    rng = np.random.default_rng(6)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=32, paged=True,
+                      block_size=16)
+    done = []
+    eng.on_complete = done.append
+    for rid, n, new in (("g1", 8, 2), ("bad", 40, 2), ("g2", 8, 2),
+                        ("over", 30, 5)):       # 30 + 4 written > max_len=32
+        eng.submit(Request(request_id=rid, session_key=rid,
+                           prompt=_toks(rng, n), max_new_tokens=new))
+    eng.run_until_drained()
+    byid = {r.request_id: r for r in done}
+    assert set(byid) == {"g1", "bad", "g2", "over"}
+    assert byid["bad"].error is not None and "max_len" in byid["bad"].error
+    assert byid["bad"].tokens == []
+    # a prompt that fits but whose DECODE would overrun max_len must also be
+    # rejected up front — mid-decode it would crash the whole replica tick
+    assert byid["over"].error is not None and "max_len" in byid["over"].error
+    for rid in ("g1", "g2"):
+        assert byid[rid].error is None and len(byid[rid].tokens) == 2
+    assert eng.cm.n_active == 0
+
+
+def test_impossible_block_demand_rejected_not_stalled(params):
+    """Scheduler regression: a request whose worst-case block demand exceeds
+    what the pool can EVER provide is rejected with an explicit error at
+    submit instead of parking at the head of the queue forever."""
+    rng = np.random.default_rng(7)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=96, paged=True,
+                      block_size=16, num_blocks=5)      # 4 usable blocks
+    done = []
+    eng.on_complete = done.append
+    eng.submit(Request(request_id="big", session_key="s",
+                       prompt=_toks(rng, 70), max_new_tokens=20))  # needs 6
+    # the harder path: enqueued straight into the scheduler (bypassing
+    # engine.submit's up-front check) — admit() must pop it through to the
+    # engine's admission-time rejection instead of parking it forever
+    eng.scheduler.submit(Request(request_id="big2", session_key="s",
+                                 prompt=_toks(rng, 70), max_new_tokens=20))
+    eng.submit(Request(request_id="ok", session_key="s",
+                       prompt=_toks(rng, 8), max_new_tokens=2))
+    eng.run_until_drained()                   # would TimeoutError when stalled
+    byid = {r.request_id: r for r in done}
+    for rid in ("big", "big2"):
+        assert byid[rid].error is not None and "KV blocks" in byid[rid].error
+    assert byid["ok"].error is None and len(byid["ok"].tokens) == 2
+
+
+def test_begin_failure_requeues_in_order(params, monkeypatch):
+    """Engine regression: a begin() refusal (accounting drift) requeues the
+    request and everything admitted after it — order preserved — instead of
+    crashing the tick on an assert."""
+    rng = np.random.default_rng(8)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=64, paged=True,
+                      block_size=16)
+    real = eng.cm.begin
+    calls = {"n": 0}
+
+    def flaky(slot, prompt, max_new):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            eng.cm.release(slot)
+            return None
+        return real(slot, prompt, max_new)
+
+    monkeypatch.setattr(eng.cm, "begin", flaky)
+    done = []
+    eng.on_complete = done.append
+    for rid in ("r1", "r2"):
+        eng.submit(Request(request_id=rid, session_key="s",
+                           prompt=_toks(rng, 8), max_new_tokens=2))
+    eng.run_until_drained()
+    assert [r.request_id for r in done] == ["r1", "r2"]
+    assert calls["n"] == 3 and eng.cm.n_active == 0
+
+
+def test_decode_donates_pool_buffers(params):
+    """Perf regression: the jitted paged steps donate the pool operand (no
+    whole-pool copy per tick); the devstore entry always holds the live
+    leaves after publish()."""
+    rng = np.random.default_rng(9)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=32, paged=True,
+                      block_size=16)
+    before = jax.tree.leaves(eng.cm.pools)
+    eng.submit(Request(request_id="r", session_key="s", prompt=_toks(rng, 5),
+                       max_new_tokens=3))
+    eng.run_until_drained()
+    assert all(leaf.is_deleted() for leaf in before)
+    stored = eng.cm.devstore.get(eng.cm.kv_key)
+    assert all(a is b for a, b in zip(jax.tree.leaves(stored),
+                                      jax.tree.leaves(eng.cm.pools)))
+
+
 def test_supports_paged_gating():
     assert supports_paged(CFG)
     mamba = ModelConfig(name="m", family="ssm", n_layers=2, d_model=32,

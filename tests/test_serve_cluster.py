@@ -187,3 +187,22 @@ def test_batched_prefill_matches_single_prefill(params):
         firsts.append({r.tokens[0] for r in done})
         assert len(firsts[-1]) == 1               # identical rows, same token
     assert firsts[0] == firsts[1]
+
+
+def test_rejected_request_surfaces_error_to_clients(params):
+    """A request the engine refuses (here: prompt > max_len) must complete at
+    the store boundary — empty tokens at the normal out key plus the reason
+    under <request_id>/error — instead of silently looking like a zero-token
+    generation or hanging the drain."""
+    rng = np.random.default_rng(11)
+    with ServeCluster(CFG, params, n_replicas=2, n_slots=2, max_len=32,
+                      policy=DispatchPolicy.ROUND_ROBIN) as cluster:
+        cluster.submit("s", "good", _prompt(rng), max_new_tokens=2)
+        cluster.submit("s", "huge", rng.integers(0, 128, (40,)).astype(np.int32),
+                       max_new_tokens=2)
+        cluster.run_until_drained()
+        assert len(cluster.result("good")) == 2
+        assert cluster.error("good") is None
+        assert len(cluster.result("huge")) == 0
+        err = cluster.error("huge")
+        assert err is not None and "max_len" in err

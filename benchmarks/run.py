@@ -16,7 +16,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="substring filter on benchmark name")
+                    help="comma-separated substring filter on benchmark name")
     args = ap.parse_args()
 
     from . import fastpath, kv_store, pipelines, roofline, serve
@@ -32,6 +32,7 @@ def main() -> None:
         ("fig11_collision_detection", pipelines.bench_collision),
         ("serve_cluster_ttft_tpot", pipelines.bench_serve_cluster),
         ("serve_prefix_reuse", serve.bench_serve_prefix_reuse),
+        ("serve_mixed_tick", serve.bench_serve_mixed_tick),
         ("roofline_table", lambda out: roofline.table(out)),
     ]
 
@@ -39,8 +40,9 @@ def main() -> None:
         print(line, flush=True)
 
     failures = []
+    only = args.only.split(",") if args.only else None
     for name, fn in benches:
-        if args.only and args.only not in name:
+        if only and not any(sub in name for sub in only):
             continue
         print(f"# === {name} ===", flush=True)
         t0 = time.time()

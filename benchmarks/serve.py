@@ -1,14 +1,31 @@
-"""Serving-path benchmarks beyond the paper's figures: paged KV + prefix
-reuse on the multi-replica cluster.
+"""Serving-path benchmarks beyond the paper's figures: the unified
+token-budget tick on the paged KV / prefix-reuse fast path.
 
 ``serve_prefix_reuse``: multi-turn chat sessions over FIFO affinity — every
 turn's prompt extends the session's full history, so with the per-replica
 prefix trie each warm turn prefills only the suffix past the last cached
-block.  Reports TTFT p50/p99 per turn round, the token-level prefix hit
-rate, and the skipped-block count; asserts the fast-path invariants (one
-device→host sync per tick; warm turns reuse > 0 tokens and prefill strictly
-fewer than they carry).  Results land in BENCH_serve.json so the serving
-perf trajectory is tracked across PRs.
+block.  The jitted mixed step is warmed up BEFORE timing and the compile
+time is reported as its own field, so TTFT percentiles measure steady state
+instead of XLA compiles (the step's packed shape is fixed, so there is
+exactly ONE compile to exclude).  Reports TTFT p50/p99 per turn round, the
+token-level prefix hit rate, and the skipped-block count; asserts the
+fast-path invariants (one device→host sync per tick, ``host_syncs ==
+ticks``; warm turns reuse > 0 tokens and prefill strictly fewer than they
+carry).
+
+``serve_mixed_tick``: long prefills injected into an ACTIVE decode pool.
+With a bounded token budget the prompt spreads over budget-sized chunks that
+ride in each tick's remainder, so decoding sessions keep emitting one token
+per tick and the inter-token stall is bounded by the chunk budget.  The
+baseline is the SAME engine with a monolithic budget (the whole prompt packs
+into one tick) — i.e. the head-of-line behavior of the old phase-separated
+tick, where a long prefill takes the tick hostage.  Reports decode TPOT
+p50/p99 over the contention window for both; the chunked p99 must beat the
+monolithic p99 (asserted outside smoke mode).
+
+Set ``BENCH_SMOKE=1`` for a tiny-config, few-tick variant of both (CI runs
+this on every PR).  Results land in BENCH_serve.json so the serving perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -23,11 +40,40 @@ BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(__file__)),
                           "BENCH_serve.json")
 
 
+def _smoke() -> bool:
+    return os.environ.get("BENCH_SMOKE", "") == "1"
+
+
+def _write_results(key: str, results: dict, out) -> None:
+    """Merge one benchmark's results into BENCH_serve.json."""
+    data = {}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    if not all(isinstance(v, dict) and ("turns" in v or "chunked" in v
+                                        or "total" in v)
+               for v in data.values()):
+        data = {}                     # pre-PR3 flat schema: start fresh
+    data[key] = results
+    with open(BENCH_JSON, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    out(f"# wrote {BENCH_JSON}[{key}]")
+
+
+def _pct(xs, q):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))] if xs else float("nan")
+
+
 def bench_serve_prefix_reuse(out) -> dict:
     from repro.core.pools import DispatchPolicy
     from repro.models import init_params
     from repro.models.config import ModelConfig
     from repro.serving.cluster import ServeCluster
+    from repro.serving.engine import EngineStats
 
     cfg = ModelConfig(name="bench", family="dense", n_layers=2, d_model=64,
                       n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
@@ -35,12 +81,28 @@ def bench_serve_prefix_reuse(out) -> dict:
     params = init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
 
-    n_sessions, n_turns, block_size = 6, 4, 16
+    n_sessions, n_turns = (2, 2) if _smoke() else (6, 4)
+    block_size = 16
     new_tokens_per_turn, decode_budget = 24, 8
     results: dict = {"turns": []}
 
     with ServeCluster(cfg, params, n_replicas=2, n_slots=4, max_len=256,
                       policy=DispatchPolicy.FIFO, block_size=block_size) as c:
+        # Warm up the ONE fixed-shape jitted mixed step before timing, then
+        # reset stats: TTFT percentiles below are steady state and the
+        # compile cost is its own field.
+        t0 = time.monotonic()
+        c.submit("warmup", "w0", rng.integers(0, cfg.vocab_size,
+                                              (8,)).astype(np.int32),
+                 max_new_tokens=2)
+        c.run_until_drained()
+        compile_s = time.monotonic() - t0
+        for e in c.engines:
+            e.stats = EngineStats()
+        results["compile_s"] = compile_s
+        out(f"serve_prefix_reuse/compile,{compile_s*1e6:.1f},"
+            f"one_time_jit_cost")
+
         history = {f"s{i}": rng.integers(0, cfg.vocab_size,
                                          (new_tokens_per_turn,)).astype(np.int32)
                    for i in range(n_sessions)}
@@ -61,11 +123,10 @@ def bench_serve_prefix_reuse(out) -> dict:
                       for e in c.engines)
             prompt = sum(e.stats.prompt_tokens - marks[e][2]
                          for e in c.engines)
-            pct = lambda xs, q: xs[min(len(xs) - 1, int(q * len(xs)))]
             row = {
                 "turn": turn,
-                "ttft_p50_us": pct(ttft, 0.50) * 1e6,
-                "ttft_p99_us": pct(ttft, 0.99) * 1e6,
+                "ttft_p50_us": _pct(ttft, 0.50) * 1e6,
+                "ttft_p99_us": _pct(ttft, 0.99) * 1e6,
                 "prompt_tokens": prompt,
                 "prefix_hit_tokens": hit,
                 "hit_rate": hit / max(1, prompt),
@@ -83,19 +144,16 @@ def bench_serve_prefix_reuse(out) -> dict:
             prev_hits = hit
             # next turn: history grows by this turn's output + new user text
             for sess in history:
-                turn_out = []
-                for rid in (f"{sess}-t{turn}",):
-                    res = c.result(rid)
-                    assert res is not None
-                    turn_out.append(res)
+                res = c.result(f"{sess}-t{turn}")
+                assert res is not None
                 history[sess] = np.concatenate(
-                    [history[sess]] + [np.asarray(t, np.int32) for t in turn_out]
-                    + [rng.integers(0, cfg.vocab_size,
-                                    (new_tokens_per_turn,)).astype(np.int32)])
+                    [history[sess], np.asarray(res, np.int32),
+                     rng.integers(0, cfg.vocab_size,
+                                  (new_tokens_per_turn,)).astype(np.int32)])
 
         st = c.stats()
-        assert st["host_syncs"] == st["decode_ticks"] + st["prefill_batches"], \
-            "decode tick made more than one device→host transfer"
+        assert st["host_syncs"] == st["ticks"], \
+            "a unified tick made more than one device→host transfer"
         assert st["prefix_hit_tokens"] > 0, "no prefix reuse over warm turns"
         # strictly fewer prefill FLOPs than a cache-less engine would spend
         assert st["prefill_tokens"] < st["prompt_tokens"]
@@ -108,13 +166,96 @@ def bench_serve_prefix_reuse(out) -> dict:
             "ttft_p50_us": st["ttft_p50_s"] * 1e6,
             "ttft_p99_us": st["ttft_p99_s"] * 1e6,
             "blocks_in_use": st["blocks_in_use"],
+            "ticks": st["ticks"],
         }
     out(f"serve_prefix_reuse/total,{results['total']['ttft_p50_us']:.1f},"
         f"hit_rate={results['total']['hit_rate']:.2f} "
         f"prefill_tokens={results['total']['prefill_tokens']} "
         f"of_prompt_tokens={results['total']['prompt_tokens']}")
     out("serve_prefix_reuse/CLAIM warm-turns-skip-prefix-prefill,PASS,exact")
-    with open(BENCH_JSON, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True)
-    out(f"# wrote {BENCH_JSON}")
+    out("serve_prefix_reuse/CLAIM steady-state-ttft-excludes-compile,PASS,exact")
+    _write_results("serve_prefix_reuse", results, out)
+    return results
+
+
+def bench_serve_mixed_tick(out) -> dict:
+    from repro.models import init_params
+    from repro.models.config import ModelConfig
+    from repro.serving.engine import ServeEngine
+    from repro.serving.scheduler import Request
+
+    smoke = _smoke()
+    cfg = ModelConfig(name="bench-mixed", family="dense", n_layers=2,
+                      d_model=64 if smoke else 256, n_heads=4, n_kv_heads=2,
+                      d_ff=128 if smoke else 512, vocab_size=256,
+                      dtype="float32", q_chunk=32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_slots = 8
+    long_S = 96 if smoke else 384
+    max_len = 160 if smoke else 512
+    decode_new = 16 if smoke else 48
+    chunk_budget = 32 if smoke else 48
+    budgets = {"chunked": chunk_budget, "monolithic": long_S + n_slots}
+    results: dict = {}
+
+    for label, budget in budgets.items():
+        rng = np.random.default_rng(7)
+        eng = ServeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                          paged=True, block_size=16, token_budget=budget)
+        done = []
+        eng.on_complete = done.append
+        mk = lambda rid, S, n: Request(
+            request_id=rid, session_key=rid,
+            prompt=rng.integers(0, cfg.vocab_size, (S,)).astype(np.int32),
+            max_new_tokens=n)
+        # warm the (fixed-shape, compiles-once) step outside the timings
+        t0 = time.monotonic()
+        eng.submit(mk("warm", 8, 2))
+        eng.run_until_drained()
+        compile_s = time.monotonic() - t0
+        # steady decode pool: six chat sessions mid-generation
+        for i in range(6):
+            eng.submit(mk(f"chat{i}", 8, decode_new))
+        for _ in range(4):
+            eng.tick()
+        mark = len(eng.stats.tpot_s)
+        # inject two long prefills into the busy pool
+        for i in range(2):
+            eng.submit(mk(f"wall{i}", long_S, 4))
+        t0 = time.monotonic()
+        eng.run_until_drained()
+        wall_s = time.monotonic() - t0
+        tpot = eng.stats.tpot_s[mark:]
+        assert eng.stats.host_syncs == eng.stats.ticks
+        walls = [r for r in done if r.request_id.startswith("wall")]
+        assert len(walls) == 2 and all(r.error is None for r in done)
+        row = {
+            "token_budget": budget,
+            "compile_s": compile_s,
+            "tpot_p50_us": _pct(tpot, 0.50) * 1e6,
+            "tpot_p99_us": _pct(tpot, 0.99) * 1e6,
+            "wall_ttft_p99_us": _pct(
+                [r.first_token_s - r.arrived_s for r in walls], 0.99) * 1e6,
+            "prefill_chunks": eng.stats.prefill_chunks,
+            "ticks": eng.stats.ticks,
+            "wall_s": wall_s,
+        }
+        results[label] = row
+        out(f"serve_mixed_tick/{label},{row['tpot_p50_us']:.1f},"
+            f"tpot_p99_us={row['tpot_p99_us']:.1f} "
+            f"prefill_chunks={row['prefill_chunks']} ticks={row['ticks']}")
+
+    ratio = (results["monolithic"]["tpot_p99_us"]
+             / max(1e-9, results["chunked"]["tpot_p99_us"]))
+    results["stall_ratio_p99"] = ratio
+    out(f"serve_mixed_tick/stall_ratio,{ratio:.2f},"
+        f"monolithic_p99_over_chunked_p99")
+    if not smoke:
+        # the tentpole claim: bounding the chunk budget bounds the
+        # inter-token stall a concurrent long prefill can inflict
+        assert results["chunked"]["tpot_p99_us"] \
+            < results["monolithic"]["tpot_p99_us"], \
+            "chunked prefill must bound decode TPOT below the monolithic tick"
+        out("serve_mixed_tick/CLAIM chunked-tpot-beats-monolithic,PASS,exact")
+    _write_results("serve_mixed_tick", results, out)
     return results

@@ -58,7 +58,7 @@ def main() -> None:
               f"{st['prompt_tokens']} prompt tokens served from cached "
               f"blocks ({st['prefix_hits']} warm turns)")
         assert st["prefix_hit_tokens"] > 0, "warm turns must hit the trie"
-        assert st["host_syncs"] == st["decode_ticks"] + st["prefill_batches"]
+        assert st["host_syncs"] == st["ticks"]   # one sync per unified tick
 
     # ---- ROUND_ROBIN: independent requests, load spread evenly
     with ServeCluster(cfg, params, n_replicas=2, n_slots=4, max_len=64,
@@ -77,11 +77,11 @@ def main() -> None:
               f"p99 {st['ttft_p99_s']*1e3:.1f} ms (incl. jit compile)")
         print(f"       TPOT p50 {st['tpot_p50_s']*1e3:.1f} ms  "
               f"p99 {st['tpot_p99_s']*1e3:.1f} ms")
-        print(f"       host syncs {st['host_syncs']} = decode ticks "
-              f"{st['decode_ticks']} + prefill batches {st['prefill_batches']}")
+        print(f"       host syncs {st['host_syncs']} = unified ticks "
+              f"{st['ticks']} ({st['prefill_chunks']} prefill chunks packed)")
         assert st["per_replica_requests"] == [n // 2, n // 2]
         assert all(cluster.result(f"r{i}") is not None for i in range(n))
-        assert st["host_syncs"] == st["decode_ticks"] + st["prefill_batches"]
+        assert st["host_syncs"] == st["ticks"]
     print("OK")
 
 

@@ -29,6 +29,21 @@ copy of the cache.  Slot positions are implicit (logical block j covers
 absolute positions [j·bs, (j+1)·bs)), so causal masking doubles as validity
 masking: padded table entries (clamped to block 0) always sit beyond the
 query position.
+
+Ragged variant (``ragged_paged_attention_fwd``): the serving engine's unified
+token-budget tick packs prefill CHUNKS and decode rows into one fixed-shape
+token batch, so the query axis is tokens, not requests — several consecutive
+tokens may belong to one request while their neighbors belong to others.  A
+third scalar-prefetch operand ``row_ids`` maps packed token t to its
+request's row in the block table, so the index map gathers
+``table[row_ids[t], j]`` per TOKEN and each token streams exactly its own
+request's blocks.  Causality is per token (``kpos <= token_pos[t]``), which
+is simultaneously the causal intra-chunk mask (a chunk token sees earlier
+chunk tokens, written in this same dispatch), the cross-request isolation
+(different requests own disjoint physical blocks), and the pad-lane kill
+(pad tokens carry ``token_pos = -1`` so every position is masked and the
+zero-l guard emits exact zeros).  Single-token paged decode is the special
+case ``row_ids == arange(B)`` and is implemented that way.
 """
 from __future__ import annotations
 
@@ -131,11 +146,11 @@ def decode_attention_fwd(q, k_cache, v_cache, q_pos, cache_pos, *,
     return out.reshape(B, H, D)
 
 
-def _paged_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, scale: float,
-                  softcap: float | None, window: int | None,
-                  block_size: int, num_logical_blocks: int):
-    b = pl.program_id(0)
+def _ragged_kernel(rows_ref, bt_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float,
+                   softcap: float | None, window: int | None,
+                   block_size: int, num_logical_blocks: int):
+    t = pl.program_id(0)
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -151,10 +166,11 @@ def _paged_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
     # logical block j covers absolute positions [j*bs, (j+1)*bs): masking is
-    # positional, so clamped pad blocks (positions beyond qp) vanish here.
+    # positional, so clamped pad blocks (positions beyond qp) vanish here, as
+    # do pad tokens entirely (qp = -1 masks everything; l stays 0).
     kpos = j * block_size + jax.lax.broadcasted_iota(
         jnp.int32, (1, block_size), 1)                        # (1, bs)
-    qp = qpos_ref[b]
+    qp = qpos_ref[t]
     mask = kpos <= qp
     if window is not None:
         mask &= (qp - kpos) < window
@@ -162,7 +178,10 @@ def _paged_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
 
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
+    # explicit re-mask: when EVERY position is masked (a pad lane, qp = -1),
+    # s - m_new is NEG_INF - NEG_INF = 0 and exp would emit 1s; zeroing by
+    # mask keeps l at 0 so the finalize guard emits exact zeros.
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
     alpha = jnp.exp(m_prev - m_new)
     l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
     v = v_ref[...].astype(jnp.float32)
@@ -178,39 +197,51 @@ def _paged_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
-def paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, q_pos, *,
-                               scale: float, softcap: float | None,
-                               window: int | None, interpret: bool = False):
-    """q: (B,H,D); pools (N,bs,K,D); block_tables (B,nb) int32, -1 = unused;
-    q_pos (B,) absolute position of the query token."""
-    B, H, D = q.shape
+def ragged_paged_attention_fwd(q, k_pool, v_pool, block_tables, row_ids,
+                               token_pos, *, scale: float,
+                               softcap: float | None, window: int | None,
+                               interpret: bool = False):
+    """q: (T,H,D) packed tokens; pools (N,bs,K,D); block_tables (R,nb) int32,
+    -1 = unused; row_ids (T,) request row of each token (-1 = pad lane);
+    token_pos (T,) absolute position of each token (-1 = pad lane).
+
+    Grid (T, K, nb): the per-token row gather happens in the BlockSpec index
+    map — ``bt[rows[t], j]`` — so the DMA engine streams, for every packed
+    token, exactly the blocks of the request that token belongs to.  Pad
+    lanes (row -1 / pos -1) clamp to request row 0 / the null block and are
+    fully masked, producing exact zeros."""
+    T, H, D = q.shape
     N, bs, K, _ = k_pool.shape
     G = H // K
     nb = block_tables.shape[1]
     # -1 pads clamp to block 0 (the engine's reserved null block); their
-    # implicit positions j*bs+p exceed q_pos, so the causal mask kills them.
+    # implicit positions j*bs+p exceed token_pos, so the causal mask kills
+    # them.  Pad ROWS clamp to row 0; token_pos = -1 masks every position.
     bt = jnp.maximum(block_tables, 0).astype(jnp.int32)
+    rows = jnp.clip(row_ids, 0, block_tables.shape[0] - 1).astype(jnp.int32)
 
-    qh = q.reshape(B, K, G, D)
+    qh = q.reshape(T, K, G, D)
     kt = k_pool.transpose(0, 2, 1, 3)                         # (N,K,bs,D)
     vt = v_pool.transpose(0, 2, 1, 3)
 
-    kern = functools.partial(_paged_kernel, scale=scale, softcap=softcap,
+    kern = functools.partial(_ragged_kernel, scale=scale, softcap=softcap,
                              window=window, block_size=bs,
                              num_logical_blocks=nb)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,                                # bt, q_pos
-        grid=(B, K, nb),
+        num_scalar_prefetch=3,                                # rows, bt, qp
+        grid=(T, K, nb),
         in_specs=[
             pl.BlockSpec((None, None, G, D),
-                         lambda b, h, j, bt, qp: (b, h, 0, 0)),       # q
+                         lambda t, h, j, rows, bt, qp: (t, h, 0, 0)),  # q
             pl.BlockSpec((None, None, bs, D),
-                         lambda b, h, j, bt, qp: (bt[b, j], h, 0, 0)),  # k
+                         lambda t, h, j, rows, bt, qp:
+                         (bt[rows[t], j], h, 0, 0)),                   # k
             pl.BlockSpec((None, None, bs, D),
-                         lambda b, h, j, bt, qp: (bt[b, j], h, 0, 0)),  # v
+                         lambda t, h, j, rows, bt, qp:
+                         (bt[rows[t], j], h, 0, 0)),                   # v
         ],
         out_specs=pl.BlockSpec((None, None, G, D),
-                               lambda b, h, j, bt, qp: (b, h, 0, 0)),
+                               lambda t, h, j, rows, bt, qp: (t, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
@@ -219,7 +250,22 @@ def paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, q_pos, *,
     )
     out = pl.pallas_call(
         kern, grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, K, G, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((T, K, G, D), q.dtype),
         interpret=interpret,
-    )(bt, q_pos.astype(jnp.int32), qh, kt, vt)
-    return out.reshape(B, H, D)
+    )(rows, bt, token_pos.astype(jnp.int32), qh, kt, vt)
+    return out.reshape(T, H, D)
+
+
+def paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, q_pos, *,
+                               scale: float, softcap: float | None,
+                               window: int | None, interpret: bool = False):
+    """q: (B,H,D); pools (N,bs,K,D); block_tables (B,nb) int32, -1 = unused;
+    q_pos (B,) absolute position of the query token.
+
+    Single-token decode is the ragged kernel's degenerate packing: one token
+    per request, ``row_ids == arange(B)``."""
+    B = q.shape[0]
+    return ragged_paged_attention_fwd(
+        q, k_pool, v_pool, block_tables, jnp.arange(B, dtype=jnp.int32),
+        q_pos, scale=scale, softcap=softcap, window=window,
+        interpret=interpret)

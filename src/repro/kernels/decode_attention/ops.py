@@ -5,8 +5,10 @@ import functools
 
 import jax
 
-from .kernel import decode_attention_fwd, paged_decode_attention_fwd
-from .ref import decode_attention_ref, paged_decode_attention_ref
+from .kernel import (decode_attention_fwd, paged_decode_attention_fwd,
+                     ragged_paged_attention_fwd)
+from .ref import (decode_attention_ref, paged_decode_attention_ref,
+                  ragged_paged_attention_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
@@ -43,5 +45,31 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos, *,
                                       window=window, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "interpret"))
+def ragged_paged_attention(q, k_pool, v_pool, block_tables, row_ids,
+                           token_pos, *, window: int | None = None,
+                           softcap: float | None = None,
+                           scale: float | None = None,
+                           interpret: bool = False):
+    """Mixed prefill-chunk + decode attention over a paged KV pool.
+
+    q: (T,H,D) packed tokens; pools (num_blocks, block_size, K, D);
+    block_tables (R,nb) int32 physical block ids (-1 = unused); row_ids (T,)
+    request row of each packed token (-1 = pad lane); token_pos (T,) absolute
+    positions (-1 = pad lane).  One dispatch serves prefill chunks and decode
+    rows alike: every token streams its own request's blocks via a per-token
+    scalar-prefetched table gather and is causally masked at its own
+    position, so intra-chunk causality, cross-request isolation, and pad-lane
+    suppression are all the same mask."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    return ragged_paged_attention_fwd(q, k_pool, v_pool, block_tables,
+                                      row_ids, token_pos, scale=scale,
+                                      softcap=softcap, window=window,
+                                      interpret=interpret)
+
+
 __all__ = ["decode_attention", "decode_attention_ref",
-           "paged_decode_attention", "paged_decode_attention_ref"]
+           "paged_decode_attention", "paged_decode_attention_ref",
+           "ragged_paged_attention", "ragged_paged_attention_ref"]

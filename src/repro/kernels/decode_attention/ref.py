@@ -67,3 +67,26 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, q_pos, *,
     k, v, cache_pos = densify_pool(k_pool, v_pool, block_tables)
     return decode_attention_ref(q, k, v, q_pos, cache_pos, window=window,
                                 softcap=softcap, scale=scale)
+
+
+def ragged_paged_attention_ref(q, k_pool, v_pool, block_tables, row_ids,
+                               token_pos, *, window: int | None = None,
+                               softcap: float | None = None,
+                               scale: float | None = None):
+    """Oracle for the ragged kernel: expand the per-request block tables to
+    per-TOKEN tables through ``row_ids``, then reuse the paged oracle — each
+    packed token is a one-token "request" over its own request's blocks.
+
+    q: (T,H,D) packed tokens (prefill-chunk tokens and decode tokens mixed);
+    block_tables (R,nb) int32 (-1 = unused); row_ids (T,) request row per
+    token (-1 = pad); token_pos (T,) absolute positions (-1 = pad).  Pad
+    lanes return exact zeros, matching the kernel's zero-l guard."""
+    R = block_tables.shape[0]
+    rows = jnp.clip(row_ids, 0, R - 1)
+    bt_tok = jnp.where((jnp.asarray(row_ids) >= 0)[:, None],
+                       jnp.asarray(block_tables)[rows], -1)   # (T, nb)
+    out = paged_decode_attention_ref(q, k_pool, v_pool, bt_tok, token_pos,
+                                     window=window, softcap=softcap,
+                                     scale=scale)
+    valid = (jnp.asarray(token_pos) >= 0) & (jnp.asarray(row_ids) >= 0)
+    return jnp.where(valid[:, None, None], out, 0).astype(out.dtype)

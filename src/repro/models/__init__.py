@@ -1,9 +1,10 @@
 from .config import LayerSpec, ModelConfig, Segment
 from .lm import (cache_axes, decode_step, forward, init_decode_caches,
                  init_paged_pools, init_params, paged_decode_step,
-                 paged_prefill, param_axes, prefill, supports_paged)
+                 paged_mixed_step, paged_prefill, param_axes, prefill,
+                 supports_paged)
 
 __all__ = ["LayerSpec", "ModelConfig", "Segment", "cache_axes", "decode_step",
            "forward", "init_decode_caches", "init_paged_pools", "init_params",
-           "paged_decode_step", "paged_prefill", "param_axes", "prefill",
-           "supports_paged"]
+           "paged_decode_step", "paged_mixed_step", "paged_prefill",
+           "param_axes", "prefill", "supports_paged"]

@@ -126,6 +126,40 @@ def _attend_chunked(q, k, v, q_pos, k_pos, *, window, cap, scale, q_chunk):
     return out[:, :S]
 
 
+def _ragged_attend_chunked(q, kd, vd, k_pos, q_pos, rows, *, window, cap,
+                           scale, q_chunk):
+    """Packed-token attention over per-request densified caches, scanned in
+    token chunks so the (chunk, L, K, D) per-token KV gather — not the full
+    (T, L, K, D) expansion — is the largest buffer.
+
+    q: (T,H,D) packed tokens; kd/vd: (R,L,K,D) densified per request row;
+    k_pos: (R,L) absolute positions (-1 empty); q_pos (T,); rows (T,) request
+    row per token, already clamped to [0,R).  Pad lanes (q_pos = -1) mask
+    every position and emit garbage that callers ignore."""
+    T, H, D = q.shape
+    if T <= q_chunk:
+        return _attend(q[:, None], kd[rows], vd[rows], q_pos[:, None],
+                       k_pos[rows], window=window, cap=cap, scale=scale)[:, 0]
+    pad = (-T) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=-1)
+        rows = jnp.pad(rows, (0, pad))
+    n_chunks = q.shape[0] // q_chunk
+    qs = q.reshape(n_chunks, q_chunk, H, D)
+    ps = q_pos.reshape(n_chunks, q_chunk)
+    rs = rows.reshape(n_chunks, q_chunk)
+
+    def body(_, xs):
+        qi, pi, ri = xs
+        out = _attend(qi[:, None], kd[ri], vd[ri], pi[:, None], k_pos[ri],
+                      window=window, cap=cap, scale=scale)
+        return None, out[:, 0]
+
+    _, outs = jax.lax.scan(body, None, (qs, ps, rs))
+    return outs.reshape(n_chunks * q_chunk, H, D)[:T]
+
+
 # ------------------------------------------------------------------- cache
 def init_cache(cfg: ModelConfig, spec: LayerSpec, batch: int, max_len: int) -> dict:
     S_c = min(spec.window, max_len) if spec.window else max_len
@@ -182,6 +216,25 @@ def _paged_write(pool: dict, k_new, v_new, positions, block_table) -> dict:
     blk = jnp.take_along_axis(block_table, positions // bs, axis=1)
     blk = jnp.maximum(blk, 0)                                # (B, T)
     slot = positions % bs
+    return {"k": pool["k"].at[blk, slot].set(k_new.astype(pool["k"].dtype)),
+            "v": pool["v"].at[blk, slot].set(v_new.astype(pool["v"].dtype))}
+
+
+def _ragged_paged_write(pool: dict, k_new, v_new, positions, block_table,
+                        row_ids) -> dict:
+    """Scatter a PACKED token batch's K/V into pool blocks: token t lands in
+    its own request's block, resolved per token through ``row_ids``.
+
+    k_new/v_new: (T,K,D); positions (T,) absolute (-1 = pad); block_table
+    (R,nb); row_ids (T,) request row per token (-1 = pad).  Pad lanes clamp
+    to block 0 (the reserved null block) and scribble harmlessly there."""
+    bs = pool["k"].shape[1]
+    rows = jnp.clip(row_ids, 0, block_table.shape[0] - 1)
+    posc = jnp.maximum(positions, 0)
+    blk = block_table[rows, posc // bs]                      # (T,)
+    valid = (row_ids >= 0) & (positions >= 0)
+    blk = jnp.where(valid, jnp.maximum(blk, 0), 0)
+    slot = jnp.where(valid, posc % bs, 0)
     return {"k": pool["k"].at[blk, slot].set(k_new.astype(pool["k"].dtype)),
             "v": pool["v"].at[blk, slot].set(v_new.astype(pool["v"].dtype))}
 
@@ -252,24 +305,52 @@ def prefill_cache(params: dict, x: jax.Array, positions: jax.Array, *,
 
 def paged_attention(params: dict, x: jax.Array, positions: jax.Array, *,
                     cfg: ModelConfig, spec: LayerSpec, pool: dict,
-                    block_table: jax.Array) -> tuple[jax.Array, dict]:
+                    block_table: jax.Array,
+                    row_ids: jax.Array | None = None
+                    ) -> tuple[jax.Array, dict]:
     """Attention against the paged KV pool: write x's K/V into this request's
     blocks, then attend over everything the block table maps — which includes
     any prefix blocks shared with other requests.
 
-    Serves both roles of the paged fast path:
+    Batched mode (``row_ids is None``, x row b ↔ block_table row b):
     - suffix prefill (T = S - reused_len): tokens enter at positions starting
       past the reused prefix and attend to the cached prefix KV for free;
     - decode (T = 1): the Pallas block-gather kernel when cfg.attn_backend is
       pallas/pallas_interpret, else an XLA gather + masked softmax.
+
+    Ragged mode (``row_ids`` given): x is ONE packed row (B = 1) of mixed
+    prefill-chunk and decode tokens — the engine's unified token-budget tick.
+    Token t belongs to request row ``row_ids[t]`` of the block table (-1 =
+    pad lane); all K/V is written first, then every token attends causally at
+    its own position, so a chunk token sees its same-dispatch predecessors
+    and any same-tick sibling's shared prefix blocks, while pad lanes scribble
+    only the null block.
     """
     B, T, _ = x.shape
     K, D = cfg.n_kv_heads, cfg.head_dim
     q, k, v = _qkv(params, x, positions, cfg=cfg, spec=spec)
     scale = D ** -0.5
     cap = cfg.attn_logit_softcap
-    pool = _paged_write(pool, k, v, positions, block_table)
     backend = cfg.attn_backend
+    if row_ids is not None:
+        pool = _ragged_paged_write(pool, k[0], v[0], positions[0],
+                                   block_table, row_ids)
+        if backend in ("pallas", "pallas_interpret"):
+            from repro.kernels.decode_attention import ops as da_ops
+            out = da_ops.ragged_paged_attention(
+                q[0], pool["k"], pool["v"], block_table, row_ids,
+                positions[0], window=spec.window, softcap=cap, scale=scale,
+                interpret=(backend == "pallas_interpret"))[None]
+        else:
+            from repro.kernels.decode_attention.ref import densify_pool
+            kd, vd, kpos = densify_pool(pool["k"], pool["v"], block_table)
+            rows = jnp.clip(row_ids, 0, block_table.shape[0] - 1)
+            out = _ragged_attend_chunked(
+                q[0], kd, vd, kpos, positions[0], rows, window=spec.window,
+                cap=cap, scale=scale, q_chunk=cfg.q_chunk)[None]
+        y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+        return y, pool
+    pool = _paged_write(pool, k, v, positions, block_table)
     if T == 1 and backend in ("pallas", "pallas_interpret"):
         from repro.kernels.decode_attention import ops as da_ops
         out = da_ops.paged_decode_attention(

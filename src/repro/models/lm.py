@@ -159,12 +159,13 @@ def _barrier(y, cfg: ModelConfig):
 
 def _apply_block(block_params, x, positions, *, cfg: ModelConfig,
                  spec: LayerSpec, cache, shared_params, embeds0, mode: str,
-                 block_table=None):
+                 block_table=None, row_ids=None):
     """One layer. Returns (x, new_cache, aux).
 
     With ``block_table`` set, ``cache`` is the layer's slice of the paged KV
-    pool and attention goes through the paged path (suffix prefill or paged
-    decode); only pure-attention layer kinds support it (see supports_paged).
+    pool and attention goes through the paged path (suffix prefill, paged
+    decode, or — with ``row_ids`` — the packed ragged mixed step); only
+    pure-attention layer kinds support it (see supports_paged).
     """
     aux = jnp.zeros((), jnp.float32)
     if block_table is not None and spec.kind not in ("attn_mlp", "attn_moe"):
@@ -197,7 +198,7 @@ def _apply_block(block_params, x, positions, *, cfg: ModelConfig,
     if block_table is not None:
         y, new_cache = attn_mod.paged_attention(
             block_params["attn"], h, positions, cfg=cfg, spec=spec,
-            pool=cache, block_table=block_table)
+            pool=cache, block_table=block_table, row_ids=row_ids)
     elif mode == "prefill":
         y, new_cache = attn_mod.prefill_cache(
             block_params["attn"], h, positions, cfg=cfg, spec=spec,
@@ -219,13 +220,16 @@ def _apply_block(block_params, x, positions, *, cfg: ModelConfig,
 
 
 def _run_segment(seg_params, x, positions, *, cfg: ModelConfig, seg: Segment,
-                 caches, shared_params, embeds0, mode: str, block_table=None):
+                 caches, shared_params, embeds0, mode: str, block_table=None,
+                 row_ids=None):
     """Scan over the segment's `repeat` axis.
 
     caches: tuple per pattern position of stacked (R,...) cache trees, or
     None (train/score).  block_table (paged serving) is one (B,nb) mapping
     shared by every layer — each layer owns its own pool slice but the
-    logical→physical block mapping is per-request, not per-layer.
+    logical→physical block mapping is per-request, not per-layer.  row_ids
+    (packed ragged step) maps each token of the single packed row to its
+    request's block-table row; it too is layer-invariant.
     Returns (x, aux_sum, new_caches|None).
     """
     with_cache = caches is not None
@@ -240,7 +244,8 @@ def _run_segment(seg_params, x, positions, *, cfg: ModelConfig, seg: Segment,
                                         spec=spec, cache=c_i,
                                         shared_params=shared_params,
                                         embeds0=embeds0, mode=mode,
-                                        block_table=block_table)
+                                        block_table=block_table,
+                                        row_ids=row_ids)
             aux = aux + aux_i
             new_caches.append(nc if with_cache else jnp.zeros((), jnp.int8))
         return (x, aux), tuple(new_caches)
@@ -389,6 +394,39 @@ def paged_prefill(params, pools, block_tables, inputs, positions,
         new_pools.append(np_)
     logits = _head(params, x[:, -1:, :], cfg)
     return logits[:, 0, :], tuple(new_pools)
+
+
+def paged_mixed_step(params, pools, block_tables, tokens, positions, row_ids,
+                     sample_idx, cfg: ModelConfig):
+    """ONE fixed-shape step over a packed ragged token batch: prefill chunks
+    and decode rows share the dispatch (the serving engine's unified
+    token-budget tick).
+
+    tokens (T,) int32 packed tokens; positions (T,) absolute positions (-1 =
+    pad lane); row_ids (T,) block-table row per token (-1 = pad);
+    block_tables (R, nb); sample_idx (R,) the packed index each request row
+    samples from — its decode token, or the final token of the prefill chunk
+    that completed its prompt (rows with no boundary this tick point anywhere
+    and their logits are ignored host-side).
+
+    Every layer writes ALL packed K/V before attending, so a chunk token
+    sees its same-dispatch predecessors AND any same-tick sibling's shared
+    prefix blocks; the head runs only on the R gathered boundary tokens, not
+    the full packed row.  Returns (logits (R, V), new pools)."""
+    x = _embed_inputs(params, tokens[None], cfg)              # (1, T, d)
+    embeds0 = x
+    new_pools = []
+    for seg, seg_params, seg_pools in zip(cfg.layout(), params["segments"],
+                                          pools):
+        x, _, np_ = _run_segment(seg_params, x, positions[None], cfg=cfg,
+                                 seg=seg, caches=seg_pools,
+                                 shared_params=params.get("shared_attn"),
+                                 embeds0=embeds0, mode="mixed",
+                                 block_table=block_tables, row_ids=row_ids)
+        new_pools.append(np_)
+    xb = jnp.take(x[0], sample_idx, axis=0)                   # (R, d)
+    logits = _head(params, xb[None], cfg)
+    return logits[0], tuple(new_pools)
 
 
 def paged_decode_step(params, pools, block_tables, inputs, positions,

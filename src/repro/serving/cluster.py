@@ -22,8 +22,12 @@ Request keys: ``/serve/<model>/req/<session>/<request_id>``; payloads are
 small dicts (prompt + decode budget) — the request moves to the weights, the
 weights never move (§2 data/compute collocation).
 
-The decode loop itself is the overhauled engine tick: batched prefill
-admission, masked fused decode, one device→host transfer per tick.
+The decode loop itself is the engine's unified token-budget tick (paged
+models): decode rows and chunked prefills packed into ONE fixed-shape jitted
+mixed step per tick, one device→host transfer per tick
+(``host_syncs == ticks``).  Dense (SSM/hybrid/embeds) replicas keep the
+phase-separated discipline: batched prefill admission + masked fused decode
+(``host_syncs == decode_ticks + prefill_batches``).
 """
 from __future__ import annotations
 
@@ -68,7 +72,8 @@ class ServeCluster:
                  model_name: str | None = None,
                  temperature: float = 0.0, paged: bool | None = None,
                  block_size: int = 16, num_blocks: int | None = None,
-                 prefix_cache: bool = True) -> None:
+                 prefix_cache: bool = True,
+                 token_budget: int | None = None) -> None:
         self.cfg = cfg
         self.policy = policy
         name = model_name or cfg.name
@@ -101,17 +106,22 @@ class ServeCluster:
             if self.paged:
                 kw.update(block_size=block_size, num_blocks=num_blocks,
                           prefix_cache=prefix_cache, devstore=self.kv_store,
-                          kv_key=f"/kv/replica{r}/pool")
+                          kv_key=f"/kv/replica{r}/pool",
+                          token_budget=token_budget)
             self.engines.append(ServeEngine(
                 cfg, params, n_slots=n_slots, max_len=max_len,
                 temperature=temperature, scheduler=Scheduler(n_replicas=1),
                 on_complete=self._on_complete, seed_offset=r, **kw))
         # Collocated replicas run identical programs: share the jitted
-        # callables so each (batch, prompt-length) bucket compiles once per
-        # cluster, not once per replica.
+        # callables so each program compiles once per cluster, not once per
+        # replica (the paged mixed step has exactly ONE program — its packed
+        # shape is fixed at token_budget).
         for eng in self.engines[1:]:
-            eng._prefill = self.engines[0]._prefill
-            eng._step = self.engines[0]._step
+            if self.paged:
+                eng._mixed = self.engines[0]._mixed
+            else:
+                eng._prefill = self.engines[0]._prefill
+                eng._step = self.engines[0]._step
         for r in range(n_replicas):
             handle = LambdaHandle(
                 name=f"serve-replica-{r}", prefix=self.req_prefix,
@@ -181,8 +191,7 @@ class ServeCluster:
 
     # -------------------------------------------------------------- driver
     def _idle(self) -> bool:
-        return all(eng.scheduler.pending(eng.replica_id) == 0 and not eng.live
-                   for eng in self.engines)
+        return all(eng.idle() for eng in self.engines)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> None:
         """Tick every busy replica until all submitted requests completed.
@@ -195,7 +204,7 @@ class ServeCluster:
         for _ in range(max_ticks):
             busy = False
             for eng in self.engines:
-                if eng.scheduler.pending(eng.replica_id) or eng.live:
+                if not eng.idle():
                     eng.tick()
                     busy = True
             if not busy:
@@ -221,8 +230,10 @@ class ServeCluster:
             "tokens_out": sum(e.stats.tokens_out for e in self.engines),
             "per_replica_requests": [e.stats.prefills for e in self.engines],
             "host_syncs": sum(e.stats.host_syncs for e in self.engines),
+            "ticks": sum(e.stats.ticks for e in self.engines),
             "decode_ticks": sum(e.stats.decode_ticks for e in self.engines),
             "prefill_batches": sum(e.stats.prefill_batches for e in self.engines),
+            "prefill_chunks": sum(e.stats.prefill_chunks for e in self.engines),
             "prompt_tokens": sum(e.stats.prompt_tokens for e in self.engines),
             "prefill_tokens": sum(e.stats.prefill_tokens for e in self.engines),
             "prefix_hit_tokens": sum(e.stats.prefix_hit_tokens

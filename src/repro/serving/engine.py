@@ -5,33 +5,50 @@ One engine replica = one DFG vertex (a lambda bound to /serve/<name>) whose
 replica's device store — data/compute collocation: requests (small objects)
 move to the weights (the largest dependency), never the reverse (§2, §3.5).
 
-Continuous batching: a fixed pool of KV slots; each engine tick decodes all
-active slots in ONE jitted step (the fast path — no host round-trips between
-stages), then admits waiting prefills into freed slots.
+Unified token-budget tick (paged mode — the default for pure-attention token
+models, see ``models.supports_paged``)
+--------------------------------------------------------------------------
+Every tick is ONE fixed-shape jitted mixed step.  The scheduler admits work
+against a per-tick TOKEN budget: each active decode row costs 1 token, and
+waiting prefills are split into chunks that fill the remainder — a long
+prompt spreads over several ticks instead of stalling every decoding session
+behind it (the head-of-line effect the paper's fast path exists to kill; the
+inter-token stall is bounded by the chunk budget).  The admitted tokens are
+packed into a single ragged batch — per-token absolute positions and request
+row ids — and a ragged paged-attention step (kernels/decode_attention)
+computes prefill chunks and decode rows in the SAME dispatch against the
+shared block pool: all packed K/V is written before any packed token reads,
+so intra-chunk causality, decode, and intra-batch prefix sharing (a
+same-tick sibling attending to a chunk's just-written prefix blocks) are all
+one causal mask.
 
-Fast-path discipline inside the tick:
+Fast-path discipline of the unified tick:
 
-- **Batched prefill admission** — requests admitted in the same tick are
-  batched over contiguous same-shape runs (admission order preserved) and
-  each run executes ONE jitted prefill with B=k (no padding, so the path is
-  safe for ring caches and SSM state alike); each row is spliced into its
-  KV slot device-side.
-- **Masked decode** — sampling is fused into the jitted decode step and
-  inactive slots are masked there, so garbage rows never leak into
-  ``_last_tokens`` and the host sees a single ready-to-read token vector.
-- **One device→host transfer per tick** — the decode step's new tokens are
-  pulled once via ``np.asarray`` (``stats.host_syncs`` counts every pull;
-  one per decode tick plus one per prefill group, never per slot).
+- **Fixed shapes, one compile** — the packed batch is always exactly
+  ``token_budget`` tokens and the block-table operand is always
+  (n_slots, max_blocks), so the step compiles ONCE for the engine's
+  lifetime: no per-prompt-length (or per-suffix-length) recompiles, no
+  cold-turn TTFT tail from XLA.
+- **Fused boundary sampling** — the head + sampler run inside the step on
+  one gathered boundary token per slot (its decode token, or the final
+  token of the chunk that completed its prompt), so the host never sees
+  logits, only an (n_slots,) token vector.
+- **One device→host transfer per tick** — that vector is pulled once via
+  ``np.asarray``; ``stats.host_syncs == stats.ticks`` is THE invariant
+  (``_to_host`` counts every pull; an idle tick — nothing live, nothing
+  admissible — dispatches nothing and does not count as a tick).
 
-Paged mode (default for pure-attention token models, see
-``models.supports_paged``): KV lives in a global block pool with per-request
-block tables and a per-replica prefix cache (kvcache.PagedCacheManager).
-Admission matches each prompt against the trie of cached token blocks and
-prefills ONLY the suffix past the last matched block — the reused prefix's
-KV is attended to through the block table without being recomputed
-(``stats.prefix_hit_tokens`` counts the skipped tokens, so warm multi-turn
-sessions show strictly fewer prefill FLOPs).  Suffix-length grouping
-replaces full-prompt-shape grouping; the tick discipline above is unchanged.
+Prefix reuse: admission matches each prompt against the per-replica trie of
+cached token blocks and prefills ONLY the suffix past the last matched block
+(``stats.prefix_hit_tokens``).  Chunk-granularity trie commit
+(kvcache.commit_prefill_progress) extends that to SAME-TICK sharing: two
+same-prefix requests admitted in one tick share blocks instead of both
+prefilling the prefix.
+
+Dense mode (SSM/hybrid/embeds configs, ``supports_paged == False``) keeps
+the phase-separated discipline: batched equal-length prefill admission (one
+jitted prefill per contiguous same-shape run), masked fused decode+sample,
+and ``host_syncs == decode_ticks + prefill_batches``.
 """
 from __future__ import annotations
 
@@ -43,8 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import (decode_step, paged_decode_step, paged_prefill,
-                          prefill, supports_paged)
+from repro.models import decode_step, paged_mixed_step, prefill, supports_paged
 from repro.models.config import ModelConfig
 
 from .kvcache import CacheManager, PagedCacheManager
@@ -53,17 +69,18 @@ from .scheduler import Request, Scheduler
 
 @dataclass
 class EngineStats:
-    ticks: int = 0
+    ticks: int = 0                 # dispatched steps (paged) / tick() calls (dense)
     tokens_out: int = 0
     prefills: int = 0
-    prefill_batches: int = 0                       # jitted prefill dispatches
-    decode_ticks: int = 0                          # ticks that ran a decode
-    host_syncs: int = 0                            # device→host transfers
-    prompt_tokens: int = 0                         # total prompt tokens seen
-    prefill_tokens: int = 0                        # tokens actually prefilled
-    prefix_hit_tokens: int = 0                     # tokens reused from cache
-    prefix_hits: int = 0                           # requests with a hit
-    blocks_in_use: int = 0                         # gauge, sampled per tick
+    prefill_batches: int = 0       # dense: jitted prefill dispatches (paged: 0)
+    prefill_chunks: int = 0        # paged: prompt chunks packed into mixed steps
+    decode_ticks: int = 0          # ticks that carried >= 1 decode row
+    host_syncs: int = 0            # device→host transfers
+    prompt_tokens: int = 0         # total prompt tokens seen
+    prefill_tokens: int = 0        # tokens actually prefilled
+    prefix_hit_tokens: int = 0     # tokens reused from cache
+    prefix_hits: int = 0           # requests with a hit
+    blocks_in_use: int = 0         # gauge, sampled per tick
     ttft_s: list = field(default_factory=list)     # time to first token
     tpot_s: list = field(default_factory=list)     # time per output token
 
@@ -76,7 +93,8 @@ class ServeEngine:
                  seed_offset: int | None = None, paged: bool | None = None,
                  block_size: int = 16, num_blocks: int | None = None,
                  prefix_cache: bool = True, devstore=None,
-                 kv_key: str | None = None) -> None:
+                 kv_key: str | None = None,
+                 token_budget: int | None = None) -> None:
         self.cfg = cfg
         self.params = params
         self.paged = supports_paged(cfg) if paged is None else paged
@@ -87,18 +105,32 @@ class ServeEngine:
                 cfg, n_slots, max_len, block_size=block_size,
                 num_blocks=num_blocks, prefix_cache=prefix_cache,
                 devstore=devstore, kv_key=kv_key)
+            self.token_budget = (token_budget if token_budget is not None
+                                 else max(32, 2 * n_slots))
+            if self.token_budget < n_slots:
+                raise ValueError(
+                    f"token_budget={self.token_budget} < n_slots={n_slots}: "
+                    f"every live decode row costs one token per tick, so a "
+                    f"smaller budget would starve decodes")
         else:
             self.cm = CacheManager(cfg, n_slots, max_len)
+            self.token_budget = None
         self.scheduler = scheduler or Scheduler(n_replicas=1)
         self.replica_id = replica_id
         self.temperature = temperature
         self.on_complete = on_complete
         self.stats = EngineStats()
-        self.live: dict[int, Request] = {}
-        self._last_tokens = jnp.zeros((n_slots,), jnp.int32)
+        self.live: dict[int, Request] = {}         # slot → decoding request
+        self.prefilling: dict[int, Request] = {}   # slot → mid-prompt request
+        if self.paged:
+            # host-side last emitted token per slot: the mixed tick composes
+            # its packed batch on host, so no device token vector is needed
+            self._last_host = np.zeros((n_slots,), np.int64)
+        else:
+            self._last_tokens = jnp.zeros((n_slots,), jnp.int32)
         # Sampling seed stream: one fresh seed per jitted dispatch, offset by
-        # replica so same-tick prefill groups / decode steps / sibling
-        # replicas never share a PRNG key.
+        # replica so same-tick dispatches / sibling replicas never share a
+        # PRNG key.
         self._seed_base = (seed_offset if seed_offset is not None
                            else replica_id) * 1_000_003
         self._dispatches = 0
@@ -111,15 +143,23 @@ class ServeEngine:
             key = jax.random.PRNGKey(seed)
             return jax.random.categorical(key, logits / temp).astype(jnp.int32)
 
+        # Paged mode donates the pool operand: the step scatters into every
+        # layer's pool leaf, and without donation XLA must copy the whole
+        # global block pool ((num_blocks, block_size, K, D) per layer) on
+        # every dispatch — at realistic pool sizes that copy negates the
+        # paging win.  Each dispatch replaces ``cm.pools`` with the returned
+        # tree and ``publish()`` re-installs the fresh leaves.  Discipline:
+        # between a dispatch and its publish() the devstore's /kv entry
+        # aliases the donated (deleted) buffers, so KV reads through the
+        # store must come from the tick thread (the engine's one-driver
+        # model), never concurrently from another thread.
         if self.paged:
-            def _prefill_step(p, pools, bt, toks, pos, seed):
-                logits, pools = paged_prefill(p, pools, bt, toks, pos, cfg)
+            def _mixed(p, pools, bt, toks, pos, rows, sample_idx, seed):
+                logits, pools = paged_mixed_step(p, pools, bt, toks, pos,
+                                                 rows, sample_idx, cfg)
                 return _sample(logits, seed), pools
 
-            def _decode_tick(p, pools, bt, toks, pos, active, seed):
-                logits, pools = paged_decode_step(p, pools, bt, toks, pos, cfg)
-                sampled = _sample(logits, seed)
-                return jnp.where(active, sampled, toks), pools
+            self._mixed = jax.jit(_mixed, donate_argnums=(1,))
         else:
             def _prefill_step(p, toks, pos, seed):
                 logits, caches = prefill(p, toks, pos, cfg, max_len=max_len)
@@ -132,28 +172,17 @@ class ServeEngine:
                 # rows never feed garbage back into the next step
                 return jnp.where(active, sampled, toks), new_caches
 
-        # Paged mode donates the pool operand: decode scatters into every
-        # layer's pool leaf, and without donation XLA must copy the whole
-        # global block pool ((num_blocks, block_size, K, D) per layer) on
-        # every dispatch — at realistic pool sizes that copy negates the
-        # paging win.  Each dispatch replaces ``cm.pools`` with the returned
-        # tree and ``publish()`` re-installs the fresh leaves.  Discipline:
-        # between a dispatch and its publish() the devstore's /kv entry
-        # aliases the donated (deleted) buffers, so KV reads through the
-        # store must come from the tick thread (the engine's one-driver
-        # model), never concurrently from another thread.
-        donate = (1,) if self.paged else ()
-        self._prefill = jax.jit(_prefill_step, donate_argnums=donate)
-        self._step = jax.jit(_decode_tick, donate_argnums=donate)
+            self._prefill = jax.jit(_prefill_step)
+            self._step = jax.jit(_decode_tick)
 
     # ------------------------------------------------------------- client
     def submit(self, req: Request) -> None:
         """Enqueue a request, or reject it up front through the completion
         path (``req.error`` set, ``on_complete`` fired, nothing enqueued)
         when it could never be served: an oversized request must not blow up
-        mid-admission batch, and one whose worst-case block demand exceeds
-        what the pool can EVER provide must not park at the head of the
-        queue forever."""
+        mid-admission, and one whose worst-case block demand exceeds what the
+        pool can EVER provide must not park at the head of the queue
+        forever."""
         req.prompt = self._norm_prompt(req.prompt)   # normalize ONCE: every
         err = self._validate(req)                    # later pass is a no-op
         if err is not None:
@@ -211,20 +240,14 @@ class ServeEngine:
         S = len(self._norm_prompt(req.prompt))
         return self.cm.block_cost(S, req.max_new_tokens)
 
-    def _admit(self) -> None:
-        free = self.cm.n_slots - self.cm.n_active
-        if self.paged:
-            reqs = self.scheduler.admit(
-                self.replica_id, free,
-                free_blocks=self.cm.available_for_admission(),
-                block_cost=self._block_cost,
-                max_blocks=self.cm.num_blocks - 1)
-            self._admit_paged(reqs)
-        else:
-            reqs = self.scheduler.admit(self.replica_id, free)
-            self._admit_dense(reqs)
+    def idle(self) -> bool:
+        return (self.scheduler.pending(self.replica_id) == 0
+                and not self.live and not self.prefilling)
 
-    def _admit_dense(self, reqs: list[Request]) -> None:
+    # ==================================================== dense admission
+    def _admit_dense(self) -> None:
+        free = self.cm.n_slots - self.cm.n_active
+        reqs = self.scheduler.admit(self.replica_id, free)
         if not reqs:
             return
         # Batched multi-request prefill: batch CONTIGUOUS same-shape runs
@@ -257,72 +280,22 @@ class ServeEngine:
                 self.stats.prefill_tokens += S
                 self._finish_admission(req, slot, int(host_toks[row]), now)
 
-    def _admit_paged(self, reqs: list[Request]) -> None:
-        if not reqs:
-            return
-        # Same contiguous-run batching, but grouped by SUFFIX length: rows
-        # with different prompt lengths batch together as long as the token
-        # count left after prefix reuse matches (positions are per-row).
-        groups: list[tuple[int, list[tuple[Request, np.ndarray, int]]]] = []
-        for i, req in enumerate(reqs):
-            err = self._validate(req)
-            if err is not None:
-                # unservable request enqueued behind submit()'s back (e.g.
-                # straight into the scheduler): fail it alone, keep the batch
-                self._reject(req, err)
-                continue
-            p = self._norm_prompt(req.prompt)
-            slot = self.cm.acquire(req.request_id)
-            seq = (self.cm.begin(slot, p, req.max_new_tokens)
-                   if slot is not None else None)
-            if seq is None:
-                # slot/block accounting drift (begin released the slot): put
-                # this and every not-yet-begun request back at the HEAD of
-                # the queue in order — admitting later arrivals now would
-                # reorder a FIFO session's turns — and retry next tick
-                for r in reversed(reqs[i:]):
-                    self.scheduler.requeue(self.replica_id, r)
-                break
-            suffix_len = len(p) - seq.reused
-            self.stats.prompt_tokens += len(p)
-            self.stats.prefill_tokens += suffix_len
-            self.stats.prefix_hit_tokens += seq.reused
-            if seq.reused:
-                self.stats.prefix_hits += 1
-            if groups and groups[-1][0] == suffix_len:
-                groups[-1][1].append((req, p, slot))
-            else:
-                groups.append((suffix_len, [(req, p, slot)]))
-        for suffix_len, group in groups:
-            rows = [slot for _, _, slot in group]
-            starts = [self.cm.slots[s].reused for s in rows]
-            prompts = jnp.asarray(np.stack(
-                [p[L:] for (_, p, _), L in zip(group, starts)]))
-            pos = jnp.asarray(np.stack(
-                [L + np.arange(suffix_len, dtype=np.int32) for L in starts]))
-            bt = jnp.asarray(self.cm.block_tables(rows))
-            toks, pools = self._prefill(self.params, self.cm.pools, bt,
-                                        prompts, pos, self._next_seed())
-            self.cm.pools = pools
-            host_toks = self._to_host(toks)            # one sync per group
-            self.stats.prefill_batches += 1
-            now = time.monotonic()
-            for row, (req, p, slot) in enumerate(group):
-                # prefill K/V for this group is committed before any LATER
-                # group reads the pool, so its blocks are safe to share now
-                self.cm.commit_prompt(slot)
-                self._finish_admission(req, slot, int(host_toks[row]), now)
-        self.cm.publish()
-
     def _finish_admission(self, req: Request, slot: int, tok: int,
                           now: float) -> None:
+        self._last_tokens = self._last_tokens.at[slot].set(tok)
+        self._emit_first_token(req, slot, tok, now)
+
+    def _emit_first_token(self, req: Request, slot: int, tok: int,
+                          now: float) -> None:
+        """First-token bookkeeping shared by BOTH admission paths (dense
+        batched prefill, mixed tick's finished chunks), so TTFT/prefill
+        accounting can never drift between them."""
         req.slot = slot
         req.tokens.append(tok)
         req.first_token_s = now
         self.stats.ttft_s.append(now - req.arrived_s)
         self.stats.prefills += 1
         self.stats.tokens_out += 1
-        self._last_tokens = self._last_tokens.at[slot].set(tok)
         if len(req.tokens) >= req.max_new_tokens:
             self._release_slot(slot, req)              # done at first token
             self._complete(req)
@@ -340,28 +313,158 @@ class ServeEngine:
         if self.on_complete is not None:
             self.on_complete(req)
 
-    def tick(self) -> int:
-        """One engine step: admit prefills, decode all active slots."""
-        self._admit()
+    # ================================================== unified paged tick
+    def _pack_chunk(self, slot: int, toks: np.ndarray, pos: np.ndarray,
+                    rows: np.ndarray, sample_idx: np.ndarray, n: int,
+                    finished: list[int]) -> int:
+        """Pack the next prompt chunk of ``slot`` into lanes [n, n+take) —
+        at most the budget remainder — and commit newly covered full blocks
+        to the trie so same-tick later admissions can share them."""
+        seq = self.cm.slots[slot]
+        take = min(self.token_budget - n, len(seq.prompt) - seq.prefill_pos)
+        if take <= 0:
+            return n
+        start = seq.prefill_pos
+        toks[n:n + take] = seq.prompt[start:start + take]
+        pos[n:n + take] = np.arange(start, start + take, dtype=np.int32)
+        rows[n:n + take] = slot
+        n += take
+        self.stats.prefill_tokens += take
+        self.stats.prefill_chunks += 1
+        if self.cm.commit_prefill_progress(slot, start + take):
+            sample_idx[slot] = n - 1       # boundary: the last prompt token
+            finished.append(slot)
+        return n
+
+    def _admit_mixed(self, toks: np.ndarray, pos: np.ndarray,
+                     rows: np.ndarray, sample_idx: np.ndarray, n: int,
+                     finished: list[int]) -> int:
+        """Admit queue heads one at a time while budget and slots remain;
+        each admission immediately packs its first chunk, so the per-token
+        budget — not a request count — bounds this tick's prefill work."""
+        free = self.cm.n_slots - self.cm.n_active
+        while n < self.token_budget and free > 0:
+            req = self.scheduler.admit_one(
+                self.replica_id, free_slots=free,
+                free_blocks=self.cm.available_for_admission(),
+                block_cost=self._block_cost,
+                max_blocks=self.cm.num_blocks - 1)
+            if req is None:
+                break
+            err = self._validate(req)
+            if err is not None:
+                # unservable request enqueued behind submit()'s back (e.g.
+                # straight into the scheduler): reject it through the
+                # completion path, keep admitting
+                self._reject(req, err)
+                continue
+            p = self._norm_prompt(req.prompt)
+            slot = self.cm.acquire(req.request_id)
+            seq = (self.cm.begin(slot, p, req.max_new_tokens)
+                   if slot is not None else None)
+            if seq is None:
+                # slot/block accounting drift: put the head back and retry
+                # next tick — admitting younger arrivals now would reorder a
+                # FIFO session's turns
+                self.scheduler.requeue(self.replica_id, req)
+                break
+            free -= 1
+            self.stats.prompt_tokens += len(p)
+            self.stats.prefix_hit_tokens += seq.reused
+            if seq.reused:
+                self.stats.prefix_hits += 1
+            self.prefilling[slot] = req
+            n = self._pack_chunk(slot, toks, pos, rows, sample_idx, n,
+                                 finished)
+        return n
+
+    def _tick_mixed(self) -> int:
+        """ONE fixed-shape mixed step: decode rows + prefill chunks packed
+        against the token budget, one dispatch, one host sync."""
+        T = self.token_budget
+        toks = np.zeros(T, np.int32)
+        pos = np.full(T, -1, np.int32)
+        rows = np.full(T, -1, np.int32)
+        sample_idx = np.zeros(self.cm.n_slots, np.int32)
+        finished: list[int] = []
+        n = 0
+        # 0. grow live rows' tables to cover the position each is about to
+        #    write — BEFORE packing, while prefilling slots still sit at
+        #    pos=0 (a chunk that completes its prompt this tick sets pos=S,
+        #    but its first decode write is next tick's business)
+        self.cm.ensure_decode_blocks()
+        # 1. every live decode row costs one token (budget >= n_slots, so
+        #    decodes can never be starved by prefill chunks)
+        decode_slots = list(self.live.keys())
+        for slot in decode_slots:
+            seq = self.cm.slots[slot]
+            toks[n] = self._last_host[slot]
+            pos[n] = seq.pos
+            rows[n] = slot
+            sample_idx[slot] = n
+            n += 1
+        # 2. continue partial prefills in admission order (FIFO turns stay
+        #    ordered: an older request's chunks always pack first)
+        for slot in list(self.prefilling):
+            if n >= T:
+                break
+            n = self._pack_chunk(slot, toks, pos, rows, sample_idx, n,
+                                 finished)
+        # 3. admit new requests into the remainder
+        n = self._admit_mixed(toks, pos, rows, sample_idx, n, finished)
+        if n == 0:
+            return 0          # idle: nothing dispatched, not a tick
+        t0 = time.monotonic()
+        bt = jnp.asarray(self.cm.block_tables())       # (n_slots, max_blocks)
+        sampled, pools = self._mixed(
+            self.params, self.cm.pools, bt, jnp.asarray(toks),
+            jnp.asarray(pos), jnp.asarray(rows), jnp.asarray(sample_idx),
+            self._next_seed())
+        self.cm.pools = pools
+        self.cm.publish()
+        self.stats.blocks_in_use = self.cm.blocks_in_use
+        host_toks = self._to_host(sampled)     # the ONE sync of this tick
+        dt = time.monotonic() - t0
+        now = time.monotonic()
+        n_emitted = 0
+        # 4. decode rows advance
+        for slot in decode_slots:
+            req = self.live[slot]
+            tok = int(host_toks[slot])
+            req.tokens.append(tok)
+            self._last_host[slot] = tok
+            self.cm.slots[slot].pos += 1
+            self.stats.tpot_s.append(dt)
+            self.stats.tokens_out += 1
+            n_emitted += 1
+            if len(req.tokens) >= req.max_new_tokens:
+                self.live.pop(slot)
+                self._release_slot(slot, req)
+                self._complete(req)
+        # 5. chunks that completed their prompt emit their first token
+        for slot in finished:
+            req = self.prefilling.pop(slot)
+            tok = int(host_toks[slot])
+            self._last_host[slot] = tok
+            n_emitted += 1
+            self._emit_first_token(req, slot, tok, now)
+        self.stats.ticks += 1
+        if decode_slots:
+            self.stats.decode_ticks += 1
+        return n_emitted
+
+    # ----------------------------------------------------- dense decode tick
+    def _tick_dense(self) -> int:
+        self._admit_dense()
         if not self.live:
             self.stats.ticks += 1
             return 0
         t0 = time.monotonic()
         positions = self.cm.positions()[:, None]               # (B,1)
         active = self.cm.active_mask()
-        if self.paged:
-            self.cm.ensure_decode_blocks()
-            bt = jnp.asarray(self.cm.block_tables())
-            new_toks, pools = self._step(
-                self.params, self.cm.pools, bt, self._last_tokens, positions,
-                active, self._next_seed())
-            self.cm.pools = pools
-            self.cm.publish()
-            self.stats.blocks_in_use = self.cm.blocks_in_use
-        else:
-            new_toks, self.cm.caches = self._step(
-                self.params, self.cm.caches, self._last_tokens, positions,
-                active, self._next_seed())
+        new_toks, self.cm.caches = self._step(
+            self.params, self.cm.caches, self._last_tokens, positions,
+            active, self._next_seed())
         self._last_tokens = new_toks
         host_toks = self._to_host(new_toks)       # the ONE sync of this tick
         self.cm.advance()
@@ -383,10 +486,17 @@ class ServeEngine:
         self.stats.tokens_out += n_emitted
         return n_emitted
 
+    def tick(self) -> int:
+        """One engine step.  Paged: one unified mixed dispatch (decode rows +
+        prefill chunks).  Dense: admit prefills, then decode all live slots.
+        """
+        if self.paged:
+            return self._tick_mixed()
+        return self._tick_dense()
+
     def run_until_drained(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):
-            pending = self.scheduler.pending(self.replica_id)
-            if not pending and not self.live:
+            if self.idle():
                 return
             self.tick()
         raise TimeoutError("engine did not drain")

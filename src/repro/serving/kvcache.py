@@ -27,15 +27,21 @@ walks the trie with its prompt; every matched block is reused by reference
 computing only the suffix.  Because sharing is block-aligned, copy-on-write
 degenerates to refcounting: a shared block is never written (a request's own
 tokens always land in its private tail blocks), so the "copy" arm of COW
-never executes.  Requests that prefill the same not-yet-cached prefix in
-one tick each compute a private copy; whoever commits second adopts the
-incumbent's blocks and frees its duplicates (commit-time dedup), so block
-references always follow the trie's own chains and the allocator's
-free+evictable accounting stays exact.  Completed requests donate their
-full blocks (prompt AND
-generated tokens) back to the trie; unreferenced cached blocks are reclaimed
-LRU-first when the free list runs dry.  Block 0 is a reserved null block:
-inactive decode rows are clamped onto it so masked lanes scribble harmlessly.
+never executes.  Commit is at CHUNK granularity
+(``commit_prefill_progress``): full blocks are donated to the trie the
+moment their tokens are packed into the tick's mixed dispatch, so a
+same-tick later admission with the same prefix matches them instead of
+prefilling its own copy (intra-batch sharing — the packed step writes all
+K/V before any token reads, which makes the not-yet-dispatched blocks safe
+to share).  Requests that still race to prefill the same prefix from
+different ticks' partial progress are reconciled by commit-time dedup:
+whoever commits second adopts the incumbent's blocks and frees its
+duplicates, so block references always follow the trie's own chains and the
+allocator's free+evictable accounting stays exact.  Completed requests
+donate their full blocks (prompt AND generated tokens) back to the trie;
+unreferenced cached blocks are reclaimed LRU-first when the free list runs
+dry.  Block 0 is a reserved null block: inactive decode rows are clamped
+onto it so masked lanes scribble harmlessly.
 """
 from __future__ import annotations
 
@@ -167,10 +173,13 @@ class PrefixBlockAllocator:
         self.dedup_blocks = 0    # duplicate blocks swapped for incumbents
 
     # ------------------------------------------------------------- helpers
-    def _components(self, tokens: Sequence[int], n_blocks: int) -> list[str]:
+    def _block_key(self, tokens: Sequence[int], i: int) -> str:
+        """THE trie key encoding of one full token block (path component)."""
         bs = self.block_size
-        return ["-".join(str(int(t)) for t in tokens[i * bs:(i + 1) * bs])
-                for i in range(n_blocks)]
+        return "-".join(str(int(t)) for t in tokens[i * bs:(i + 1) * bs])
+
+    def _components(self, tokens: Sequence[int], n_blocks: int) -> list[str]:
+        return [self._block_key(tokens, i) for i in range(n_blocks)]
 
     def _touch(self, meta: _CachedBlock) -> None:
         self._clock += 1
@@ -244,28 +253,46 @@ class PrefixBlockAllocator:
         return self.num_blocks - 1 - len(self.free)
 
     # --------------------------------------------------------------- cache
+    def path_key(self, tokens: Sequence[int], n_blocks: int) -> str:
+        """Trie path of the first ``n_blocks`` full blocks of ``tokens``
+        ("" for zero blocks) — the resume point for ``cache_blocks_range``.
+        """
+        if n_blocks <= 0:
+            return ""
+        return "/" + "/".join(self._components(tokens, n_blocks))
+
     def cache_blocks(self, tokens: Sequence[int], table: list[int]) -> int:
         """Donate the full blocks of ``tokens`` (backed by ``table``) to the
-        trie.  Chains strictly: block i is cached only under an existing
-        (or just-created) parent path, so every trie chain is consecutive.
+        trie, walking from the root.  Returns how many were newly cached."""
+        n_full = min(len(tokens) // self.block_size, len(table))
+        added, _ = self.cache_blocks_range(tokens, table, 0, n_full, "")
+        return added
+
+    def cache_blocks_range(self, tokens: Sequence[int], table: list[int],
+                           start: int, stop: int, prefix_key: str
+                           ) -> tuple[int, str]:
+        """Donate blocks [start, stop) of ``tokens`` to the trie, resuming
+        under the already-committed path ``prefix_key`` (the caller carries
+        it across chunks, so per-chunk commit does O(chunk) — not O(prefix)
+        — key-building work on the tick's host path).  Chains strictly:
+        block i is cached only under an existing (or just-created) parent
+        path, so every trie chain is consecutive.
 
         Commit-time dedup: when a path is already cached under a DIFFERENT
-        physical block (two same-tick requests prefilled a shared prefix
-        before either could cache it), ``table`` is rewritten in place to
-        the cached incumbent and the duplicate block is released — its K/V
-        is identical (same tokens, same positions).  This keeps every
+        physical block (two requests racing to prefill a shared prefix from
+        different ticks' partial progress), ``table`` is rewritten in place
+        to the cached incumbent and the duplicate block is released — its
+        K/V is identical (same tokens, same positions).  This keeps every
         reference on the trie's own chain, so a referenced cached block's
         ancestors are always referenced too; ``available`` counts on that
-        invariant.  Returns how many blocks were newly cached."""
+        invariant.  Returns (newly cached count, extended path key)."""
         if not self.enable_cache:
-            return 0
-        n_full = min(len(tokens) // self.block_size, len(table))
-        comps = self._components(tokens, n_full)
+            return 0, prefix_key
         added = 0
-        key = ""
-        for i in range(n_full):
+        key = prefix_key
+        for i in range(start, stop):
             parent = key or None
-            key += "/" + comps[i]
+            key += "/" + self._block_key(tokens, i)
             meta = self._cached.get(key)
             if meta is not None:
                 self._touch(meta)
@@ -295,7 +322,7 @@ class PrefixBlockAllocator:
                 self._cached[parent].children += 1
             self._touch(meta)
             added += 1
-        return added
+        return added, key
 
     # --------------------------------------------------------------- unref
     def unref(self, table: Sequence[int]) -> None:
@@ -321,6 +348,9 @@ class PagedSeq:
     table: list[int] = field(default_factory=list)
     reused: int = 0                    # reused prefix length, tokens
     reserve: int = 0                   # worst-case total blocks this request
+    prefill_pos: int = 0               # next prompt position to prefill
+    committed: int = 0                 # full blocks already in the trie
+    trie_key: str = ""                 # path of those blocks (resume point)
     pos: int = 0                       # next absolute position to decode
     active: bool = False
 
@@ -427,27 +457,53 @@ class PagedCacheManager:
         seq.prompt = np.asarray(prompt_tokens)
         seq.table = matched + fresh
         seq.reused = len(matched) * self.block_size
+        seq.prefill_pos = seq.reused
+        # matched blocks are already trie-resident: chunk commits resume
+        # right past them (one-time O(reused) key build, O(chunk) per chunk)
+        seq.committed = len(matched)
+        seq.trie_key = self.alloc.path_key(seq.prompt, len(matched))
         seq.reserve = self.block_cost(S, max_new_tokens)
         return seq
 
-    def commit_prompt(self, slot: int) -> int:
-        """After the slot's prefill has been dispatched (its K/V writes are
-        ordered before any later prefill group's reads), donate the prompt's
-        full blocks to the trie and start decoding at pos=S."""
+    def commit_prefill_progress(self, slot: int, new_pos: int) -> bool:
+        """Chunk-granularity trie commit: the engine just PACKED prompt
+        positions [prefill_pos, new_pos) of this slot into the current tick's
+        mixed dispatch.  Every full block now covered is donated to the trie
+        immediately — before the dispatch even runs — which is sound because
+        the packed step writes all packed K/V before any packed token reads,
+        so a same-tick later admission that matches these blocks attends to
+        K/V written in the very same dispatch.  This is what makes
+        intra-batch prefix sharing work: two same-prefix requests admitted in
+        one tick share blocks instead of both prefilling the prefix.
+
+        Returns True when the prompt is complete (the slot is ready to
+        decode at pos = S; its boundary token samples this tick)."""
         seq = self.slots[slot]
-        added = self.alloc.cache_blocks(seq.prompt, seq.table)
-        seq.pos = len(seq.prompt)
-        return added
+        seq.prefill_pos = new_pos
+        n_full = min(new_pos // self.block_size, len(seq.table))
+        if n_full > seq.committed:
+            _, seq.trie_key = self.alloc.cache_blocks_range(
+                seq.prompt, seq.table, seq.committed, n_full, seq.trie_key)
+            seq.committed = n_full
+        if new_pos >= len(seq.prompt):
+            seq.pos = len(seq.prompt)
+            return True
+        return False
 
     def finish(self, slot: int, generated: Sequence[int]) -> None:
         """Normal completion: cache the full blocks of everything whose K/V
         was actually written — prompt plus generated[:-1] (the final sampled
-        token is never fed back) — then drop the request's references."""
+        token is never fed back) — then drop the request's references.
+        Resumes past the chunk-committed prompt blocks, so only the
+        generated tail does new key-building work."""
         seq = self.slots[slot]
         written = np.concatenate([
             seq.prompt, np.asarray(list(generated[:-1]), dtype=np.int64)
         ]) if len(generated) > 1 else seq.prompt
-        self.alloc.cache_blocks(written, seq.table)
+        n_full = min(len(written) // self.block_size, len(seq.table))
+        if n_full > seq.committed:
+            self.alloc.cache_blocks_range(written, seq.table, seq.committed,
+                                          n_full, seq.trie_key)
         self.alloc.unref(seq.table)
         self.slots[slot] = PagedSeq()
 

@@ -7,13 +7,18 @@ one camera) to a single replica so its turns stay ordered — the same two
 policies, verbatim, as the paper's upcall dispatch.
 
 Admission: waiting requests are admitted to free KV slots oldest-first
-(continuous batching); an optional `prefill_budget` bounds how many prefills
-are spliced per decode step so long prompts cannot starve decodes — the
-paper's "latency floor under load" discipline applied to token serving.
-With a paged KV cache the engine also passes a per-request *block* budget:
-admission stops before the pool's free+evictable blocks are oversubscribed,
-counting each candidate's worst-case footprint (prefix reuse only makes the
-realized footprint smaller, so the bound is safe).
+(continuous batching).  The dense engine admits in batches (``admit``): an
+optional `prefill_budget` bounds how many prefills are spliced per decode
+step so long prompts cannot starve decodes — the paper's "latency floor
+under load" discipline applied to token serving.  The paged engine's
+unified token-budget tick instead admits one head at a time (``admit_one``)
+while it packs the tick's token budget: each admission interleaves with the
+engine's begin/pack/commit, so the per-TOKEN budget — not a per-request
+count — is what bounds prefill work per tick.  ``admit_one`` also takes the
+per-request *block* budget: admission stops before the pool's
+free+evictable blocks are oversubscribed, counting each candidate's
+worst-case footprint (prefix reuse only makes the realized footprint
+smaller, so the bound is safe).
 """
 from __future__ import annotations
 
@@ -60,36 +65,39 @@ class Scheduler:
         self.waiting[r].append(req)
         return r
 
-    def admit(self, replica: int, free_slots: int, *,
-              free_blocks: int | None = None,
-              block_cost: Any = None,
-              max_blocks: int | None = None) -> list[Request]:
-        """Oldest-first admission bounded by slots, prefill budget, and —
-        when the engine serves from a paged pool — KV block budget.
-
-        ``block_cost(req)`` returns the request's worst-case block demand;
-        admission is head-of-line (a too-big head blocks the queue rather
-        than starving while smaller latecomers leapfrog it).  A head whose
-        demand exceeds ``max_blocks`` — the pool's ABSOLUTE capacity, never
-        attainable even fully drained — is popped through anyway so the
-        engine's admission validation can reject it via the completion path;
-        without that escape hatch it would stall the queue forever.  (Engine
-        ``submit`` already rejects such requests up front; this covers
-        requests enqueued directly into the scheduler.)"""
+    def admit(self, replica: int, free_slots: int) -> list[Request]:
+        """Oldest-first batch admission (dense engines), bounded by free
+        slots and the per-tick prefill budget."""
         out = []
         q = self.waiting[replica]
-        budget = free_blocks
         while q and len(out) < min(free_slots, self.prefill_budget):
-            if budget is not None and block_cost is not None:
-                need = block_cost(q[0])
-                if max_blocks is not None and need > max_blocks:
-                    out.append(q.popleft())     # unservable: engine rejects
-                    continue
-                if need > budget:
-                    break
-                budget -= need
             out.append(q.popleft())
         return out
+
+    def admit_one(self, replica: int, *, free_slots: int,
+                  free_blocks: int | None = None, block_cost: Any = None,
+                  max_blocks: int | None = None) -> Request | None:
+        """Pop the queue HEAD if it fits ``free_slots``/``free_blocks``, else
+        None — admission is head-of-line (a too-big head blocks the queue
+        rather than starving while smaller latecomers leapfrog it).  A head
+        whose demand exceeds ``max_blocks`` — the pool's ABSOLUTE capacity,
+        never attainable even fully drained — is popped through anyway so
+        the engine's admission validation can reject it via the completion
+        path; without that escape hatch it would stall the queue forever.
+        (Engine ``submit`` already rejects such requests up front; this
+        covers requests enqueued directly into the scheduler.)
+
+        The paged engine's unified tick calls this in a loop while packing
+        its token budget, so block accounting is re-read between admissions
+        (each ``begin`` changes what is available)."""
+        q = self.waiting[replica]
+        if not q or free_slots <= 0:
+            return None
+        if free_blocks is not None and block_cost is not None:
+            need = block_cost(q[0])
+            if (max_blocks is None or need <= max_blocks) and need > free_blocks:
+                return None
+        return q.popleft()
 
     def requeue(self, replica: int, req: Request) -> None:
         """Return an admitted-but-unplaced request to the HEAD of its queue

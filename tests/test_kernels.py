@@ -7,10 +7,12 @@ import numpy as np
 import pytest
 
 from repro.kernels.decode_attention.ops import (decode_attention,
-                                                paged_decode_attention)
+                                                paged_decode_attention,
+                                                ragged_paged_attention)
 from repro.kernels.decode_attention.ref import (decode_attention_ref,
                                                 densify_pool,
-                                                paged_decode_attention_ref)
+                                                paged_decode_attention_ref,
+                                                ragged_paged_attention_ref)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd.ops import ssd
@@ -163,6 +165,79 @@ def test_paged_decode_attention_matches_refs(B, H, K, D, bs, nb, ctxs, win, cap)
     kd, vd, pos = densify_pool(kp, vp, bt)
     dense = decode_attention_ref(q, kd, vd, qpos, pos, window=win, softcap=cap)
     np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------------------- ragged paged attention
+# the unified mixed tick's kernel: prefill CHUNKS and decode rows packed into
+# one token batch.  Each case lists per-request (ctx_len, chunk_len): the
+# last chunk_len positions of the context are packed as that request's
+# queries (chunk_len == 1 ≡ a decode row); pad lanes fill the budget tail.
+# Sweep axes per the acceptance bar: mixed chunk sizes × decode rows × block
+# sizes (plus window/softcap and a shared prefix block).
+RAGGED_SWEEP = [
+    # (H, K, D, bs, nb, reqs=((ctx, chunk), ...), window, softcap)
+    (4, 2, 32, 8, 4, ((25, 5), (9, 1)), None, None),            # chunk + decode
+    (4, 4, 16, 16, 3, ((33, 33), (40, 1), (17, 1)), None, None),  # full prefill
+    (8, 2, 64, 8, 8, ((61, 13), (64, 1), (30, 7), (8, 8)), None, 30.0),
+    (2, 2, 128, 32, 2, ((50, 11), (33, 1)), 12, None),          # windowed
+    (8, 8, 32, 16, 4, ((1, 1), (2, 1), (64, 64)), None, None),  # tiny ctxs
+    (4, 1, 64, 64, 2, ((100, 36), (128, 1), (90, 2)), 20, 50.0),
+]
+
+
+@pytest.mark.parametrize("H,K,D,bs,nb,reqs,win,cap", RAGGED_SWEEP)
+def test_ragged_paged_attention_matches_refs(H, K, D, bs, nb, reqs, win, cap):
+    rng = np.random.default_rng(H * 100 + bs + len(reqs))
+    ctxs = [c for c, _ in reqs]
+    N = 1 + sum(-(-c // bs) for c in ctxs) + 2          # null + used + spare
+    ks = jax.random.split(jax.random.PRNGKey(H + bs), 3)
+    T = sum(ch for _, ch in reqs) + 3                   # 3 pad lanes
+    q = jax.random.normal(ks[0], (T, H, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, bs, K, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, bs, K, D), jnp.float32)
+    bt = jnp.asarray(_random_block_tables(rng, N, bs, nb, ctxs))
+    rows = np.full(T, -1, np.int32)
+    tpos = np.full(T, -1, np.int32)
+    n = 0
+    for r, (ctx, chunk) in enumerate(reqs):
+        rows[n:n + chunk] = r
+        tpos[n:n + chunk] = np.arange(ctx - chunk, ctx)
+        n += chunk
+    rows, tpos = jnp.asarray(rows), jnp.asarray(tpos)
+    out = ragged_paged_attention(q, kp, vp, bt, rows, tpos, window=win,
+                                 softcap=cap, interpret=True)
+    ref = ragged_paged_attention_ref(q, kp, vp, bt, rows, tpos, window=win,
+                                     softcap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    # pad lanes are EXACT zeros (the engine relies on nothing leaking there)
+    assert np.all(np.asarray(out)[n:] == 0)
+    # cross-check vs the independently-validated single-token paged kernel:
+    # packing must be a pure layout change, token by token
+    per_tok = paged_decode_attention_ref(
+        q[:n], kp, vp, bt[jnp.clip(rows[:n], 0, len(reqs) - 1)], tpos[:n],
+        window=win, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out)[:n], np.asarray(per_tok),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ragged_same_dispatch_shared_prefix_block():
+    """Two packed chunks whose tables share a physical prefix block (the
+    intra-batch sharing case) read identical prefix KV."""
+    H, K, D, bs = 4, 2, 32, 8
+    N, nb = 6, 2
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    T = 6
+    q = jax.random.normal(ks[0], (T, H, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, bs, K, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, bs, K, D), jnp.float32)
+    bt = jnp.asarray([[3, 1], [3, 2]], jnp.int32)       # block 3 shared
+    rows = jnp.asarray([0, 0, 0, 1, 1, 1], jnp.int32)
+    tpos = jnp.asarray([10, 11, 12, 13, 14, 15], jnp.int32)
+    out = ragged_paged_attention(q, kp, vp, bt, rows, tpos, interpret=True)
+    ref = ragged_paged_attention_ref(q, kp, vp, bt, rows, tpos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
 
 

@@ -1,0 +1,273 @@
+"""Unified token-budget tick: chunked prefill fused with decode in one
+fixed-shape ragged dispatch.
+
+Covers the tick's admission edge cases (budget smaller than one chunk, FIFO
+preserved across repeated begin() failures, oversized-demand heads escaping
+through the rejection path mid-stream), the head-of-line property the budget
+exists for (a long prefill cannot stall decoding sessions), intra-batch
+prefix sharing, the fixed-shape/one-compile property, and a regression
+guard that the dense (SSM) path's phase-separated discipline is untouched.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (ModelConfig, init_paged_pools, init_params,
+                          paged_decode_step, paged_mixed_step, paged_prefill)
+from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import Request
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32, n_heads=4,
+                  n_kv_heads=2, d_ff=64, vocab_size=128, dtype="float32",
+                  q_chunk=16)
+SSM = ModelConfig(name="m", family="ssm", n_layers=2, d_model=32, n_heads=4,
+                  n_kv_heads=2, d_ff=64, vocab_size=128, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def ssm_params():
+    return init_params(jax.random.PRNGKey(0), SSM)
+
+
+def _toks(rng, n):
+    return rng.integers(0, CFG.vocab_size, (n,)).astype(np.int32)
+
+
+def _run(cfg, params, reqs, **kw):
+    eng = ServeEngine(cfg, params, **kw)
+    done = []
+    eng.on_complete = done.append
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    return eng, {r.request_id: list(r.tokens) for r in done}
+
+
+def _mk(rng, rid, n_prompt, n_new):
+    return Request(request_id=rid, session_key=rid, prompt=_toks(rng, n_prompt),
+                   max_new_tokens=n_new)
+
+
+# ==================================================== model-level parity
+def test_mixed_step_matches_phase_separated_oracle(params):
+    """paged_mixed_step vs the phase-separated model API it fuses: a prompt
+    prefilled in two ragged chunks then decoded one packed token at a time
+    must reproduce paged_prefill + paged_decode_step logits exactly (same
+    pool layout, same block tables — packing is a scheduling change)."""
+    bs = 4
+    prompt = np.arange(1, 11, dtype=np.int32)          # 10 tokens, 3 blocks
+    bt1 = jnp.asarray([[1, 2, 3, -1]], jnp.int32)
+    pools = init_paged_pools(CFG, num_blocks=10, block_size=bs)
+    logits_ref, pools_ref = paged_prefill(
+        params, pools, bt1, jnp.asarray(prompt)[None],
+        jnp.arange(10, dtype=jnp.int32)[None], CFG)
+    tok = int(jnp.argmax(logits_ref[0]))
+    dl_ref, _ = paged_decode_step(params, pools_ref, bt1,
+                                  jnp.asarray([tok], jnp.int32),
+                                  jnp.asarray([[10]], jnp.int32), CFG)
+
+    T = 8                                              # packed budget
+    btR = jnp.asarray([[1, 2, 3, -1], [-1, -1, -1, -1]], jnp.int32)
+
+    def pack(toks, poss, sidx):
+        t = np.zeros(T, np.int32)
+        p = np.full(T, -1, np.int32)
+        r = np.full(T, -1, np.int32)
+        t[:len(toks)], p[:len(poss)], r[:len(poss)] = toks, poss, 0
+        return (jnp.asarray(t), jnp.asarray(p), jnp.asarray(r),
+                jnp.asarray(sidx, jnp.int32))
+
+    pools2 = init_paged_pools(CFG, num_blocks=10, block_size=bs)
+    _, pools2 = paged_mixed_step(params, pools2, btR,
+                                 *pack(prompt[:6], range(6), [0, 0]), CFG)
+    lg, pools2 = paged_mixed_step(params, pools2, btR,
+                                  *pack(prompt[6:], range(6, 10), [3, 0]),
+                                  CFG)
+    np.testing.assert_allclose(np.asarray(lg[0]), np.asarray(logits_ref[0]),
+                               atol=2e-5, rtol=2e-5)
+    assert int(jnp.argmax(lg[0])) == tok
+    dlg, _ = paged_mixed_step(params, pools2, btR, *pack([tok], [10], [0, 0]),
+                              CFG)
+    np.testing.assert_allclose(np.asarray(dlg[0]), np.asarray(dl_ref[0]),
+                               atol=2e-5, rtol=2e-5)
+
+
+# =================================================== token-budget admission
+def test_budget_smaller_than_one_chunk_still_progresses(params):
+    """A prompt far bigger than the whole token budget prefills over many
+    ticks in budget-sized chunks — and the token stream is identical to the
+    dense engine's (chunking is a scheduling change, not a numerics one)."""
+    def reqs():
+        rng = np.random.default_rng(0)
+        return [_mk(rng, f"r{i}", L, 4) for i, L in enumerate((20, 37, 9))]
+
+    _, dense = _run(CFG, params, reqs(), n_slots=4, max_len=96, paged=False)
+    eng, chunked = _run(CFG, params, reqs(), n_slots=4, max_len=96, paged=True,
+                        block_size=16, token_budget=8)
+    assert chunked == dense
+    # 20+37+9 = 66 prefill tokens through an 8-token window → many chunks
+    assert eng.stats.prefill_chunks > 8
+    assert eng.stats.host_syncs == eng.stats.ticks
+
+
+def test_token_budget_must_cover_decode_rows(params):
+    """Every live decode row costs one token per tick, so a budget smaller
+    than n_slots could starve decodes forever — rejected at construction."""
+    with pytest.raises(ValueError, match="token_budget"):
+        ServeEngine(CFG, params, n_slots=8, max_len=32, paged=True,
+                    token_budget=4)
+
+
+def test_requeue_preserves_fifo_across_repeated_begin_failures(params,
+                                                               monkeypatch):
+    """begin() refusals (accounting drift) across SEVERAL ticks must retry
+    the same head each tick — younger requests never leapfrog it."""
+    rng = np.random.default_rng(1)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=64, paged=True,
+                      block_size=16)
+    real = eng.cm.begin
+    calls = {"n": 0}
+
+    def flaky(slot, prompt, max_new):
+        calls["n"] += 1
+        if calls["n"] <= 3:                       # three ticks of refusal
+            eng.cm.release(slot)
+            return None
+        return real(slot, prompt, max_new)
+
+    monkeypatch.setattr(eng.cm, "begin", flaky)
+    done = []
+    eng.on_complete = done.append
+    for rid in ("r1", "r2", "r3"):
+        eng.submit(Request(request_id=rid, session_key="s",
+                           prompt=_toks(rng, 8), max_new_tokens=2))
+    eng.run_until_drained()
+    assert [r.request_id for r in done] == ["r1", "r2", "r3"]
+    # 3 failures all burned on r1, then r1+r2+r3 admitted in one tick
+    assert calls["n"] == 6
+    assert eng.cm.n_active == 0
+
+
+def test_oversized_demand_head_escapes_mid_stream(params):
+    """A never-servable request enqueued straight into the scheduler WHILE
+    other sessions are decoding must pop through admit_one into the engine's
+    rejection path without disturbing the live pool."""
+    rng = np.random.default_rng(2)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=96, paged=True,
+                      block_size=16, num_blocks=9)    # 8 usable blocks
+    done = []
+    eng.on_complete = done.append
+    eng.submit(_mk(rng, "live", 8, 8))
+    eng.tick()                                        # live is now decoding
+    eng.scheduler.submit(Request(request_id="huge", session_key="s",
+                                 prompt=_toks(rng, 90),
+                                 max_new_tokens=20))  # needs 7 > ... fits?
+    eng.scheduler.submit(Request(request_id="impossible", session_key="s",
+                                 prompt=_toks(rng, 70),
+                                 max_new_tokens=60))  # needs 9 > 8: never
+    eng.run_until_drained()
+    byid = {r.request_id: r for r in done}
+    assert byid["impossible"].error is not None
+    assert "KV blocks" in byid["impossible"].error or \
+        "max_len" in byid["impossible"].error
+    assert byid["live"].error is None and len(byid["live"].tokens) == 8
+    assert byid["huge"].error is not None             # 90+19 > max_len=96
+
+
+# ================================================== head-of-line / latency
+def test_long_prefill_never_stalls_decode_rows(params):
+    """THE property the unified tick exists for: while a long prompt is
+    being chunk-prefilled, every already-decoding session still emits
+    exactly one token per tick — the prefill rides in the budget remainder
+    instead of taking the tick hostage."""
+    rng = np.random.default_rng(3)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=96, paged=True,
+                      block_size=16, token_budget=8)
+    done = []
+    eng.on_complete = done.append
+    eng.submit(_mk(rng, "chat", 4, 30))
+    eng.tick()                                        # chat decodes from now
+    chat = next(r for s, r in eng.live.items())
+    eng.submit(_mk(rng, "wall", 60, 2))               # 60 ≫ budget 8
+    while "wall" not in {r.request_id for r in done}:
+        n_before = len(chat.tokens)
+        eng.tick()
+        assert len(chat.tokens) == n_before + 1, \
+            "decode stalled behind a prefill chunk"
+    # the wall of prefill really was spread over many ticks
+    assert eng.stats.prefill_chunks >= 60 // 8
+    eng.run_until_drained()
+    assert {r.request_id for r in done} == {"chat", "wall"}
+    assert eng.stats.host_syncs == eng.stats.ticks
+
+
+def test_intra_batch_prefix_sharing(params):
+    """Two same-prefix requests admitted in ONE tick: chunk-granularity trie
+    commit lets the second match the first's blocks — prefilling only its
+    divergent tail — and both token streams still equal a cold dense run."""
+    rng = np.random.default_rng(4)
+    shared = _toks(rng, 32)                           # 2 full blocks of 16
+    pa = np.concatenate([shared, _toks(rng, 8)])
+    pb = np.concatenate([shared, _toks(rng, 8)])
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=96, paged=True,
+                      block_size=16, token_budget=64)
+    done = []
+    eng.on_complete = done.append
+    eng.submit(Request(request_id="a", session_key="a", prompt=pa,
+                       max_new_tokens=3))
+    eng.submit(Request(request_id="b", session_key="b", prompt=pb,
+                       max_new_tokens=3))
+    eng.tick()                                        # ONE dispatch, both in
+    assert eng.stats.prefix_hit_tokens == 32 and eng.stats.prefix_hits == 1
+    assert eng.stats.prefill_tokens == len(pa) + 8    # b prefilled only 8
+    eng.run_until_drained()
+    byid = {r.request_id: list(r.tokens) for r in done}
+    for rid, p in (("a", pa), ("b", pb)):
+        _, cold = _run(CFG, params, [Request(request_id=rid, session_key="s",
+                                             prompt=p, max_new_tokens=3)],
+                       n_slots=4, max_len=96, paged=False)
+        assert cold[rid] == byid[rid]
+
+
+# ====================================================== fixed-shape compile
+def test_mixed_step_compiles_exactly_once(params):
+    """The packed shape is fixed at token_budget and the block-table operand
+    at (n_slots, max_blocks), so serving mixed prompt lengths, partial
+    chunks, and pure-decode ticks never recompiles the step."""
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=96, paged=True,
+                      block_size=16, token_budget=16)
+    for i, (L, n) in enumerate(((5, 3), (40, 2), (17, 4), (3, 1), (29, 2))):
+        eng.submit(_mk(rng, f"r{i}", L, n))
+    eng.run_until_drained()
+    assert eng.stats.ticks > 5                    # several distinct tick mixes
+    assert eng._mixed._cache_size() == 1          # ...one compiled program
+
+
+# ===================================================== dense path untouched
+def test_dense_ssm_path_discipline_unchanged(ssm_params):
+    """Regression guard for the refactor: SSM/hybrid configs (no paged
+    support) keep the phase-separated tick verbatim — batched equal-length
+    prefill groups, masked fused decode, and the ORIGINAL host-sync
+    invariant ``host_syncs == decode_ticks + prefill_batches``."""
+    rng = np.random.default_rng(6)
+    eng = ServeEngine(SSM, ssm_params, n_slots=4, max_len=32)
+    assert not eng.paged and eng.token_budget is None
+    eng.scheduler.prefill_budget = 4
+    done = []
+    eng.on_complete = done.append
+    for i, L in enumerate((6, 6, 9, 9)):          # two same-length runs
+        eng.submit(Request(request_id=f"r{i}", session_key="s",
+                           prompt=_toks(rng, L), max_new_tokens=3))
+    eng.run_until_drained()
+    assert len(done) == 4 and all(len(r.tokens) == 3 for r in done)
+    assert eng.stats.prefill_batches == 2         # grouped batched prefill
+    assert eng.stats.prefill_chunks == 0          # no mixed-tick machinery
+    assert eng.stats.host_syncs == \
+        eng.stats.decode_ticks + eng.stats.prefill_batches

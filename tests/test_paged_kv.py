@@ -118,14 +118,17 @@ def test_scheduler_block_budget_is_head_of_line():
     for i, n in enumerate((4, 1, 1)):
         s.submit(Request(request_id=f"r{i}", session_key="s", prompt=None,
                          max_new_tokens=n))
-    cost = {"r0": 4, "r1": 1, "r2": 1}
-    got = s.admit(0, free_slots=3, free_blocks=3,
-                  block_cost=lambda r: cost[r.request_id])
+    cost = lambda r: {"r0": 4, "r1": 1, "r2": 1}[r.request_id]
     # r0 does not fit; r1/r2 must NOT leapfrog it (FIFO sessions stay ordered)
-    assert got == []
-    got = s.admit(0, free_slots=3, free_blocks=5,
-                  block_cost=lambda r: cost[r.request_id])
-    assert [r.request_id for r in got] == ["r0", "r1"]
+    assert s.admit_one(0, free_slots=3, free_blocks=3, block_cost=cost) is None
+    assert s.pending(0) == 3
+    # the engine loop re-reads the block budget between admissions
+    got = []
+    for free in (5, 1, 0):
+        r = s.admit_one(0, free_slots=3, free_blocks=free, block_cost=cost)
+        if r is not None:
+            got.append(r.request_id)
+    assert got == ["r0", "r1"] and s.pending(0) == 1
 
 
 # ========================================================== engine fast path
@@ -147,8 +150,8 @@ def test_paged_engine_matches_dense_tokens(params):
     _, dense = _run(params, mk(), paged=False)
     eng, paged = _run(params, mk(), paged=True, block_size=16)
     assert dense == paged
-    assert eng.stats.host_syncs == \
-        eng.stats.decode_ticks + eng.stats.prefill_batches
+    # THE unified-tick invariant: one mixed dispatch, one sync, per tick
+    assert eng.stats.host_syncs == eng.stats.ticks
 
 
 def test_warm_session_skips_prefix_prefill(params):
@@ -180,8 +183,7 @@ def test_warm_session_skips_prefix_prefill(params):
     assert skipped_blocks == 2
     # strictly fewer prefill FLOPs: prefilled tokens < prompt tokens
     assert eng.stats.prefill_tokens == eng.stats.prompt_tokens - 32
-    assert eng.stats.host_syncs == \
-        eng.stats.decode_ticks + eng.stats.prefill_batches
+    assert eng.stats.host_syncs == eng.stats.ticks
     assert eng.stats.blocks_in_use > 0
     # reused-prefix decode must equal a cold full recompute
     _, cold = _run(params, [Request(request_id="t2", session_key="s",
@@ -220,8 +222,7 @@ def test_prefix_cache_eviction_under_pressure(params):
     assert eng.stats.prefills == 6
     assert eng.cm.alloc.evictions > 0
     assert eng.cm.n_active == 0
-    assert eng.stats.host_syncs == \
-        eng.stats.decode_ticks + eng.stats.prefill_batches
+    assert eng.stats.host_syncs == eng.stats.ticks
 
 
 # ============================================ review regressions (PR 2 fixes)
@@ -249,10 +250,10 @@ def test_allocator_commit_dedup_swaps_duplicates():
 def test_same_tick_divergent_prefix_never_strands_blocks(params):
     """High-severity regression: A and B admitted in ONE tick share two
     blocks of prompt then diverge in their third; A finishes while B keeps
-    decoding, and C then needs every block available() advertises.  Without
-    commit-time dedup, B pins A's incumbent chain via a cached divergent
-    child while holding duplicate physical blocks, available() overcounts,
-    C is over-admitted, and begin() returning None crashed the engine."""
+    decoding, and C then needs every block available() advertises.  With the
+    unified tick's chunk-granularity trie commit, B matches A's same-tick
+    committed blocks at admission (intra-batch sharing — no duplicate
+    prefill, no dedup needed) and the allocator's accounting stays exact."""
     rng = np.random.default_rng(5)
     eng = ServeEngine(CFG, params, n_slots=4, max_len=32, paged=True,
                       block_size=4, num_blocks=11)      # 10 usable blocks
@@ -264,9 +265,15 @@ def test_same_tick_divergent_prefix_never_strands_blocks(params):
         prompt=np.concatenate([shared, tail]), max_new_tokens=n)
     eng.submit(mk("a", _toks(rng, 4), 2))               # cost 4 blocks
     eng.submit(mk("b", _toks(rng, 4), 6))               # cost 5 blocks
-    eng.tick()                                          # both prefill; A done
+    eng.tick()                             # ONE mixed dispatch prefills both
+    # intra-batch sharing: B reused A's 2 shared blocks (committed when A's
+    # chunk was packed, read in the same dispatch) instead of duplicating
+    assert eng.stats.prefix_hit_tokens == 8 and eng.stats.prefix_hits == 1
+    assert eng.stats.prefill_tokens == 12 + 4
+    assert eng.cm.alloc.dedup_blocks == 0               # nothing to reconcile
+    assert eng.cm.n_active == 2                # both live after first token
+    eng.tick()                                          # A's 2nd token: done
     assert [r.request_id for r in done] == ["a"] and eng.cm.n_active == 1
-    assert eng.cm.alloc.dedup_blocks == 2               # B adopted A's prefix
     eng.submit(Request(request_id="c", session_key="c",
                        prompt=_toks(rng, 20), max_new_tokens=1))  # cost 5
     eng.run_until_drained()

@@ -122,40 +122,43 @@ def test_drain_mixed_lengths_exact_token_budget(params):
 
 
 # -------------------------------------------------- one transfer per tick
-def test_one_host_sync_per_decode_tick(params):
-    """The decode tick does exactly ONE device→host transfer no matter how
-    many slots are live, and prefill admission syncs once per batch group."""
+def test_one_host_sync_per_unified_tick(params):
+    """The unified mixed tick does exactly ONE device→host transfer no
+    matter how many decode rows and prefill chunks it packs: four prompts
+    (24 tokens) fit one token budget, so tick 1 carries all four prefills
+    and every later tick carries four decode rows — one sync each."""
     eng = ServeEngine(CFG, params, n_slots=4, max_len=32)
-    eng.scheduler.prefill_budget = 4
     rng = np.random.default_rng(4)
-    # four same-length prompts → one prefill group, all four slots live
     for i in range(4):
         eng.submit(Request(request_id=f"r{i}", session_key=f"s{i}",
                            prompt=rng.integers(0, 128, (6,)).astype(np.int32),
                            max_new_tokens=5))
     eng.run_until_drained()
-    assert eng.stats.prefill_batches == 1         # batched admission
-    assert eng.stats.decode_ticks == 4            # 1 prefill tok + 4 decodes
-    # THE invariant: syncs == decode ticks + prefill groups, not per-slot
-    assert eng.stats.host_syncs == eng.stats.decode_ticks + eng.stats.prefill_batches
+    assert eng.stats.prefill_chunks == 4          # one chunk per prompt...
+    assert eng.stats.ticks == 5                   # ...all in tick 1, then 4
+    assert eng.stats.decode_ticks == 4            #    pure-decode ticks
+    # THE invariant: one fixed-shape dispatch, hence one sync, per tick
+    assert eng.stats.host_syncs == eng.stats.ticks
+    assert eng.stats.prefill_batches == 0         # no separate prefill phase
     assert eng.stats.tokens_out == 4 * 5
 
 
-def test_prefill_groups_by_length(params):
-    """Admission batches contiguous same-length prompts into one jitted
-    prefill (contiguous runs, so admission order is preserved)."""
+def test_mixed_lengths_pack_into_one_tick(params):
+    """No same-length grouping needed: DIFFERENT prompt lengths pack into
+    one fixed-shape mixed dispatch (per-token positions/rows), so the whole
+    admission wave costs one tick and one sync."""
     eng = ServeEngine(CFG, params, n_slots=4, max_len=32)
     rng = np.random.default_rng(5)
-    lengths = [5, 5, 7, 7]                        # two contiguous runs of two
+    lengths = [5, 5, 7, 7]
     for i, L in enumerate(lengths):
         eng.submit(Request(request_id=f"r{i}", session_key="s",
                            prompt=rng.integers(0, 128, (L,)).astype(np.int32),
                            max_new_tokens=2))
-    eng.scheduler.prefill_budget = 4
     eng.run_until_drained()
     assert eng.stats.prefills == 4
-    assert eng.stats.prefill_batches == 2
-    assert eng.stats.host_syncs == eng.stats.decode_ticks + 2
+    assert eng.stats.prefill_chunks == 4          # all four in ONE tick:
+    assert eng.stats.ticks == 2                   # prefill tick + decode tick
+    assert eng.stats.host_syncs == eng.stats.ticks
 
 
 def test_cluster_one_sync_per_tick_end_to_end(params):
@@ -166,16 +169,17 @@ def test_cluster_one_sync_per_tick_end_to_end(params):
             cluster.submit("s", f"r{i}", _prompt(rng), max_new_tokens=3)
         cluster.run_until_drained()
         st = cluster.stats()
-        assert st["host_syncs"] == st["decode_ticks"] + st["prefill_batches"]
+        assert st["host_syncs"] == st["ticks"]
 
 
 def test_batched_prefill_matches_single_prefill(params):
-    """Grouped B=k prefill must produce the same first token as B=1."""
+    """Packing k identical prompts into one mixed tick must produce the same
+    first token as packing one: lane position within the ragged batch cannot
+    leak into a request's logits."""
     prompt = np.arange(1, 9, dtype=np.int32)
     firsts = []
     for batch in (1, 3):
         eng = ServeEngine(CFG, params, n_slots=4, max_len=32)
-        eng.scheduler.prefill_budget = 4
         reqs = [Request(request_id=f"r{i}", session_key="s", prompt=prompt,
                         max_new_tokens=1) for i in range(batch)]
         done = []

@@ -4,13 +4,20 @@
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench serve-example
+.PHONY: test bench bench-smoke serve-example
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run $(if $(ONLY),--only $(ONLY))
+
+# exactly what CI's bench-smoke job runs: the serving perf path end-to-end
+# on tiny configs (unified tick, paged KV + prefix reuse, multi-model
+# cascade + bounded admission)
+bench-smoke:
+	BENCH_SMOKE=1 PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+		--only serve_prefix_reuse,serve_mixed_tick,serve_multi_model
 
 serve-example:
 	PYTHONPATH=$(PYTHONPATH) python examples/serve_cluster.py

@@ -23,9 +23,22 @@ tick, where a long prefill takes the tick hostage.  Reports decode TPOT
 p50/p99 over the contention window for both; the chunked p99 must beat the
 monolithic p99 (asserted outside smoke mode).
 
-Set ``BENCH_SMOKE=1`` for a tiny-config, few-tick variant of both (CI runs
-this on every PR).  Results land in BENCH_serve.json so the serving perf
-trajectory is tracked across PRs.
+``serve_multi_model``: one ``ServeNode`` hosting a paged attention LIGHT
+model and a dense SSM HEAVY model side by side, with a ``CascadeRoute``
+between them, driven into overload.  The cascade gate's logprob threshold is
+CALIBRATED (median of light-model mean logprobs over probe requests) so the
+escalation rate is a property of the gate, not a lucky constant.  Records
+the escalation rate at the gate, shed/redirect counts once the light tier's
+per-replica queues hit the watermark (MultiTASC++-style bounded admission),
+and p50/p99 TTFT/TPOT per deployment; asserts each deployment's own
+host-sync discipline (paged: ``host_syncs == ticks``; dense SSM:
+``host_syncs == decode_ticks + prefill_batches``) and that every request is
+answered — shed at the light tier fails over to the heavy tier, never into
+silence.
+
+Set ``BENCH_SMOKE=1`` for a tiny-config, few-tick variant of all three (CI
+runs this on every PR).  Results land in BENCH_serve.json so the serving
+perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -54,7 +67,7 @@ def _write_results(key: str, results: dict, out) -> None:
         except (OSError, json.JSONDecodeError):
             data = {}
     if not all(isinstance(v, dict) and ("turns" in v or "chunked" in v
-                                        or "total" in v)
+                                        or "total" in v or "route" in v)
                for v in data.values()):
         data = {}                     # pre-PR3 flat schema: start fresh
     data[key] = results
@@ -258,4 +271,148 @@ def bench_serve_mixed_tick(out) -> dict:
             "chunked prefill must bound decode TPOT below the monolithic tick"
         out("serve_mixed_tick/CLAIM chunked-tpot-beats-monolithic,PASS,exact")
     _write_results("serve_mixed_tick", results, out)
+    return results
+
+
+def bench_serve_multi_model(out) -> dict:
+    import statistics
+
+    from repro.core.pools import DispatchPolicy
+    from repro.models import init_params
+    from repro.models.config import ModelConfig
+    from repro.serving.cluster import CascadeGate, CascadeRoute, ServeNode
+    from repro.serving.engine import EngineStats
+
+    smoke = _smoke()
+    light_cfg = ModelConfig(name="light", family="dense", n_layers=2,
+                            d_model=32 if smoke else 64, n_heads=4,
+                            n_kv_heads=2, d_ff=64 if smoke else 128,
+                            vocab_size=256, dtype="float32", q_chunk=16)
+    # dense SSM heavy model: d_inner = 2*d_model must divide ssm_head_dim 64
+    heavy_cfg = ModelConfig(name="heavy", family="ssm", n_layers=2,
+                            d_model=64 if smoke else 128, n_heads=4,
+                            n_kv_heads=2, d_ff=128 if smoke else 256,
+                            vocab_size=256, dtype="float32")
+    lp = init_params(jax.random.PRNGKey(0), light_cfg)
+    hp = init_params(jax.random.PRNGKey(1), heavy_cfg)
+    rng = np.random.default_rng(0)
+
+    S = 12 if smoke else 24                  # ONE prompt length: the dense
+    max_new = 4 if smoke else 8              # prefill compiles stay bounded
+    n_requests = 10 if smoke else 32
+    n_sessions = 4
+    # depth counts decoding rows too (they gate a new arrival's wait just
+    # as queued ones do), so the watermark must leave room above n_slots:
+    # 4 in service + 4 waiting per replica, anything beyond redirects/sheds
+    watermark = 3 if smoke else 8
+    prompt = lambda: rng.integers(0, 256, (S,)).astype(np.int32)
+    results: dict = {}
+
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", light_cfg, lp, n_replicas=2, n_slots=4,
+                            max_len=96, policy=DispatchPolicy.FIFO,
+                            watermark=None)      # opened up for calibration
+        heavy = node.deploy("heavy", heavy_cfg, hp, n_replicas=2, n_slots=4,
+                            max_len=96)          # unbounded: the spillway
+
+        # ---- warm both programs out of the timings (light: the ONE mixed
+        # step; heavy: dense prefill for group sizes 1 and 2 + decode step)
+        t0 = time.monotonic()
+        light.submit("warm", "lw0", prompt(), max_new_tokens=2)
+        for i in range(3):
+            heavy.submit("warm", f"hw{i}", prompt(), max_new_tokens=2)
+        node.run_until_drained()
+        results["compile_s"] = time.monotonic() - t0
+
+        # ---- calibrate the gate: median mean-logprob of light generations
+        # over probe requests → escalation rate is a property of the GATE
+        probe_scores: list[float] = []
+        probe = lambda req: probe_scores.append(req.mean_logprob())
+        light.on_done.append(probe)
+        for i in range(8):
+            light.submit(f"cal{i % n_sessions}", f"cal{i}", prompt(),
+                         max_new_tokens=max_new)
+        node.run_until_drained()
+        light.on_done.remove(probe)
+        threshold = statistics.median(probe_scores)
+        gate = CascadeGate("logprob", threshold=threshold)
+        route = CascadeRoute(light, heavy, gate)
+        out(f"serve_multi_model/gate,{threshold:.4f},"
+            f"median_mean_logprob_over_{len(probe_scores)}_probes")
+
+        # ---- measured overload phase: arrivals outpace service (two
+        # requests per driver step, vs a service rate of n_slots/max_new
+        # requests per tick per replica), so queues climb to the watermark
+        # and stay there — some requests serve and face the gate, the
+        # over-watermark tail sheds or redirects (the MultiTASC++ regime,
+        # not a one-shot burst that sheds everything)
+        for eng in light.engines + heavy.engines:
+            eng.stats = EngineStats()
+        light.watermark = watermark
+        rids = [f"r{i}" for i in range(n_requests)]
+        t0 = time.monotonic()
+        for i, rid in enumerate(rids):
+            route.submit(f"s{i % n_sessions}", rid, prompt(),
+                         max_new_tokens=max_new)
+            if i % 2 == 1:
+                node.step()
+        node.run_until_drained()
+        wall_s = time.monotonic() - t0
+
+        ls, hs, rs = light.stats(), heavy.stats(), route.stats()
+        # each deployment upholds ITS OWN fast-path discipline
+        assert ls["host_syncs"] == ls["ticks"], \
+            "paged light deployment broke host_syncs == ticks"
+        assert hs["host_syncs"] == hs["decode_ticks"] + hs["prefill_batches"], \
+            "dense SSM heavy deployment broke the phase-separated discipline"
+        # bounded admission really engaged under the burst
+        assert ls["shed"] + ls["redirected"] > 0, \
+            "overload burst never hit the light tier's watermark"
+        assert rs["escalated"] > 0, "nothing escalated under overload"
+        # no request vanishes: shed at light fails over to heavy
+        for rid in rids:
+            res = route.result(rid)
+            assert res is not None and len(res) == max_new, \
+                f"{rid} unanswered: {route.error(rid)!r}"
+        if not smoke:
+            assert rs["gate_trips"] > 0, "calibrated gate never tripped"
+            assert rs["escalation_rate"] < 1.0, \
+                "median-calibrated gate escalated everything"
+
+        def dep_row(st):
+            return {
+                "requests": st["requests"], "shed": st["shed"],
+                "redirected": st["redirected"],
+                "tokens_out": st["tokens_out"],
+                "ttft_p50_us": st["ttft_p50_s"] * 1e6,
+                "ttft_p99_us": st["ttft_p99_s"] * 1e6,
+                "tpot_p50_us": st["tpot_p50_s"] * 1e6,
+                "tpot_p99_us": st["tpot_p99_s"] * 1e6,
+            }
+
+        results["route"] = {
+            "requests": rs["requests"], "escalated": rs["escalated"],
+            "gate_trips": rs["gate_trips"],
+            "error_failovers": rs["error_failovers"],
+            "escalation_rate": rs["escalation_rate"],
+            "threshold": threshold,
+        }
+        results["light"] = dep_row(ls)
+        results["heavy"] = dep_row(hs)
+        results["total"] = {"requests": n_requests, "wall_s": wall_s,
+                            "watermark": watermark}
+        for name, row in (("light", results["light"]),
+                          ("heavy", results["heavy"])):
+            out(f"serve_multi_model/{name},{row['ttft_p50_us']:.1f},"
+                f"ttft_p99_us={row['ttft_p99_us']:.1f} "
+                f"tpot_p50_us={row['tpot_p50_us']:.1f} "
+                f"shed={row['shed']} redirected={row['redirected']}")
+        out(f"serve_multi_model/route,{rs['escalation_rate']:.2f},"
+            f"escalated={rs['escalated']}_of_{rs['requests']} "
+            f"gate_trips={rs['gate_trips']} "
+            f"error_failovers={rs['error_failovers']}")
+    out("serve_multi_model/CLAIM per-deployment-sync-invariants,PASS,exact")
+    out("serve_multi_model/CLAIM overload-sheds-or-redirects,PASS,exact")
+    out("serve_multi_model/CLAIM shed-fails-over-never-drops,PASS,exact")
+    _write_results("serve_multi_model", results, out)
     return results

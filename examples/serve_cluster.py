@@ -1,17 +1,26 @@
-"""End-to-end driver: a multi-replica LM serving cluster on the Cascade
-fast path.
+"""End-to-end driver: a multi-tenant ServeNode on the Cascade fast path.
 
-Requests enter as ``trigger_put``s on ``/serve/<model>/req/<session>/<id>``
-and flow store → dispatcher → upcall thread → engine replica; responses are
-``put`` back into ``/serve/<model>/out`` where the client reads them.  Both
-dispatch policies are exercised:
+One node — one shared worker set, one store, one KV device store — hosts TWO
+models side by side: a paged attention model ("light") and a dense SSM model
+("heavy"), each under its own ``/serve/<model>`` pools.  Three serving
+patterns are exercised:
 
-- FIFO — every turn of a chat session lands on the same replica, in order
-  (KV/session locality);
-- ROUND_ROBIN — independent requests spread evenly over the replicas.
+1. FIFO session affinity on the light deployment: every turn of a chat
+   session lands on the same replica, in order, so the replica's prefix trie
+   serves warm turns from cached KV blocks.
+2. Cascade escalation (CascadeServe): requests go to the light model first;
+   when the gate trips — mean decode logprob below a threshold, read from
+   the per-token scores the engine surfaced in-dispatch — the request is
+   escalated via an internal trigger_put into the heavy deployment's pool.
+3. Bounded admission (MultiTASC++): the light tier's per-replica queues get
+   a watermark; an overload burst is redirected to less-loaded siblings and
+   then shed with a structured reason — tail latency stays bounded, and the
+   cascade fails shed requests over to the heavy tier so nothing is dropped.
 
 Run: PYTHONPATH=src python examples/serve_cluster.py
 """
+import statistics
+
 import numpy as np
 
 import jax
@@ -19,70 +28,100 @@ import jax
 from repro.configs.registry import get_config
 from repro.core.pools import DispatchPolicy
 from repro.models import init_params
-from repro.serving.cluster import ServeCluster
+from repro.serving.cluster import CascadeGate, CascadeRoute, ServeNode
 
 
 def main() -> None:
-    cfg = get_config("gemma2-9b", smoke=True)
-    params = init_params(jax.random.PRNGKey(0), cfg)
+    light_cfg = get_config("gemma2-9b", smoke=True)
+    heavy_cfg = get_config("mamba2-1.3b", smoke=True)
+    light_params = init_params(jax.random.PRNGKey(0), light_cfg)
+    heavy_params = init_params(jax.random.PRNGKey(1), heavy_cfg)
     rng = np.random.default_rng(0)
 
-    # ---- FIFO: three chat sessions, four turns each, pinned per replica.
-    # Each turn's prompt extends the session's full history, so the replica's
-    # prefix trie (paged KV) lets warm turns skip the cached prefix blocks.
-    with ServeCluster(cfg, params, n_replicas=2, n_slots=4, max_len=64,
-                      policy=DispatchPolicy.FIFO) as cluster:
-        sessions, turns = ["alice", "bob", "carol"], 4
-        history = {s: rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
-                   for s in sessions}
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", light_cfg, light_params, n_replicas=2,
+                            n_slots=4, max_len=64,
+                            policy=DispatchPolicy.FIFO)
+        heavy = node.deploy("heavy", heavy_cfg, heavy_params, n_replicas=2,
+                            n_slots=4, max_len=64)
+        assert light.paged and not heavy.paged
+
+        # ---- 1. FIFO chat sessions on the light model: affinity + prefix
+        # reuse (each turn's prompt extends the session's full history)
+        sessions, turns = ["alice", "bob", "carol"], 3
+        history = {s: rng.integers(0, light_cfg.vocab_size,
+                                   (8,)).astype(np.int32) for s in sessions}
         for t in range(turns):
             for s in sessions:
-                cluster.submit(s, f"{s}-t{t}", history[s], max_new_tokens=6)
-            cluster.run_until_drained()
+                light.submit(s, f"{s}-t{t}", history[s], max_new_tokens=6)
+            node.run_until_drained()
             for s in sessions:
-                reply = cluster.result(f"{s}-t{t}")
-                new = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+                reply = light.result(f"{s}-t{t}")
+                new = rng.integers(0, light_cfg.vocab_size,
+                                   (6,)).astype(np.int32)
                 history[s] = np.concatenate(
                     [history[s], reply.astype(np.int32), new])
-        st = cluster.stats()
-        print(f"[FIFO] {st['requests']} requests over "
+        st = light.stats()
+        for s in sessions:
+            replicas = {light.routed[f"{s}-t{t}"] for t in range(turns)}
+            assert len(replicas) == 1, "FIFO must pin a session to one replica"
+        print(f"[light/FIFO] {st['requests']} turns over "
               f"{st['n_replicas']} replicas "
               f"(per replica: {st['per_replica_requests']})")
-        for s in sessions:
-            replicas = {cluster.routed[f"{s}-t{t}"] for t in range(turns)}
-            toks = cluster.result(f"{s}-t{turns-1}")
-            print(f"  session {s}: replica {sorted(replicas)}, "
-                  f"last turn → {toks.tolist()}")
-            assert len(replicas) == 1, "FIFO must pin a session to one replica"
-        print(f"       prefix reuse: {st['prefix_hit_tokens']} of "
-              f"{st['prompt_tokens']} prompt tokens served from cached "
-              f"blocks ({st['prefix_hits']} warm turns)")
+        print(f"             prefix reuse: {st['prefix_hit_tokens']} of "
+              f"{st['prompt_tokens']} prompt tokens from cached blocks")
         assert st["prefix_hit_tokens"] > 0, "warm turns must hit the trie"
-        assert st["host_syncs"] == st["ticks"]   # one sync per unified tick
+        assert st["host_syncs"] == st["ticks"]   # paged invariant
 
-    # ---- ROUND_ROBIN: independent requests, load spread evenly
-    with ServeCluster(cfg, params, n_replicas=2, n_slots=4, max_len=64,
-                      policy=DispatchPolicy.ROUND_ROBIN) as cluster:
+        # ---- 2. cascade escalation: calibrate the gate on the light
+        # model's own confidence, then route — uncertain answers re-run on
+        # the heavy model, confident ones never touch it
+        probe_scores = []
+        probe = lambda req: probe_scores.append(req.mean_logprob())
+        light.on_done.append(probe)
+        for i in range(8):
+            light.submit("cal", f"cal{i}",
+                         rng.integers(0, light_cfg.vocab_size,
+                                      (8,)).astype(np.int32),
+                         max_new_tokens=6)
+        node.run_until_drained()
+        light.on_done.remove(probe)
+        gate = CascadeGate("logprob",
+                           threshold=statistics.median(probe_scores))
+        route = CascadeRoute(light, heavy, gate)
         n = 12
         for i in range(n):
-            prompt = rng.integers(0, cfg.vocab_size,
-                                  (int(rng.integers(4, 12)),))
-            cluster.submit("load", f"r{i}", prompt.astype(np.int32),
-                           max_new_tokens=6)
-        cluster.run_until_drained()
-        st = cluster.stats()
-        print(f"[RR]   {st['requests']} requests, per replica "
-              f"{st['per_replica_requests']}")
-        print(f"       TTFT p50 {st['ttft_p50_s']*1e3:.1f} ms  "
-              f"p99 {st['ttft_p99_s']*1e3:.1f} ms (incl. jit compile)")
-        print(f"       TPOT p50 {st['tpot_p50_s']*1e3:.1f} ms  "
-              f"p99 {st['tpot_p99_s']*1e3:.1f} ms")
-        print(f"       host syncs {st['host_syncs']} = unified ticks "
-              f"{st['ticks']} ({st['prefill_chunks']} prefill chunks packed)")
-        assert st["per_replica_requests"] == [n // 2, n // 2]
-        assert all(cluster.result(f"r{i}") is not None for i in range(n))
-        assert st["host_syncs"] == st["ticks"]
-    print("OK")
+            route.submit(f"u{i % 4}", f"r{i}",
+                         rng.integers(0, light_cfg.vocab_size,
+                                      (int(rng.integers(4, 12)),))
+                         .astype(np.int32), max_new_tokens=6)
+        node.run_until_drained()
+        rs = route.stats()
+        print(f"[cascade]    {rs['escalated']}/{rs['requests']} escalated "
+              f"(rate {rs['escalation_rate']:.2f}, gate "
+              f"mean-logprob < {rs['threshold']:.3f})")
+        assert all(route.result(f"r{i}") is not None for i in range(n))
+        hs = heavy.stats()
+        assert hs["host_syncs"] == hs["decode_ticks"] + hs["prefill_batches"]
+
+        # ---- 3. bounded admission: watermark the light tier, overload it,
+        # watch shed/redirect keep the queues bounded while the cascade
+        # fails shed requests over to the heavy tier
+        light.watermark = 6
+        for i in range(24):
+            route.submit(f"burst{i % 3}", f"b{i}",
+                         rng.integers(0, light_cfg.vocab_size,
+                                      (8,)).astype(np.int32),
+                         max_new_tokens=4)
+        node.run_until_drained()
+        ls = light.stats()
+        print(f"[overload]   shed={ls['shed']} redirected={ls['redirected']} "
+              f"(watermark {light.watermark}); all "
+              f"{sum(route.result(f'b{i}') is not None for i in range(24))}"
+              f"/24 answered")
+        assert all(len(route.result(f"b{i}")) == 4 for i in range(24)), \
+            "a shed request must fail over to the heavy tier, not vanish"
+        print("OK")
 
 
 if __name__ == "__main__":

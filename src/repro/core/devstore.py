@@ -130,6 +130,24 @@ class DeviceStore:
         cand = [v for v, t in e.timestamps.items() if t <= ts_ns and v in e.versions]
         return e.versions[max(cand)] if cand else None
 
+    def remove_prefix(self, prefix: str) -> int:
+        """Drop every entry at or under the PATH ``prefix`` (deployment
+        teardown: a departing model's KV pools release their device memory
+        the moment the last reference dies).  Matching is per path
+        component — ``/kv/light`` removes ``/kv/light/replica0/pool`` but
+        never ``/kv/light2/...`` — so tenants with common name prefixes
+        cannot tear each other down.  Returns the number of keys removed.
+        The pool spec itself stays registered — pools are cheap and other
+        deployments may share the same root (e.g. ``/kv``)."""
+        prefix = prefix.rstrip("/")
+        removed = 0
+        with self._lock:
+            for key in [k for k in self._entries
+                        if k == prefix or k.startswith(prefix + "/")]:
+                del self._entries[key]
+                removed += 1
+        return removed
+
     def latest_version(self, key: str) -> int:
         e = self._entries.get(key)
         return e.latest if e else -1

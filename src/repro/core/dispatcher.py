@@ -12,6 +12,13 @@ Design points taken directly from the paper:
 - round-robin enqueueing by default; lambdas configured FIFO get a queue
   picked by the key hash of the object so same-key objects stay ordered on
   one thread (e.g. frames from one camera).
+
+Queue-depth introspection: each queue tracks how many events are outstanding
+on it (enqueued but not yet *finished* — the event a thread is currently
+running still counts).  ``Dispatcher.queue_depths`` exposes the vector, so
+admission-control layers (e.g. the serving node's bounded per-replica queues)
+can observe backlog building up behind a slow lambda and shed or redirect
+before the tail latency does it for them.
 """
 from __future__ import annotations
 
@@ -64,8 +71,17 @@ class UpcallThreadPool:
 
     def __init__(self, n_threads: int = 4, name: str = "upcall") -> None:
         self.queues: list[queue.SimpleQueue] = [queue.SimpleQueue() for _ in range(n_threads)]
+        # outstanding events per queue: incremented at submit, decremented
+        # only after the lambda RETURNS, so a blocked upcall thread shows up
+        # as depth (1 running + k queued), which is exactly the backlog an
+        # admission watermark needs to see.  Also tracked per handle NAME,
+        # so a multi-tenant consumer can watermark against ITS OWN in-flight
+        # events rather than every tenant's traffic on the shared worker.
+        self._depths = [0] * n_threads
+        self._handle_depths: dict[str, int] = {}
+        self._depth_lock = threading.Lock()
         self._threads = [
-            threading.Thread(target=self._loop, args=(q,), daemon=True, name=f"{name}-{i}")
+            threading.Thread(target=self._loop, args=(q, i), daemon=True, name=f"{name}-{i}")
             for i, q in enumerate(self.queues)
         ]
         for t in self._threads:
@@ -74,7 +90,7 @@ class UpcallThreadPool:
     def __len__(self) -> int:
         return len(self.queues)
 
-    def _loop(self, q: queue.SimpleQueue) -> None:
+    def _loop(self, q: queue.SimpleQueue, idx: int) -> None:
         while True:
             ev = q.get()
             if ev is _STOP:
@@ -85,11 +101,39 @@ class UpcallThreadPool:
             except BaseException as e:  # surfaced to the waiter, not swallowed
                 ev.error = e
             ev.done_ns = monotonic_ns()
+            with self._depth_lock:
+                self._depths[idx] -= 1
+                name = ev.handle.name
+                left = self._handle_depths.get(name, 0) - 1
+                if left > 0:
+                    self._handle_depths[name] = left
+                else:
+                    self._handle_depths.pop(name, None)
             ev.completion.set()
 
     def submit(self, ev: UpcallEvent, queue_index: int) -> None:
         ev.enqueued_ns = monotonic_ns()
-        self.queues[queue_index % len(self.queues)].put(ev)
+        idx = queue_index % len(self.queues)
+        with self._depth_lock:
+            self._depths[idx] += 1
+            name = ev.handle.name
+            self._handle_depths[name] = self._handle_depths.get(name, 0) + 1
+        self.queues[idx].put(ev)
+
+    def depths(self) -> list[int]:
+        """Outstanding (queued + in-flight) events per queue."""
+        with self._depth_lock:
+            return list(self._depths)
+
+    def depth(self) -> int:
+        """Total outstanding events across all queues."""
+        with self._depth_lock:
+            return sum(self._depths)
+
+    def depth_for(self, handle_name: str) -> int:
+        """Outstanding events for ONE lambda handle (by name)."""
+        with self._depth_lock:
+            return self._handle_depths.get(handle_name, 0)
 
     def stop(self) -> None:
         for q in self.queues:
@@ -117,6 +161,20 @@ class Dispatcher:
 
     def match(self, key: str) -> list[LambdaHandle]:
         return self._trie.match(key)
+
+    def queue_depths(self) -> list[int]:
+        """Per-upcall-queue outstanding event counts (queued + running).
+        This is the dispatcher's contribution to a node's backlog; consumers
+        add their own post-upcall queues (e.g. an engine's scheduler)."""
+        return self._pool.depths()
+
+    def queue_depth(self, handle_name: str | None = None) -> int:
+        """Outstanding upcall events on this worker — all of them, or only
+        those bound for one lambda (by handle name), so a multi-tenant
+        admission layer can watermark against its own traffic."""
+        if handle_name is not None:
+            return self._pool.depth_for(handle_name)
+        return self._pool.depth()
 
     def dispatch(self, obj: CascadeObject) -> list[UpcallEvent]:
         """One incoming object may match multiple prefixes → multiple events.

@@ -96,8 +96,17 @@ class PoolRegistry:
         self._pools[spec.path] = spec
         return spec
 
-    def remove(self, path: str) -> None:
-        del self._pools[path]
+    def remove(self, path: str) -> PoolSpec:
+        """Drop a pool from the registry (deployment teardown).  Returns the
+        removed spec so callers can clean up per-pool state (shard maps,
+        sequencers, stored keys) keyed off it."""
+        spec = self._pools.pop(path, None)
+        if spec is None:
+            raise KeyError(f"no pool registered at {path!r}")
+        return spec
+
+    def __contains__(self, path: str) -> bool:
+        return path in self._pools
 
     def lookup(self, key: str) -> PoolSpec | None:
         """Deepest pool whose path is a prefix of ``key``."""

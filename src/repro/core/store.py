@@ -148,6 +148,31 @@ class CascadeStore:
         members = self._shard_maps[spec.path].members(spec, key)
         return spec, members
 
+    def remove_pool(self, path: str) -> None:
+        """Tear a pool down: registry entry, shard map, shard sequencers and
+        version counters, every member's stored objects under the pool's
+        prefix, and any open persistent-log handles (the on-disk log FILE is
+        left in place — persistent pools are durable by definition, and a
+        re-created pool resumes its log the way a restarted node would).
+        Lambdas registered on the pool's prefix must be unregistered by
+        their owner first (``unregister_lambda``) — the store cannot know
+        which handles belong to the departing service."""
+        spec = self.pools.remove(path)
+        with self._meta_lock:
+            self._shard_maps.pop(path, None)
+            for k in [k for k in self._sequencers if k[0] == path]:
+                del self._sequencers[k]
+            for k in [k for k in self._versions if k[0] == path]:
+                del self._versions[k]
+        for w in self.workers.values():
+            with w._volatile_lock:
+                for key in [k for k in w.volatile if spec.owns(k)]:
+                    del w.volatile[key]
+            with w._logs_lock:
+                log = w.logs.pop(path, None)
+            if log is not None:
+                log.close()
+
     def register_lambda(self, handle: LambdaHandle, worker_ids: list[int] | None = None) -> None:
         """Bind a lambda to a path prefix on the given (default: all owning)
         workers — in the paper the DFG determines which shard hosts each
@@ -155,6 +180,15 @@ class CascadeStore:
         targets = worker_ids if worker_ids is not None else list(self.workers)
         for wid in targets:
             self.workers[wid].dispatcher.register(handle)
+
+    def unregister_lambda(self, handle: LambdaHandle,
+                          worker_ids: list[int] | None = None) -> None:
+        """Unbind a lambda from its prefix (deployment teardown): later puts
+        to the prefix no longer upcall it.  Events already enqueued still
+        run — teardown should drain first."""
+        targets = worker_ids if worker_ids is not None else list(self.workers)
+        for wid in targets:
+            self.workers[wid].dispatcher.unregister(handle)
 
     # -- puts ------------------------------------------------------------------
     def _next_version(self, pool: PoolSpec, shard: int) -> tuple[int, threading.Lock]:

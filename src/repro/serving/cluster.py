@@ -1,40 +1,63 @@
-"""Multi-replica serving cluster on the Cascade fast path (§3.3, §3.5).
+"""Multi-tenant serving on the Cascade fast path (§2, §3.3, §3.5).
 
-``ServeCluster`` hosts N ``ServeEngine`` replicas the way the paper hosts any
-lambda: each replica lives on one Cascade ``Worker`` and is registered on the
-``/serve/<model>/req`` pool, so requests ARRIVE as ``trigger_put``s through
-the store → dispatcher → upcall-thread fast path (nothing is stored or
-copied; the upcall carries references).  Completed responses are ``put`` back
-into the ``/serve/<model>/out`` pool, where clients read them with ``get``.
+Cascade's thesis is that ONE platform hosts many collocated ML services with
+per-event latency guarantees.  This module is that thesis applied to LM
+serving, split into two layers:
 
-Replica selection is the store's trigger-put member pick, i.e. the paper's
-two dispatch policies end-to-end:
+``ServeNode``
+    One Cascade node-group: the shared ``Worker`` set (one upcall thread per
+    worker, so FIFO sessions stay ordered), the ``CascadeStore`` they form,
+    and a single KV ``DeviceStore`` every paged deployment's block pools
+    live on.  The node's driver loop ticks every busy engine across ALL
+    deployments — a paged attention model and a dense SSM model run side by
+    side on the same workers, each keeping its own host-sync invariant
+    (paged: ``host_syncs == ticks``; dense: ``host_syncs == decode_ticks +
+    prefill_batches``).
 
-- ``ROUND_ROBIN`` — trigger-puts spread evenly over the home shard's members
-  (one engine replica per member): load balancing.
-- ``FIFO`` — the member is chosen by ``affinity_shard_hash`` over the
-  ``/serve/<model>/req/<session>`` prefix, so every turn of a session lands
-  on the SAME replica, and the single upcall thread per worker keeps the
-  session's turns in submission order (KV/session locality, §3.3's
-  same-key-same-queue rule lifted to the cluster level).
+``ModelDeployment``
+    One hosted model: a replica set of ``ServeEngine``s registered as
+    lambdas on ``/serve/<model>/req``, responses ``put`` into
+    ``/serve/<model>/out``, paged KV pools under
+    ``/kv/<model>/replica<r>/pool`` on the node's device store.  Replica
+    selection is the store's trigger-put member pick (ROUND_ROBIN spreads
+    load; FIFO routes by ``affinity_shard_hash`` over the session prefix so
+    a session's turns stay on one replica, in order).  ``stop()`` tears the
+    deployment down: lambdas unregistered, req/out pools removed from the
+    store, KV pools dropped from the device store.
 
-Request keys: ``/serve/<model>/req/<session>/<request_id>``; payloads are
-small dicts (prompt + decode budget) — the request moves to the weights, the
-weights never move (§2 data/compute collocation).
+Bounded admission (MultiTASC++-style shed/redirect)
+---------------------------------------------------
+A deployment constructed with a ``watermark`` bounds each replica's queue:
+the serving lambda measures its replica's depth — engine backlog (queued +
+mid-prefill + decoding) plus the worker's outstanding upcall events (the
+dispatcher's per-queue depth introspection) — and an over-watermark arrival
+is REDIRECTED to the least-loaded sibling replica still under the
+watermark, or, when every sibling is saturated, SHED with a structured
+``/error`` reason (never silently dropped: the client sees exactly why).
+Continuous shed/redirect keeps tail latency flat under overload instead of
+letting queues grow without bound; ``stats()`` reports both counters.
+Redirect trades FIFO session affinity for boundedness — exactly the
+MultiTASC++ trade.
 
-The decode loop itself is the engine's unified token-budget tick (paged
-models): decode rows and chunked prefills packed into ONE fixed-shape jitted
-mixed step per tick, one device→host transfer per tick
-(``host_syncs == ticks``).  Dense (SSM/hybrid/embeds) replicas keep the
-phase-separated discipline: batched prefill admission + masked fused decode
-(``host_syncs == decode_ticks + prefill_batches``).
+Cascade escalation (CascadeServe-style light→heavy routing)
+-----------------------------------------------------------
+``CascadeRoute(light, heavy, gate)`` submits every request to the LIGHT
+deployment first.  When the gate trips — mean decode logprob below (or mean
+next-token entropy above) a threshold, computed from the per-token scores
+the engine's in-dispatch sampler already has on device — the request is
+escalated via an internal ``trigger_put`` into the HEAVY deployment's req
+pool: the request moves to the heavy weights, the weights never move (§2
+data/compute collocation).  Confident light answers never touch the heavy
+model, which is what puts cascaded serving ahead of single-model serving on
+the latency/throughput frontier.
 """
 from __future__ import annotations
 
 import functools
 import threading
 import time
-from typing import Any
+from dataclasses import dataclass
+from typing import Any, Callable
 
 import jax
 import numpy as np
@@ -56,179 +79,259 @@ from .scheduler import Request, Scheduler
 _SESSION_DEPTH = 4
 
 
-class ServeCluster:
-    """N engine replicas as lambdas on a Cascade store (one per worker).
+class ModelDeployment:
+    """One model hosted on a ``ServeNode``: engines, pools, admission.
 
-    Pure-attention token models serve from paged KV by default: each replica
-    owns a block pool + prefix trie (kvcache.PagedCacheManager), and all the
-    pools live on ONE shared DeviceStore under ``/kv/replica<r>`` — FIFO
-    session affinity makes the per-replica trie pay: every turn of a session
-    lands where its prefix blocks already sit.
+    Created through ``ServeNode.deploy`` — replica ``r`` lives on node
+    worker ``r``, its lambda registered on ``/serve/<name>/req``, its paged
+    KV pool (pure-attention models) on the node's shared device store under
+    ``/kv/<name>/replica<r>/pool``.  FIFO session affinity makes the
+    per-replica prefix trie pay: every turn of a session lands where its
+    prefix blocks already sit.
     """
 
-    def __init__(self, cfg: ModelConfig, params, *, n_replicas: int = 2,
-                 n_slots: int = 4, max_len: int = 64,
-                 policy: DispatchPolicy = DispatchPolicy.ROUND_ROBIN,
-                 model_name: str | None = None,
-                 temperature: float = 0.0, paged: bool | None = None,
-                 block_size: int = 16, num_blocks: int | None = None,
-                 prefix_cache: bool = True,
-                 token_budget: int | None = None) -> None:
+    def __init__(self, node: "ServeNode", name: str, cfg: ModelConfig,
+                 params, *, n_replicas: int, n_slots: int, max_len: int,
+                 policy: DispatchPolicy, temperature: float,
+                 paged: bool | None, block_size: int,
+                 num_blocks: int | None, prefix_cache: bool,
+                 token_budget: int | None, watermark: int | None,
+                 seed_base: int) -> None:
+        if n_replicas > len(node.workers):
+            raise ValueError(
+                f"deployment {name!r} wants {n_replicas} replicas but the "
+                f"node has {len(node.workers)} workers")
+        self.node = node
+        self.name = name
         self.cfg = cfg
         self.policy = policy
-        name = model_name or cfg.name
+        self.watermark = watermark
         self.req_prefix = f"/serve/{name}/req"
         self.out_prefix = f"/serve/{name}/out"
         self.paged = supports_paged(cfg) if paged is None else paged
-        # One worker per replica; a single upcall thread per worker keeps
-        # FIFO sessions ordered (the dispatcher's same-queue guarantee).
-        self.workers = [Worker(i, n_upcall_threads=1)
-                        for i in range(n_replicas)]
-        self.store = CascadeStore(self.workers)
+        self.worker_ids = list(range(n_replicas))
         session_hash = functools.partial(affinity_shard_hash,
                                          depth=_SESSION_DEPTH)
-        self.store.create_pool(PoolSpec(
+        node.store.create_pool(PoolSpec(
             path=self.req_prefix, persistence=Persistence.TRANSIENT,
             replication=n_replicas, dispatch=policy,
-            shard_hash=session_hash))
-        self.store.create_pool(PoolSpec(path=self.out_prefix, replication=1))
-        # One device store for every replica's KV block pool (keep_versions=1:
-        # decode rewrites all leaves each tick, retaining predecessors would
-        # double pool memory).
-        self.kv_store: DeviceStore | None = None
-        if self.paged:
-            self.kv_store = DeviceStore(jax.make_mesh((1, 1), ("data", "model")),
-                                        keep_versions=1)
-            self.kv_store.create_pool(PoolSpec(path="/kv"))
-        self.engines = []
+            shard_hash=session_hash), worker_ids=self.worker_ids)
+        node.store.create_pool(PoolSpec(path=self.out_prefix, replication=1))
+        self.engines: list[ServeEngine] = []
         for r in range(n_replicas):
             kw: dict[str, Any] = dict(paged=self.paged)
             if self.paged:
                 kw.update(block_size=block_size, num_blocks=num_blocks,
-                          prefix_cache=prefix_cache, devstore=self.kv_store,
-                          kv_key=f"/kv/replica{r}/pool",
+                          prefix_cache=prefix_cache,
+                          devstore=node.kv_store(),
+                          kv_key=f"/kv/{name}/replica{r}/pool",
                           token_budget=token_budget)
             self.engines.append(ServeEngine(
                 cfg, params, n_slots=n_slots, max_len=max_len,
                 temperature=temperature, scheduler=Scheduler(n_replicas=1),
-                on_complete=self._on_complete, seed_offset=r, **kw))
+                on_complete=self._on_engine_complete,
+                seed_offset=seed_base + r, **kw))
         # Collocated replicas run identical programs: share the jitted
-        # callables so each program compiles once per cluster, not once per
-        # replica (the paged mixed step has exactly ONE program — its packed
-        # shape is fixed at token_budget).
+        # callables so each program compiles once per deployment, not once
+        # per replica (the paged mixed step has exactly ONE program — its
+        # packed shape is fixed at token_budget).
         for eng in self.engines[1:]:
             if self.paged:
                 eng._mixed = self.engines[0]._mixed
             else:
                 eng._prefill = self.engines[0]._prefill
                 eng._step = self.engines[0]._step
+        self._handles: list[tuple[LambdaHandle, int]] = []
         for r in range(n_replicas):
             handle = LambdaHandle(
-                name=f"serve-replica-{r}", prefix=self.req_prefix,
+                name=f"{name}-replica-{r}", prefix=self.req_prefix,
                 fn=functools.partial(self._on_request, r), dispatch=policy,
                 # dispatcher-level mirror of the store's member pick: FIFO
                 # queue selection hashes the session prefix, not the full key
                 queue_hash=session_hash if policy is DispatchPolicy.FIFO
                 else None)
-            self.store.register_lambda(handle, worker_ids=[r])
+            node.store.register_lambda(handle, worker_ids=[self.worker_ids[r]])
+            self._handles.append((handle, self.worker_ids[r]))
         # request_id → replica index, for introspection/tests; bounded so a
-        # long-running cluster doesn't grow it without limit.
+        # long-running deployment doesn't grow it without limit.
         self.routed: dict[str, int] = {}
         self._routed_cap = 4096
         self._lock = threading.Lock()
-        self._submitted = 0
-        self._completed = 0
+        self.submitted = 0
+        self.completed = 0
+        self.shed = 0            # over-watermark arrivals refused outright
+        self.redirected = 0      # over-watermark arrivals moved to a sibling
+        self.listener_errors = 0  # on_done callbacks that raised (and were
+        #                           contained so the completion still landed)
+        # completion listeners (e.g. a CascadeRoute's gate); fired BEFORE the
+        # response is put so an escalation's submit is counted before this
+        # request's completion — the node can never observe a false drain.
+        self.on_done: list[Callable[[Request], None]] = []
+        self._stopped = False
+
+    # ---------------------------------------------------------- admission
+    def queue_depth(self, replica: int) -> int:
+        """This replica's bounded-queue depth: engine backlog (queued +
+        mid-prefill + decoding) plus THIS replica lambda's outstanding
+        upcall events (the dispatcher's per-handle depth introspection) —
+        requests trigger-put to this replica whose serving lambda hasn't
+        finished enqueueing them yet.  Filtered per handle so another
+        deployment's traffic on the shared worker never trips this
+        deployment's watermark."""
+        wid = self.worker_ids[replica]
+        handle = self._handles[replica][0]
+        return (self.engines[replica].backlog()
+                + self.node.workers[wid].dispatcher.queue_depth(handle.name))
+
+    def _least_loaded_sibling(self, replica: int) -> int | None:
+        """The redirect target: the sibling with the smallest depth still
+        under the watermark, or None when every sibling is saturated.
+
+        Depth reads are deliberately lock-free HEURISTICS (MultiTASC++'s
+        continuous decisions, not admission-control transactions): a
+        sibling mid-lambda is transiently counted in both its upcall depth
+        and its engine backlog, and two workers racing the same sibling can
+        each redirect to it — so decisions can be off by ±1 per concurrent
+        arrival.  The watermark bounds queue GROWTH, which tolerates that
+        slack; serializing every admission through a node-wide lock would
+        put a mutex on the fast path instead."""
+        best, best_depth = None, None
+        for r in range(len(self.engines)):
+            if r == replica:
+                continue
+            d = self.queue_depth(r)
+            if d < self.watermark and (best is None or d < best_depth):
+                best, best_depth = r, d
+        return best
+
+    def _shed(self, req: Request, replica: int, depth: int) -> None:
+        """MultiTASC++-style shed: refuse with a STRUCTURED reason so the
+        client can tell overload from a model refusal or a short answer."""
+        req.error = {"error": "shed_overload", "deployment": self.name,
+                     "replica": replica, "depth": depth,
+                     "watermark": self.watermark}
+        with self._lock:
+            self.shed += 1
+        self._complete_request(req)
 
     # ------------------------------------------------------------- lambdas
     def _on_request(self, replica: int, obj: CascadeObject, _event) -> str:
-        """The serving lambda: runs on the replica worker's upcall thread."""
+        """The serving lambda: runs on the replica worker's upcall thread.
+        Bounded admission happens HERE, at the door — before the request
+        ever reaches an engine queue."""
         comps = obj.key.split("/")
         session, request_id = comps[-2], comps[-1]
         payload = obj.payload
         req = Request(request_id=request_id, session_key=session,
                       prompt=payload["prompt"],
                       max_new_tokens=int(payload.get("max_new_tokens", 16)))
+        target = replica
+        if self.watermark is not None:
+            # minus one: this very event still counts in the worker's
+            # outstanding-upcall depth while we are running it
+            depth = self.queue_depth(replica) - 1
+            if depth >= self.watermark:
+                target = self._least_loaded_sibling(replica)
+                if target is None:
+                    self._shed(req, replica, depth)
+                    return request_id
+                with self._lock:
+                    self.redirected += 1
         with self._lock:
-            self.routed[request_id] = replica
+            self.routed[request_id] = target
             while len(self.routed) > self._routed_cap:
                 self.routed.pop(next(iter(self.routed)))
-        self.engines[replica].submit(req)
+        self.engines[target].submit(req)
         return request_id
 
-    def _on_complete(self, req: Request) -> None:
-        """Engine completion hook: the response lands back in the store.
-        A rejected request (oversized prompt, impossible block demand) still
+    def _on_engine_complete(self, req: Request) -> None:
+        self._complete_request(req)
+
+    def _complete_request(self, req: Request) -> None:
+        """Completion at the store boundary, shared by engine completions,
+        engine rejections, and admission sheds.  A refused request still
         completes — empty tokens at the normal key, and its reason under
         ``<request_id>/error`` so clients can tell refusal from a short
         generation (read it with ``error()``)."""
+        req.done_s = req.done_s or time.monotonic()
+        for fn in list(self.on_done):
+            try:
+                fn(req)
+            except Exception:
+                # a listener failure (e.g. a cascade escalating into a
+                # stopped deployment) must not lose THIS request's answer:
+                # the response is still put and the completion still counted
+                # (the client sees the un-escalated result), and the drain
+                # can still finish.  Counted so operators can see it.
+                with self._lock:
+                    self.listener_errors += 1
         if req.error is not None:
-            self.store.put(f"{self.out_prefix}/{req.request_id}/error",
-                           req.error)
-        self.store.put(f"{self.out_prefix}/{req.request_id}",
-                       np.asarray(req.tokens, np.int32))
+            self.node.store.put(f"{self.out_prefix}/{req.request_id}/error",
+                                req.error)
+        self.node.store.put(f"{self.out_prefix}/{req.request_id}",
+                            np.asarray(req.tokens, np.int32))
         with self._lock:
-            self._completed += 1
+            self.completed += 1
+        self.node._note_completed()
 
     # ------------------------------------------------------------- clients
     def submit(self, session_key: str, request_id: str, prompt: Any, *,
                max_new_tokens: int = 16):
         """Fire a request into the fast path (trigger_put; nothing stored)."""
+        if self._stopped:
+            raise RuntimeError(f"deployment {self.name!r} is stopped")
         key = f"{self.req_prefix}/{session_key}/{request_id}"
         with self._lock:
-            self._submitted += 1
-        return self.store.trigger_put(
+            self.submitted += 1
+        self.node._note_submitted()
+        return self.node.store.trigger_put(
             key, {"prompt": np.asarray(prompt),
                   "max_new_tokens": max_new_tokens})
 
     def result(self, request_id: str) -> np.ndarray | None:
-        obj = self.store.get(f"{self.out_prefix}/{request_id}")
+        if self._stopped:
+            return None          # out pool is gone with the deployment
+        obj = self.node.store.get(f"{self.out_prefix}/{request_id}")
         return None if obj is None else np.asarray(obj.payload)
 
-    def error(self, request_id: str) -> str | None:
-        """Why a request was rejected; None while pending or on success."""
-        obj = self.store.get(f"{self.out_prefix}/{request_id}/error")
-        return None if obj is None else str(obj.payload)
-
-    # -------------------------------------------------------------- driver
-    def _idle(self) -> bool:
-        return all(eng.idle() for eng in self.engines)
-
-    def run_until_drained(self, max_ticks: int = 10_000) -> None:
-        """Tick every busy replica until all submitted requests completed.
-
-        In the paper's deployment each replica's engine loop runs on its own
-        node; here one driver thread round-robins the ticks (the jitted step
-        releases the GIL into XLA either way), while upcall threads keep
-        feeding the schedulers concurrently.
-        """
-        for _ in range(max_ticks):
-            busy = False
-            for eng in self.engines:
-                if not eng.idle():
-                    eng.tick()
-                    busy = True
-            if not busy:
-                with self._lock:
-                    done = self._completed == self._submitted
-                if done and self._idle():
-                    return
-                time.sleep(0.0002)   # in-flight upcalls not yet enqueued
-        raise TimeoutError("cluster did not drain")
+    def error(self, request_id: str):
+        """Why a request was refused: an engine-rejection string, or a
+        structured shed dict.  None while pending or on success."""
+        if self._stopped:
+            return None
+        obj = self.node.store.get(f"{self.out_prefix}/{request_id}/error")
+        return None if obj is None else obj.payload
 
     # --------------------------------------------------------------- stats
+    def idle(self) -> bool:
+        return all(eng.idle() for eng in self.engines)
+
     def stats(self) -> dict[str, Any]:
-        """Aggregate latency/throughput stats across replicas."""
+        """Latency/throughput/admission stats across this deployment."""
         ttft = sorted(t for e in self.engines for t in e.stats.ttft_s)
         tpot = sorted(t for e in self.engines for t in e.stats.tpot_s)
 
         def pct(xs: list[float], q: float) -> float:
             return xs[min(len(xs) - 1, int(q * len(xs)))] if xs else float("nan")
 
+        with self._lock:
+            shed, redirected = self.shed, self.redirected
+            submitted, completed = self.submitted, self.completed
+            listener_errors = self.listener_errors
         return {
+            "deployment": self.name,
+            "paged": self.paged,
             "n_replicas": len(self.engines),
+            "submitted": submitted,
+            "completed": completed,
+            "shed": shed,
+            "redirected": redirected,
+            "listener_errors": listener_errors,
             "requests": sum(e.stats.prefills for e in self.engines),
             "tokens_out": sum(e.stats.tokens_out for e in self.engines),
             "per_replica_requests": [e.stats.prefills for e in self.engines],
+            "queue_depths": [self.queue_depth(r)
+                             for r in range(len(self.engines))],
             "host_syncs": sum(e.stats.host_syncs for e in self.engines),
             "ticks": sum(e.stats.ticks for e in self.engines),
             "decode_ticks": sum(e.stats.decode_ticks for e in self.engines),
@@ -244,8 +347,424 @@ class ServeCluster:
             "tpot_p50_s": pct(tpot, 0.50), "tpot_p99_s": pct(tpot, 0.99),
         }
 
+    # ------------------------------------------------------------ teardown
+    def stop(self) -> None:
+        """Tear the deployment down: unregister its lambdas, remove its
+        req/out pools from the store, drop its KV pools from the device
+        store.  Call after draining — in-flight requests are the owner's
+        responsibility (the node cannot answer them once the out pool is
+        gone)."""
+        if self._stopped:
+            return
+        self._stopped = True
+        for handle, wid in self._handles:
+            self.node.store.unregister_lambda(handle, [wid])
+        self.node.store.remove_pool(self.req_prefix)
+        self.node.store.remove_pool(self.out_prefix)
+        if self.paged and self.node._kv_store is not None:
+            self.node._kv_store.remove_prefix(f"/kv/{self.name}")
+        self.node.deployments.pop(self.name, None)
+
+
+class ServeNode:
+    """One multi-tenant serving node-group: shared workers + store + KV
+    device store, hosting any number of ``ModelDeployment``s.
+
+    The driver loop (``run_until_drained`` / ``step``) round-robins ticks
+    over every busy engine of every deployment — in the paper's deployment
+    each replica's loop runs on its own node; here one thread drives them
+    all (the jitted steps release the GIL into XLA either way) while the
+    workers' upcall threads keep feeding the schedulers concurrently.
+    """
+
+    def __init__(self, *, n_workers: int = 2) -> None:
+        # One upcall thread per worker: the single thread keeps FIFO
+        # sessions ordered (the dispatcher's same-queue guarantee).
+        self.workers = [Worker(i, n_upcall_threads=1)
+                        for i in range(n_workers)]
+        self.store = CascadeStore(self.workers)
+        # One device store for every paged deployment's KV block pools
+        # (keep_versions=1: decode rewrites all leaves each tick, retaining
+        # predecessors would double pool memory).  Created lazily so a node
+        # hosting only dense models allocates nothing.
+        self._kv_store: DeviceStore | None = None
+        self.deployments: dict[str, ModelDeployment] = {}
+        self._lock = threading.Lock()
+        self._submitted = 0
+        self._completed = 0
+        self._n_deployed = 0
+
+    def kv_store(self) -> DeviceStore:
+        if self._kv_store is None:
+            self._kv_store = DeviceStore(
+                jax.make_mesh((1, 1), ("data", "model")), keep_versions=1)
+            self._kv_store.create_pool(PoolSpec(path="/kv"))
+        return self._kv_store
+
+    # --------------------------------------------------------- deployments
+    def deploy(self, name: str, cfg: ModelConfig, params, *,
+               n_replicas: int = 2, n_slots: int = 4, max_len: int = 64,
+               policy: DispatchPolicy = DispatchPolicy.ROUND_ROBIN,
+               temperature: float = 0.0, paged: bool | None = None,
+               block_size: int = 16, num_blocks: int | None = None,
+               prefix_cache: bool = True, token_budget: int | None = None,
+               watermark: int | None = None) -> ModelDeployment:
+        """Host ``cfg`` under ``/serve/<name>``; see ``ModelDeployment``.
+        ``watermark`` bounds each replica's queue depth (None = unbounded).
+        """
+        if name in self.deployments:
+            raise ValueError(f"deployment {name!r} already exists")
+        with self._lock:
+            seed_base = self._n_deployed * 131
+            self._n_deployed += 1
+        dep = ModelDeployment(
+            self, name, cfg, params, n_replicas=n_replicas, n_slots=n_slots,
+            max_len=max_len, policy=policy, temperature=temperature,
+            paged=paged, block_size=block_size, num_blocks=num_blocks,
+            prefix_cache=prefix_cache, token_budget=token_budget,
+            watermark=watermark, seed_base=seed_base)
+        self.deployments[name] = dep
+        return dep
+
+    def deployment(self, name: str) -> ModelDeployment:
+        return self.deployments[name]
+
+    def undeploy(self, name: str) -> None:
+        self.deployments[name].stop()
+
+    # ----------------------------------------------------- request counting
+    def _note_submitted(self) -> None:
+        with self._lock:
+            self._submitted += 1
+
+    def _note_completed(self) -> None:
+        with self._lock:
+            self._completed += 1
+
+    # -------------------------------------------------------------- driver
+    def _idle(self) -> bool:
+        return all(dep.idle() for dep in list(self.deployments.values()))
+
+    def step(self) -> int:
+        """Tick every busy engine across all deployments once; returns how
+        many engines were busy."""
+        busy = 0
+        for dep in list(self.deployments.values()):
+            for eng in dep.engines:
+                if not eng.idle():
+                    eng.tick()
+                    busy += 1
+        return busy
+
+    def _busy_report(self) -> str:
+        """Name who is still holding the drain up (for TimeoutError)."""
+        parts = []
+        for dep in list(self.deployments.values()):
+            for r, eng in enumerate(dep.engines):
+                if not eng.idle():
+                    parts.append(
+                        f"{dep.name}/replica{r}(queued="
+                        f"{eng.scheduler.pending(eng.replica_id)}, "
+                        f"prefilling={len(eng.prefilling)}, "
+                        f"decoding={len(eng.live)})")
+        upcalls = sum(w.dispatcher.queue_depth() for w in self.workers)
+        if upcalls:
+            parts.append(f"{upcalls} in-flight upcall(s)")
+        with self._lock:
+            if self._completed < self._submitted:
+                parts.append(f"{self._submitted - self._completed} request(s)"
+                             f" awaiting completion")
+        return "; ".join(parts) or "nothing visibly busy (lost completion?)"
+
+    def run_until_drained(self, timeout_s: float = 60.0) -> None:
+        """Tick every busy engine until every submitted request completed.
+
+        Bounded by WALL CLOCK, not iteration count — idle spins while
+        waiting on upcall delivery cost ~0.2 ms each and must not eat the
+        budget of a slow prefill.  On timeout the error names the still-busy
+        replicas and their queue states.
+        """
+        deadline = time.monotonic() + timeout_s
+        while True:
+            busy = self.step()
+            if not busy:
+                with self._lock:
+                    done = self._completed == self._submitted
+                if done and self._idle():
+                    return
+                time.sleep(0.0002)   # in-flight upcalls not yet enqueued
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"ServeNode did not drain within {timeout_s:.1f}s; "
+                    f"still busy: {self._busy_report()}")
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> dict[str, Any]:
+        with self._lock:
+            submitted, completed = self._submitted, self._completed
+        return {
+            "n_workers": len(self.workers),
+            "submitted": submitted,
+            "completed": completed,
+            "upcall_depths": [w.dispatcher.queue_depths()
+                              for w in self.workers],
+            "deployments": {name: dep.stats()
+                            for name, dep in self.deployments.items()},
+        }
+
     def close(self) -> None:
         self.store.close()
+
+    def __enter__(self) -> "ServeNode":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ======================================================================
+# Cascade escalation: light model first, heavy only when the gate trips
+# ======================================================================
+@dataclass
+class CascadeGate:
+    """The escalation decision (CascadeServe): a request whose light-model
+    generation looks UNCERTAIN is re-run on the heavy model.
+
+    ``metric="logprob"``: escalate when the mean per-token log-likelihood of
+    the light generation falls below ``threshold`` (the model was guessing).
+    ``metric="entropy"``: escalate when the mean next-token entropy exceeds
+    ``threshold``.  Both read the per-token scores the engine's in-dispatch
+    sampler surfaced — no extra device traffic, no logits on host.
+    """
+    metric: str = "logprob"
+    threshold: float = -1.0
+
+    def __post_init__(self) -> None:
+        if self.metric not in ("logprob", "entropy"):
+            raise ValueError(f"unknown gate metric {self.metric!r}")
+
+    def trips(self, req: Request) -> bool:
+        if self.metric == "logprob":
+            return req.mean_logprob() < self.threshold
+        return req.mean_entropy() > self.threshold
+
+
+class CascadeRoute:
+    """Submit to the light deployment; escalate gated requests to the heavy
+    one via an internal trigger_put into its req pool (the request moves to
+    the weights — the weights never move).
+
+    ``escalate_on_error=True`` also fails over requests the light
+    deployment refused (shed under overload, engine rejection) — the heavy
+    deployment is the fallback path, with its own watermark as the final
+    bound.  ``result()`` resolves to the heavy answer for escalated
+    requests and the light answer otherwise.
+    """
+
+    def __init__(self, light: ModelDeployment, heavy: ModelDeployment,
+                 gate: CascadeGate | None = None, *,
+                 escalate_on_error: bool = True) -> None:
+        if light.node is not heavy.node:
+            raise ValueError("cascade endpoints must share one ServeNode")
+        self.light = light
+        self.heavy = heavy
+        self.gate = gate or CascadeGate()
+        self.escalate_on_error = escalate_on_error
+        self._lock = threading.Lock()
+        self._pending: dict[str, tuple[str, np.ndarray, int]] = {}
+        # bounded like ModelDeployment.routed: a long-running route must not
+        # grow per-request state forever (insertion-order eviction)
+        self._escalated: dict[str, None] = {}
+        self._escalated_cap = 4096
+        self.requests = 0
+        self.gate_trips = 0       # escalations decided by the gate
+        self.error_failovers = 0  # escalations because light refused
+        light.on_done.append(self._on_light_done)
+
+    # ------------------------------------------------------------- clients
+    def submit(self, session_key: str, request_id: str, prompt: Any, *,
+               max_new_tokens: int = 16):
+        p = np.asarray(prompt)
+        # record BEFORE submitting (the completion listener may fire before
+        # submit returns), and roll back if the submit never happened — a
+        # failed submit must not skew escalation_rate or leak the entry
+        # (every request that does enter the light deployment completes —
+        # served, rejected, or shed — so _pending is otherwise bounded by
+        # what is in flight).
+        with self._lock:
+            self.requests += 1
+            self._pending[request_id] = (session_key, p, max_new_tokens)
+        try:
+            return self.light.submit(session_key, request_id, p,
+                                     max_new_tokens=max_new_tokens)
+        except BaseException:
+            with self._lock:
+                self.requests -= 1
+                self._pending.pop(request_id, None)
+            raise
+
+    def escalated(self, request_id: str) -> bool:
+        with self._lock:
+            return request_id in self._escalated
+
+    def _resolve(self, request_id: str) -> ModelDeployment:
+        """Which deployment's answer is authoritative.  A RECENT escalation
+        (still in the bounded set) resolves to heavy even while the heavy
+        answer is pending; an escalation old enough to have been evicted
+        from the set still resolves correctly because the heavy answer is
+        DURABLE in the heavy out pool — eviction only loses the
+        pending-escalation window, never the answer."""
+        if self.escalated(request_id):
+            return self.heavy
+        if self.heavy.result(request_id) is not None:
+            return self.heavy
+        return self.light
+
+    def result(self, request_id: str) -> np.ndarray | None:
+        return self._resolve(request_id).result(request_id)
+
+    def error(self, request_id: str):
+        return self._resolve(request_id).error(request_id)
+
+    # ---------------------------------------------------------- escalation
+    def _on_light_done(self, req: Request) -> None:
+        """Light-deployment completion listener: runs the gate and, when it
+        trips, fires the internal trigger_put into the heavy pool.  Runs on
+        the node's driver thread (engine completions) or a worker upcall
+        thread (rejections/sheds) — before the light response is put, so
+        the heavy submission is always counted before this completion and
+        the node can never observe a false drain."""
+        with self._lock:
+            info = self._pending.pop(req.request_id, None)
+        if info is None:
+            return                      # not routed through this cascade
+        session, prompt, max_new = info
+        if req.error is not None:
+            if not self.escalate_on_error:
+                return
+            reason = "error_failover"
+        elif self.gate.trips(req):
+            reason = "gate"
+        else:
+            return
+        # submit FIRST, record after: a failed heavy submit (e.g. stopped
+        # deployment) must not leave the request marked escalated — the
+        # route would then resolve to a heavy answer that can never come.
+        # The reverse race (heavy completing before the set is updated) is
+        # harmless: _resolve falls back to the durable heavy out pool.
+        self.heavy.submit(session, req.request_id, prompt,
+                          max_new_tokens=max_new)
+        with self._lock:
+            self._escalated[req.request_id] = None
+            while len(self._escalated) > self._escalated_cap:
+                self._escalated.pop(next(iter(self._escalated)))
+            if reason == "gate":
+                self.gate_trips += 1
+            else:
+                self.error_failovers += 1
+
+    # --------------------------------------------------------------- stats
+    def stats(self) -> dict[str, Any]:
+        with self._lock:
+            n, trips, fails = self.requests, self.gate_trips, \
+                self.error_failovers
+        return {
+            "light": self.light.name, "heavy": self.heavy.name,
+            "metric": self.gate.metric, "threshold": self.gate.threshold,
+            "requests": n,
+            "escalated": trips + fails,
+            "gate_trips": trips,
+            "error_failovers": fails,
+            "escalation_rate": (trips + fails) / n if n else float("nan"),
+        }
+
+
+# ======================================================================
+# Single-model convenience wrapper (the pre-multi-tenant API)
+# ======================================================================
+class ServeCluster:
+    """One model on its own ``ServeNode`` — the single-tenant special case.
+
+    Kept as the convenience entry point (tests, benchmarks, quick drivers):
+    construct with a config and params and get N replicas behind the fast
+    path, exactly as before the node/deployment split.  Multi-model hosting,
+    bounded admission and cascade routing live on ``ServeNode`` /
+    ``ModelDeployment`` / ``CascadeRoute``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, n_replicas: int = 2,
+                 n_slots: int = 4, max_len: int = 64,
+                 policy: DispatchPolicy = DispatchPolicy.ROUND_ROBIN,
+                 model_name: str | None = None,
+                 temperature: float = 0.0, paged: bool | None = None,
+                 block_size: int = 16, num_blocks: int | None = None,
+                 prefix_cache: bool = True,
+                 token_budget: int | None = None,
+                 watermark: int | None = None) -> None:
+        self.node = ServeNode(n_workers=n_replicas)
+        self.dep = self.node.deploy(
+            model_name or cfg.name, cfg, params, n_replicas=n_replicas,
+            n_slots=n_slots, max_len=max_len, policy=policy,
+            temperature=temperature, paged=paged, block_size=block_size,
+            num_blocks=num_blocks, prefix_cache=prefix_cache,
+            token_budget=token_budget, watermark=watermark)
+        self.cfg = cfg
+        self.policy = policy
+
+    # ------------------------------------------------ delegated attributes
+    @property
+    def workers(self):
+        return self.node.workers
+
+    @property
+    def store(self):
+        return self.node.store
+
+    @property
+    def kv_store(self):
+        return self.node._kv_store
+
+    @property
+    def engines(self):
+        return self.dep.engines
+
+    @property
+    def routed(self):
+        return self.dep.routed
+
+    @property
+    def paged(self):
+        return self.dep.paged
+
+    @property
+    def req_prefix(self):
+        return self.dep.req_prefix
+
+    @property
+    def out_prefix(self):
+        return self.dep.out_prefix
+
+    # ------------------------------------------------------------- clients
+    def submit(self, session_key: str, request_id: str, prompt: Any, *,
+               max_new_tokens: int = 16):
+        return self.dep.submit(session_key, request_id, prompt,
+                               max_new_tokens=max_new_tokens)
+
+    def result(self, request_id: str) -> np.ndarray | None:
+        return self.dep.result(request_id)
+
+    def error(self, request_id: str):
+        err = self.dep.error(request_id)
+        return None if err is None else str(err)
+
+    def run_until_drained(self, timeout_s: float = 60.0) -> None:
+        self.node.run_until_drained(timeout_s)
+
+    def stats(self) -> dict[str, Any]:
+        return self.dep.stats()
+
+    def close(self) -> None:
+        self.node.close()
 
     def __enter__(self) -> "ServeCluster":
         return self

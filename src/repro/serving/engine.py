@@ -29,14 +29,20 @@ Fast-path discipline of the unified tick:
   (n_slots, max_blocks), so the step compiles ONCE for the engine's
   lifetime: no per-prompt-length (or per-suffix-length) recompiles, no
   cold-turn TTFT tail from XLA.
-- **Fused boundary sampling** — the head + sampler run inside the step on
-  one gathered boundary token per slot (its decode token, or the final
-  token of the chunk that completed its prompt), so the host never sees
-  logits, only an (n_slots,) token vector.
-- **One device→host transfer per tick** — that vector is pulled once via
-  ``np.asarray``; ``stats.host_syncs == stats.ticks`` is THE invariant
-  (``_to_host`` counts every pull; an idle tick — nothing live, nothing
-  admissible — dispatches nothing and does not count as a tick).
+- **Fused boundary sampling + scoring** — the head + sampler run inside the
+  step on one gathered boundary token per slot (its decode token, or the
+  final token of the chunk that completed its prompt), so the host never
+  sees logits: only an (n_slots,) token vector plus an (n_slots, 2) score
+  vector — log p(token) and the next-token distribution's entropy, computed
+  from the same in-dispatch log-softmax.  Those per-token scores are what
+  cascade gates (serving/cluster.CascadeRoute) read to decide light→heavy
+  escalation; the engine already has them on device, so surfacing them
+  costs no extra dispatch and no extra logits traffic.
+- **One device→host sync per tick** — tokens and scores are pulled together
+  in one blocking ``jax.device_get``; ``stats.host_syncs == stats.ticks``
+  is THE invariant (``_to_host`` counts every sync point; an idle tick —
+  nothing live, nothing admissible — dispatches nothing and does not count
+  as a tick).
 
 Prefix reuse: admission matches each prompt against the per-replica trie of
 cached token blocks and prefills ONLY the suffix past the last matched block
@@ -138,10 +144,20 @@ class ServeEngine:
         temp = temperature
 
         def _sample(logits, seed):
+            """Sample + score in-dispatch: returns (tokens (B,), scores
+            (B, 2)) where scores[:, 0] = log p(token) and scores[:, 1] = the
+            next-token distribution's entropy (nats).  Both come from the
+            same log-softmax the sampler needs anyway, so cascade gates get
+            their confidence signal without the host ever seeing logits."""
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
             if temp <= 0:
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            key = jax.random.PRNGKey(seed)
-            return jax.random.categorical(key, logits / temp).astype(jnp.int32)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                key = jax.random.PRNGKey(seed)
+                tok = jax.random.categorical(key, logits / temp).astype(jnp.int32)
+            tok_logp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+            ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+            return tok, jnp.stack([tok_logp, ent], axis=-1)
 
         # Paged mode donates the pool operand: the step scatters into every
         # layer's pool leaf, and without donation XLA must copy the whole
@@ -157,20 +173,22 @@ class ServeEngine:
             def _mixed(p, pools, bt, toks, pos, rows, sample_idx, seed):
                 logits, pools = paged_mixed_step(p, pools, bt, toks, pos,
                                                  rows, sample_idx, cfg)
-                return _sample(logits, seed), pools
+                tok, score = _sample(logits, seed)
+                return tok, score, pools
 
             self._mixed = jax.jit(_mixed, donate_argnums=(1,))
         else:
             def _prefill_step(p, toks, pos, seed):
                 logits, caches = prefill(p, toks, pos, cfg, max_len=max_len)
-                return _sample(logits, seed), caches
+                tok, score = _sample(logits, seed)
+                return tok, score, caches
 
             def _decode_tick(p, caches, toks, pos, active, seed):
                 logits, new_caches = decode_step(p, caches, toks, pos, cfg)
-                sampled = _sample(logits, seed)
+                sampled, score = _sample(logits, seed)
                 # masked decode: inactive slots keep their last token so stale
                 # rows never feed garbage back into the next step
-                return jnp.where(active, sampled, toks), new_caches
+                return jnp.where(active, sampled, toks), score, new_caches
 
             self._prefill = jax.jit(_prefill_step)
             self._step = jax.jit(_decode_tick)
@@ -219,10 +237,14 @@ class ServeEngine:
         self._dispatches += 1
         return jnp.int32(self._seed_base + self._dispatches)
 
-    def _to_host(self, arr) -> np.ndarray:
+    def _to_host(self, arr):
         """THE device→host sync point; everything host-side reads through
-        here so tests/benchmarks can assert the one-transfer-per-tick rule."""
+        here so tests/benchmarks can assert the one-sync-per-tick rule.  A
+        tuple (tokens, scores) is pulled in ONE blocking ``jax.device_get``
+        — still a single sync."""
         self.stats.host_syncs += 1
+        if isinstance(arr, tuple):
+            return tuple(np.asarray(a) for a in jax.device_get(arr))
         return np.asarray(arr)
 
     @staticmethod
@@ -243,6 +265,13 @@ class ServeEngine:
     def idle(self) -> bool:
         return (self.scheduler.pending(self.replica_id) == 0
                 and not self.live and not self.prefilling)
+
+    def backlog(self) -> int:
+        """Requests this replica currently holds: queued + mid-prefill +
+        decoding.  The admission-control signal bounded per-replica queues
+        (serving/cluster.ModelDeployment) compare against their watermark."""
+        return (self.scheduler.pending(self.replica_id)
+                + len(self.prefilling) + len(self.live))
 
     # ==================================================== dense admission
     def _admit_dense(self) -> None:
@@ -267,10 +296,10 @@ class ServeEngine:
             S = shape[0]
             pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
                                    (len(group), S))
-            toks, group_caches = self._prefill(self.params, prompts, pos,
-                                               self._next_seed())
-            host_toks = self._to_host(toks)            # one sync per group
-            self.stats.prefill_batches += 1
+            toks, scores, group_caches = self._prefill(self.params, prompts,
+                                                       pos, self._next_seed())
+            host_toks, host_scores = self._to_host((toks, scores))
+            self.stats.prefill_batches += 1           # one sync per group
             now = time.monotonic()
             for row, (req, p) in enumerate(group):
                 slot = self.cm.acquire(req.request_id)
@@ -278,20 +307,25 @@ class ServeEngine:
                 self.cm.insert_prefill(slot, group_caches, S, row)
                 self.stats.prompt_tokens += S
                 self.stats.prefill_tokens += S
-                self._finish_admission(req, slot, int(host_toks[row]), now)
+                self._finish_admission(req, slot, int(host_toks[row]), now,
+                                       host_scores[row])
 
     def _finish_admission(self, req: Request, slot: int, tok: int,
-                          now: float) -> None:
+                          now: float, score) -> None:
         self._last_tokens = self._last_tokens.at[slot].set(tok)
-        self._emit_first_token(req, slot, tok, now)
+        self._emit_first_token(req, slot, tok, now, score)
 
     def _emit_first_token(self, req: Request, slot: int, tok: int,
-                          now: float) -> None:
+                          now: float, score) -> None:
         """First-token bookkeeping shared by BOTH admission paths (dense
         batched prefill, mixed tick's finished chunks), so TTFT/prefill
-        accounting can never drift between them."""
+        accounting can never drift between them.  ``score`` is the (2,)
+        [logprob, entropy] row the in-dispatch sampler computed for ``tok``.
+        """
         req.slot = slot
         req.tokens.append(tok)
+        req.scores.append(float(score[0]))
+        req.entropies.append(float(score[1]))
         req.first_token_s = now
         self.stats.ttft_s.append(now - req.arrived_s)
         self.stats.prefills += 1
@@ -416,14 +450,15 @@ class ServeEngine:
             return 0          # idle: nothing dispatched, not a tick
         t0 = time.monotonic()
         bt = jnp.asarray(self.cm.block_tables())       # (n_slots, max_blocks)
-        sampled, pools = self._mixed(
+        sampled, scores, pools = self._mixed(
             self.params, self.cm.pools, bt, jnp.asarray(toks),
             jnp.asarray(pos), jnp.asarray(rows), jnp.asarray(sample_idx),
             self._next_seed())
         self.cm.pools = pools
         self.cm.publish()
         self.stats.blocks_in_use = self.cm.blocks_in_use
-        host_toks = self._to_host(sampled)     # the ONE sync of this tick
+        # the ONE sync of this tick: tokens + scores in one device_get
+        host_toks, host_scores = self._to_host((sampled, scores))
         dt = time.monotonic() - t0
         now = time.monotonic()
         n_emitted = 0
@@ -432,6 +467,8 @@ class ServeEngine:
             req = self.live[slot]
             tok = int(host_toks[slot])
             req.tokens.append(tok)
+            req.scores.append(float(host_scores[slot, 0]))
+            req.entropies.append(float(host_scores[slot, 1]))
             self._last_host[slot] = tok
             self.cm.slots[slot].pos += 1
             self.stats.tpot_s.append(dt)
@@ -447,7 +484,7 @@ class ServeEngine:
             tok = int(host_toks[slot])
             self._last_host[slot] = tok
             n_emitted += 1
-            self._emit_first_token(req, slot, tok, now)
+            self._emit_first_token(req, slot, tok, now, host_scores[slot])
         self.stats.ticks += 1
         if decode_slots:
             self.stats.decode_ticks += 1
@@ -462,17 +499,20 @@ class ServeEngine:
         t0 = time.monotonic()
         positions = self.cm.positions()[:, None]               # (B,1)
         active = self.cm.active_mask()
-        new_toks, self.cm.caches = self._step(
+        new_toks, step_scores, self.cm.caches = self._step(
             self.params, self.cm.caches, self._last_tokens, positions,
             active, self._next_seed())
         self._last_tokens = new_toks
-        host_toks = self._to_host(new_toks)       # the ONE sync of this tick
+        # the ONE sync of this tick: tokens + scores in one device_get
+        host_toks, host_scores = self._to_host((new_toks, step_scores))
         self.cm.advance()
         dt = time.monotonic() - t0
         done = []
         n_emitted = 0
         for slot, req in list(self.live.items()):
             req.tokens.append(int(host_toks[slot]))
+            req.scores.append(float(host_scores[slot, 0]))
+            req.entropies.append(float(host_scores[slot, 1]))
             n_emitted += 1
             self.stats.tpot_s.append(dt)
             if len(req.tokens) >= req.max_new_tokens:

@@ -18,6 +18,9 @@ back its logical positions [0, ctx).  The pool is a Cascade object: it is
 ``put`` on a ``core.devstore.DeviceStore`` under the engine's ``/kv`` pool
 key after every mutation (a reference install, never a copy), so KV state
 gets the same placement/versioning treatment as any other device object.
+On a multi-tenant ``ServeNode`` all deployments share ONE device store and
+keys are namespaced ``/kv/<model>/replica<r>/pool``; deployment teardown
+drops the prefix and the pool memory with it.
 
 On top of the pool sits a **per-replica prefix cache**: a trie over prompt
 token *blocks* (``core.trie.PathTrie`` — the dispatcher's path-prefix

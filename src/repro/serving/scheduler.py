@@ -4,7 +4,15 @@ Requests are objects put to the engine's request pool; the scheduler is the
 dispatcher's policy layer: ROUND_ROBIN spreads requests across engine
 replicas (load balancing), FIFO pins a session key (e.g. one chat session /
 one camera) to a single replica so its turns stay ordered — the same two
-policies, verbatim, as the paper's upcall dispatch.
+policies, verbatim, as the paper's upcall dispatch.  (In the multi-tenant
+``ServeNode`` each replica engine runs its own single-replica scheduler and
+replica selection happens one level up, at the store's trigger-put member
+pick; ``pending`` feeds the deployment's bounded-admission queue depth.)
+
+A completed ``Request`` carries per-token scores — log p(token) and
+next-token entropy, surfaced by the engine's in-dispatch sampler — which
+cascade gates (``serving.cluster.CascadeRoute``) read to decide light→heavy
+escalation.
 
 Admission: waiting requests are admitted to free KV slots oldest-first
 (continuous batching).  The dense engine admits in batches (``admit``): an
@@ -41,9 +49,28 @@ class Request:
     # engine-filled:
     slot: int | None = None
     tokens: list[int] = field(default_factory=list)
+    # per-token scores, surfaced from the SAME in-dispatch sampler that
+    # picked the token (no extra device→host traffic): log p(token) under
+    # the model, and the full next-token distribution's entropy.  Cascade
+    # gates (escalate-to-heavy decisions) read these.
+    scores: list[float] = field(default_factory=list)      # log p(tok_i)
+    entropies: list[float] = field(default_factory=list)   # H(p_i), nats
     first_token_s: float | None = None
     done_s: float | None = None
-    error: str | None = None        # set when the engine rejects the request
+    # engine rejections set a string; admission sheds set a structured dict
+    # ({"error": "shed_overload", "replica": ..., "depth": ..., ...})
+    error: str | dict | None = None
+
+    def mean_logprob(self) -> float:
+        """Mean per-token log-likelihood of the generation — the CascadeServe
+        confidence signal (low = the light model is guessing)."""
+        return (sum(self.scores) / len(self.scores)) if self.scores \
+            else float("-inf")
+
+    def mean_entropy(self) -> float:
+        """Mean next-token distribution entropy (high = uncertain)."""
+        return (sum(self.entropies) / len(self.entropies)) if self.entropies \
+            else float("inf")
 
 
 class Scheduler:

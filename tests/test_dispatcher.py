@@ -109,6 +109,71 @@ def test_fifo_affinity_queue_hash_groups_sessions():
     pool.stop()
 
 
+def test_queue_depth_buildup_under_blocked_upcall_thread():
+    """Per-queue depth introspection: a blocked upcall thread shows its
+    backlog build up — the running event PLUS everything queued behind it —
+    and the depth falls back to zero once the lambda releases.  This is the
+    signal bounded-admission layers watermark against, so it gets its own
+    unit test independent of the serving layer that consumes it."""
+    pool, d = make(n_threads=2)
+    release = threading.Event()
+    d.register(LambdaHandle("f", "/p", lambda o, ev: release.wait(5),
+                            dispatch=DispatchPolicy.FIFO))
+    evs = []
+    for i in range(5):
+        evs += d.dispatch(CascadeObject(key="/p/k", payload=b""))
+    # FIFO same-key → ONE queue: 1 in-flight + 4 queued, other queue empty
+    depths = d.queue_depths()
+    assert sorted(depths) == [0, 5], depths
+    assert d.queue_depth() == 5
+    release.set()
+    for ev in evs:
+        ev.completion.wait(5)
+    # completion fires AFTER the depth decrement, so drained means zero
+    assert d.queue_depth() == 0
+    assert d.queue_depths() == [0, 0]
+    pool.stop()
+
+
+def test_queue_depth_counts_only_the_blocked_queue():
+    """Traffic on the healthy thread drains to zero while one FIFO key's
+    queue stays backed up — depth is per queue, not a global gauge."""
+    import zlib
+
+    pool, d = make(n_threads=2)
+    release = threading.Event()
+    seen = threading.Event()
+
+    def slow(o, ev):
+        seen.set()
+        release.wait(5)
+
+    d.register(LambdaHandle("slow", "/cam", slow, dispatch=DispatchPolicy.FIFO))
+    d.register(LambdaHandle("fast", "/other", lambda o, ev: None,
+                            dispatch=DispatchPolicy.FIFO))
+    blocked_qi = zlib.crc32(b"/cam/0") % 2
+    # a key whose FIFO hash lands on the OTHER (healthy) queue
+    fast_key = next(f"/other/{i}" for i in range(32)
+                    if zlib.crc32(f"/other/{i}".encode()) % 2 != blocked_qi)
+    blocked = []
+    for i in range(3):
+        blocked += d.dispatch(CascadeObject(key="/cam/0", payload=b""))
+    assert seen.wait(5)
+    fast = []
+    for i in range(8):
+        fast += d.dispatch(CascadeObject(key=fast_key, payload=b""))
+    for ev in fast:
+        ev.completion.wait(5)
+    depths = d.queue_depths()
+    assert depths[blocked_qi] == 3       # still wedged
+    assert depths[1 - blocked_qi] == 0   # healthy queue drained
+    release.set()
+    for ev in blocked:
+        ev.completion.wait(5)
+    assert d.queue_depth() == 0
+    pool.stop()
+
+
 def test_error_surfaces_not_swallowed():
     pool, d = make()
 

@@ -154,6 +154,62 @@ def test_requeue_preserves_fifo_across_repeated_begin_failures(params,
     assert eng.cm.n_active == 0
 
 
+def test_scheduler_requeue_fifo_with_interleaved_submits():
+    """Scheduler-level: a requeued head goes back IN FRONT of arrivals that
+    were submitted while it was un-placed — repeated admit/requeue rounds
+    interleaved with fresh submit()s must never let a younger request
+    leapfrog the restored head."""
+    from repro.serving.scheduler import Scheduler
+
+    s = Scheduler(n_replicas=1)
+    mk = lambda rid: Request(request_id=rid, session_key="s", prompt=[1])
+    s.submit(mk("r1"))
+    s.submit(mk("r2"))
+    for round_ in range(3):                   # three failed-begin rounds,
+        head = s.admit_one(0, free_slots=1)   # each with a fresh arrival
+        assert head.request_id == "r1"
+        s.submit(mk(f"new{round_}"))
+        s.requeue(0, head)
+    order = []
+    while (r := s.admit_one(0, free_slots=1)) is not None:
+        order.append(r.request_id)
+    assert order == ["r1", "r2", "new0", "new1", "new2"]
+
+
+def test_engine_requeue_fifo_with_interleaved_submits(params, monkeypatch):
+    """Engine-level: begin() refusals across several ticks WHILE new
+    requests keep arriving — completion order must still be submission
+    order (the restored head is retried before any of the newcomers)."""
+    rng = np.random.default_rng(11)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=64, paged=True,
+                      block_size=16)
+    real = eng.cm.begin
+    calls = {"n": 0}
+
+    def flaky(slot, prompt, max_new):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            eng.cm.release(slot)
+            return None
+        return real(slot, prompt, max_new)
+
+    monkeypatch.setattr(eng.cm, "begin", flaky)
+    done = []
+    eng.on_complete = done.append
+    eng.submit(Request(request_id="r1", session_key="s",
+                       prompt=_toks(rng, 8), max_new_tokens=2))
+    eng.tick()                                # begin fails: r1 requeued
+    eng.submit(Request(request_id="r2", session_key="s",
+                       prompt=_toks(rng, 8), max_new_tokens=2))
+    eng.tick()                                # fails again; r2 behind r1
+    eng.submit(Request(request_id="r3", session_key="s",
+                       prompt=_toks(rng, 8), max_new_tokens=2))
+    eng.run_until_drained()
+    assert [r.request_id for r in done] == ["r1", "r2", "r3"]
+    assert calls["n"] == 2 + 3                # 2 refusals + 3 admissions
+    assert eng.cm.n_active == 0
+
+
 def test_oversized_demand_head_escapes_mid_stream(params):
     """A never-servable request enqueued straight into the scheduler WHILE
     other sessions are decoding must pop through admit_one into the engine's

@@ -1,0 +1,414 @@
+"""Multi-tenant ServeNode: multi-model hosting, bounded admission with
+shed/redirect, cascade escalation, and deployment teardown.
+
+The node hosts a paged attention model and a dense SSM model side by side on
+one shared worker set / store / KV device store; each deployment keeps its
+own host-sync invariant.  Bounded admission (MultiTASC++-style) is checked
+deterministically by waiting each trigger_put's upcall before the next, so
+queue depths at each admission decision are exact.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.pools import DispatchPolicy
+from repro.models import ModelConfig, init_params
+from repro.serving.cluster import CascadeGate, CascadeRoute, ServeNode
+from repro.serving.scheduler import Request
+
+LIGHT = ModelConfig(name="light", family="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                    dtype="float32", q_chunk=16)
+# d_inner = 2*d_model must divide by ssm_head_dim (64): d_model=64 → 2 heads
+HEAVY = ModelConfig(name="heavy", family="ssm", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                    dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def light_params():
+    return init_params(jax.random.PRNGKey(0), LIGHT)
+
+
+@pytest.fixture(scope="module")
+def heavy_params():
+    return init_params(jax.random.PRNGKey(1), HEAVY)
+
+
+def _prompt(rng, lo=3, hi=9):
+    return rng.integers(0, 128, (int(rng.integers(lo, hi)),)).astype(np.int32)
+
+
+# ============================================================ multi-model
+def test_two_models_side_by_side_keep_their_invariants(light_params,
+                                                       heavy_params):
+    """One node, one worker set: a paged attention deployment and a dense
+    SSM deployment interleave on the same driver loop, and each upholds its
+    own host-sync discipline."""
+    rng = np.random.default_rng(0)
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=2,
+                            n_slots=2, max_len=48)
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=2,
+                            n_slots=2, max_len=48)
+        assert light.paged and not heavy.paged
+        for i in range(6):
+            light.submit(f"ls{i % 2}", f"l{i}", _prompt(rng),
+                         max_new_tokens=3)
+            heavy.submit(f"hs{i % 2}", f"h{i}", _prompt(rng),
+                         max_new_tokens=4)
+        node.run_until_drained()
+        for i in range(6):
+            assert light.result(f"l{i}").shape == (3,)
+            assert heavy.result(f"h{i}").shape == (4,)
+        ls, hs = light.stats(), heavy.stats()
+        assert ls["requests"] == 6 and hs["requests"] == 6
+        # the paged invariant, per deployment
+        assert ls["host_syncs"] == ls["ticks"]
+        # the dense discipline, per deployment
+        assert hs["host_syncs"] == hs["decode_ticks"] + hs["prefill_batches"]
+        # paged KV pools are namespaced per model/replica on the ONE store
+        kv_keys = sorted(node.kv_store().keys())
+        assert kv_keys == ["/kv/light/replica0/pool",
+                           "/kv/light/replica1/pool"]
+        st = node.stats()
+        assert st["submitted"] == st["completed"] == 12
+        assert set(st["deployments"]) == {"light", "heavy"}
+
+
+# ======================================================= bounded admission
+def test_shed_over_watermark_with_structured_reason(light_params):
+    """A single-replica deployment with watermark W accepts exactly W
+    requests from a burst and sheds the rest with a structured reason —
+    never a silent drop, never an unbounded queue."""
+    rng = np.random.default_rng(1)
+    with ServeNode(n_workers=1) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                          n_slots=1, max_len=48, watermark=2)
+        # wait each upcall so every admission decision sees an exact depth
+        for i in range(8):
+            dep.submit("s", f"r{i}", _prompt(rng), max_new_tokens=2).wait()
+        assert dep.shed == 6 and dep.redirected == 0
+        node.run_until_drained()
+        served = [i for i in range(8) if len(dep.result(f"r{i}")) == 2]
+        assert served == [0, 1]
+        for i in range(2, 8):
+            err = dep.error(f"r{i}")
+            assert err["error"] == "shed_overload"
+            assert err["deployment"] == "light"
+            assert err["watermark"] == 2 and err["depth"] >= 2
+            assert len(dep.result(f"r{i}")) == 0
+        assert dep.stats()["shed"] == 6
+
+
+def test_redirect_to_least_loaded_sibling_then_shed(light_params):
+    """FIFO pins a session to one replica; once that replica's queue hits
+    the watermark, arrivals are redirected to the least-loaded sibling —
+    and only when EVERY sibling is saturated do they shed."""
+    rng = np.random.default_rng(2)
+    with ServeNode(n_workers=2) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=2,
+                          n_slots=1, max_len=48, watermark=2,
+                          policy=DispatchPolicy.FIFO)
+        for i in range(5):
+            dep.submit("one-session", f"r{i}", _prompt(rng),
+                       max_new_tokens=2).wait()
+        # 2 admitted at home, 2 redirected to the sibling, 1 shed
+        assert dep.redirected == 2 and dep.shed == 1
+        home = dep.routed["r0"]
+        assert dep.routed["r1"] == home
+        assert dep.routed["r2"] == dep.routed["r3"] == 1 - home
+        node.run_until_drained()
+        for i in range(4):
+            assert len(dep.result(f"r{i}")) == 2
+        assert dep.error("r4")["error"] == "shed_overload"
+        st = dep.stats()
+        assert st["redirected"] == 2 and st["shed"] == 1
+
+
+def test_unbounded_deployment_never_sheds(light_params):
+    """watermark=None (the default) keeps the old accept-everything
+    behavior: a burst far beyond capacity just queues."""
+    rng = np.random.default_rng(3)
+    with ServeNode(n_workers=1) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                          n_slots=1, max_len=48)
+        for i in range(10):
+            dep.submit("s", f"r{i}", _prompt(rng), max_new_tokens=2).wait()
+        node.run_until_drained()
+        assert dep.shed == 0 and dep.redirected == 0
+        assert all(len(dep.result(f"r{i}")) == 2 for i in range(10))
+
+
+# ======================================================== cascade routing
+def test_cascade_gate_reads_per_token_scores():
+    r = Request(request_id="r", session_key="s", prompt=[1])
+    r.scores = [-0.5, -1.5]          # mean -1.0
+    r.entropies = [1.0, 3.0]         # mean 2.0
+    assert CascadeGate("logprob", threshold=-0.5).trips(r)
+    assert not CascadeGate("logprob", threshold=-2.0).trips(r)
+    assert CascadeGate("entropy", threshold=1.5).trips(r)
+    assert not CascadeGate("entropy", threshold=2.5).trips(r)
+    with pytest.raises(ValueError):
+        CascadeGate("vibes", threshold=0.0)
+
+
+def test_cascade_route_escalates_when_gate_trips(light_params, heavy_params):
+    """threshold=+inf trips the logprob gate on every request: all requests
+    re-run on the heavy deployment via the internal trigger_put, and the
+    cascade answer equals a direct heavy-deployment answer."""
+    rng = np.random.default_rng(4)
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=2,
+                            n_slots=2, max_len=48)
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=2,
+                            n_slots=2, max_len=48)
+        route = CascadeRoute(light, heavy,
+                             CascadeGate("logprob", threshold=math.inf))
+        prompts = {f"r{i}": _prompt(rng) for i in range(4)}
+        for rid, p in prompts.items():
+            route.submit("sess", rid, p, max_new_tokens=3)
+        node.run_until_drained()
+        st = route.stats()
+        assert st["escalated"] == st["gate_trips"] == 4
+        assert st["escalation_rate"] == 1.0
+        assert heavy.stats()["requests"] == 4
+        for rid, p in prompts.items():
+            assert route.escalated(rid)
+            got = route.result(rid)
+            assert got is not None and got.shape == (3,)
+            # the cascade answer IS the heavy model's answer
+            heavy.submit("ref", f"ref-{rid}", p, max_new_tokens=3)
+            node.run_until_drained()
+            np.testing.assert_array_equal(got, heavy.result(f"ref-{rid}"))
+
+
+def test_cascade_route_keeps_confident_requests_on_light(light_params,
+                                                         heavy_params):
+    """threshold=-inf never trips: the heavy model is never touched and the
+    route resolves to the light answers."""
+    rng = np.random.default_rng(5)
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=2,
+                            n_slots=2, max_len=48)
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=1,
+                            n_slots=2, max_len=48)
+        route = CascadeRoute(light, heavy,
+                             CascadeGate("logprob", threshold=-math.inf))
+        for i in range(4):
+            route.submit("sess", f"r{i}", _prompt(rng), max_new_tokens=3)
+        node.run_until_drained()
+        assert route.stats()["escalated"] == 0
+        assert heavy.stats()["requests"] == 0
+        for i in range(4):
+            assert not route.escalated(f"r{i}")
+            np.testing.assert_array_equal(route.result(f"r{i}"),
+                                          light.result(f"r{i}"))
+
+
+def test_cascade_result_survives_escalation_set_eviction(light_params,
+                                                         heavy_params):
+    """The bounded escalation set only caps INTROSPECTION state: once an
+    escalated request's id has been evicted, result()/error() still resolve
+    to the heavy answer (durable in the heavy out pool) — never silently
+    back to the light answer the gate rejected."""
+    rng = np.random.default_rng(12)
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                            n_slots=2, max_len=48)
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=1,
+                            n_slots=2, max_len=48)
+        route = CascadeRoute(light, heavy,
+                             CascadeGate("logprob", threshold=math.inf))
+        route._escalated_cap = 2                 # force eviction quickly
+        for i in range(4):
+            route.submit("s", f"r{i}", _prompt(rng), max_new_tokens=3)
+        node.run_until_drained()
+        assert route.stats()["escalated"] == 4
+        assert not route.escalated("r0")         # evicted from the set...
+        np.testing.assert_array_equal(           # ...answer still heavy's
+            route.result("r0"), heavy.result("r0"))
+        assert route.error("r0") is None
+
+
+def test_listener_exception_cannot_lose_a_completion(light_params,
+                                                     heavy_params):
+    """A raising on_done listener (e.g. a cascade escalating into a stopped
+    heavy deployment) is contained: the light answer still lands in the out
+    pool, the completion is still counted (drain finishes), and the fault
+    is visible in stats."""
+    rng = np.random.default_rng(13)
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                            n_slots=2, max_len=48)
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=1,
+                            n_slots=2, max_len=48)
+        route = CascadeRoute(light, heavy,
+                             CascadeGate("logprob", threshold=math.inf))
+        node.undeploy("heavy")                   # escalation target is gone
+        route.submit("s", "r0", _prompt(rng), max_new_tokens=2)
+        node.run_until_drained()                 # must NOT TimeoutError
+        assert len(light.result("r0")) == 2      # light answer survived
+        assert light.stats()["listener_errors"] == 1
+        # the un-escalated light answer is what the route resolves to
+        np.testing.assert_array_equal(route.result("r0"),
+                                      light.result("r0"))
+    """A light-tier shed is not the end of the request: escalate_on_error
+    fails it over to the heavy deployment, which serves it normally."""
+    rng = np.random.default_rng(6)
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                            n_slots=1, max_len=48, watermark=0)  # sheds ALL
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=1,
+                            n_slots=2, max_len=48)
+        route = CascadeRoute(light, heavy,
+                             CascadeGate("logprob", threshold=-math.inf))
+        for i in range(3):
+            route.submit("s", f"r{i}", _prompt(rng), max_new_tokens=2)
+        node.run_until_drained()
+        st = route.stats()
+        assert st["error_failovers"] == 3 and st["gate_trips"] == 0
+        assert light.shed == 3
+        for i in range(3):
+            assert route.escalated(f"r{i}")
+            assert len(route.result(f"r{i}")) == 2    # heavy answered
+            assert route.error(f"r{i}") is None       # ...successfully
+
+
+# ========================================================== score surfacing
+def test_engines_surface_per_token_scores(light_params, heavy_params):
+    """Both engine disciplines emit one (logprob, entropy) pair per emitted
+    token, from the same in-dispatch sampler that picked it."""
+    rng = np.random.default_rng(7)
+    with ServeNode(n_workers=1) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                            n_slots=2, max_len=48)
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=1,
+                            n_slots=2, max_len=48)
+        done = []
+        light.on_done.append(done.append)
+        heavy.on_done.append(done.append)
+        light.submit("s", "lp", _prompt(rng), max_new_tokens=5)
+        heavy.submit("s", "hp", _prompt(rng), max_new_tokens=5)
+        node.run_until_drained()
+        assert len(done) == 2
+        for req in done:
+            assert len(req.scores) == len(req.tokens) == 5
+            assert len(req.entropies) == 5
+            assert all(s <= 0.0 for s in req.scores)       # log-probs
+            assert all(e >= 0.0 for e in req.entropies)    # entropies
+            assert math.isfinite(req.mean_logprob())
+            assert math.isfinite(req.mean_entropy())
+
+
+# ================================================================ teardown
+def test_deployment_stop_tears_down_pools_lambdas_and_kv(light_params,
+                                                         heavy_params):
+    rng = np.random.default_rng(8)
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=2,
+                            n_slots=2, max_len=48)
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=1,
+                            n_slots=2, max_len=48)
+        light.submit("s", "r0", _prompt(rng), max_new_tokens=2)
+        node.run_until_drained()
+        assert node.kv_store().keys()
+        node.undeploy("light")
+        # pools gone: the store no longer owns the deployment's keys
+        with pytest.raises(RuntimeError):
+            light.submit("s", "r1", _prompt(rng))
+        with pytest.raises(KeyError):
+            node.store.trigger_put("/serve/light/req/s/r1", {"prompt": [1]})
+        # lambdas unregistered on every worker
+        for w in node.workers:
+            assert w.dispatcher.match("/serve/light/req/s/r1") == []
+        # KV pools freed on the device store
+        assert not [k for k in node.kv_store().keys()
+                    if k.startswith("/kv/light")]
+        assert "light" not in node.deployments
+        # the surviving deployment still serves
+        heavy.submit("s", "h0", _prompt(rng), max_new_tokens=2)
+        node.run_until_drained()
+        assert len(heavy.result("h0")) == 2
+
+
+def test_stop_with_common_name_prefix_spares_the_other_tenant(light_params):
+    """Teardown is per path COMPONENT: stopping "light" must not take
+    "light2"'s KV pools (or service) with it."""
+    rng = np.random.default_rng(10)
+    with ServeNode(n_workers=1) as node:
+        a = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                        n_slots=2, max_len=48)
+        b = node.deploy("light2", LIGHT, light_params, n_replicas=1,
+                        n_slots=2, max_len=48)
+        a.submit("s", "a0", _prompt(rng), max_new_tokens=2)
+        b.submit("s", "b0", _prompt(rng), max_new_tokens=2)
+        node.run_until_drained()
+        node.undeploy("light")
+        assert [k for k in node.kv_store().keys()
+                if k.startswith("/kv/light2/")] == ["/kv/light2/replica0/pool"]
+        assert not [k for k in node.kv_store().keys()
+                    if k.startswith("/kv/light/")]
+        b.submit("s", "b1", _prompt(rng), max_new_tokens=2)
+        node.run_until_drained()
+        assert len(b.result("b1")) == 2
+
+
+def test_queue_depth_is_per_tenant_not_per_worker(light_params,
+                                                  heavy_params):
+    """Replica depth counts only THIS deployment's in-flight upcalls: a
+    burst bound for the heavy deployment, stuck on the shared worker's
+    upcall queue, must not register on the idle light deployment's depth
+    (and so can never trip its watermark)."""
+    import threading
+
+    from repro.core.dispatcher import LambdaHandle
+    from repro.core.pools import Persistence, PoolSpec
+
+    rng = np.random.default_rng(11)
+    with ServeNode(n_workers=1) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                            n_slots=2, max_len=48, watermark=2)
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=1,
+                            n_slots=2, max_len=48)
+        # wedge worker 0's single upcall thread behind a blocker lambda,
+        # then pile heavy-bound events up behind it
+        release = threading.Event()
+        node.store.create_pool(PoolSpec(path="/blocker",
+                                        persistence=Persistence.TRANSIENT))
+        node.store.register_lambda(
+            LambdaHandle("blocker", "/blocker",
+                         lambda o, ev: release.wait(5)), worker_ids=[0])
+        node.store.trigger_put("/blocker/x", b"")
+        for i in range(6):
+            heavy.submit("s", f"h{i}", _prompt(rng), max_new_tokens=2)
+        d = node.workers[0].dispatcher
+        assert d.queue_depth() == 7                       # blocker + 6 heavy
+        assert d.queue_depth("heavy-replica-0") == 6      # per-handle view
+        assert d.queue_depth("light-replica-0") == 0
+        # THE point: light's admission depth is untouched by heavy traffic
+        assert heavy.queue_depth(0) == 6
+        assert light.queue_depth(0) == 0
+        release.set()
+        node.run_until_drained()
+        assert all(len(heavy.result(f"h{i}")) == 2 for i in range(6))
+        assert light.shed == 0
+
+
+# ========================================================== drain timeout
+def test_drain_timeout_names_still_busy_replicas(light_params, monkeypatch):
+    """The wall-clock drain timeout must say WHO is stuck, not just that
+    something is."""
+    rng = np.random.default_rng(9)
+    with ServeNode(n_workers=1) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                          n_slots=2, max_len=48)
+        dep.submit("s", "r0", _prompt(rng), max_new_tokens=2).wait()
+        monkeypatch.setattr(dep.engines[0], "tick", lambda: 0)  # wedge it
+        with pytest.raises(TimeoutError) as ei:
+            node.run_until_drained(timeout_s=0.3)
+        msg = str(ei.value)
+        assert "light/replica0" in msg
+        assert "queued=1" in msg

@@ -143,6 +143,33 @@ def test_persistent_put_survives_in_log(tmp_path):
     s.close()
 
 
+def test_remove_pool_tears_down_storage_and_log_handles(tmp_path):
+    """Pool teardown drops volatile chains, shard state, AND the open
+    persistent-log handles (no leaked file objects, no stale cached log
+    serving a later tenant); the on-disk log itself survives — persistent
+    pools are durable by definition, so a re-created pool resumes it the
+    way a restarted node would."""
+    s = CascadeStore([Worker(0, log_dir=str(tmp_path / "w0"))])
+    s.create_pool(PoolSpec(path="/p", persistence=Persistence.PERSISTENT))
+    s.put("/p/k", b"alpha")
+    w = s.workers[0]
+    old_log = w.logs["/p"]
+    s.remove_pool("/p")
+    assert "/p" not in w.logs                 # handle dropped and closed
+    assert w.load_latest("/p/k") is None      # volatile chain gone
+    with pytest.raises(KeyError):
+        s.put("/p/k", b"orphan")              # no pool owns the key anymore
+    # durable storage: a re-created pool opens a FRESH handle onto the
+    # surviving log file and appends after the old records
+    s.create_pool(PoolSpec(path="/p", persistence=Persistence.PERSISTENT))
+    s.put("/p/k", b"beta")
+    new_log = w.logs["/p"]
+    assert new_log is not old_log
+    objs = new_log.version_range_from_disk("/p/k", 0, 10)
+    assert [o.payload for o in objs] == [b"alpha", b"beta"]
+    s.close()
+
+
 def test_persistent_put_acks_after_all_members_stable(tmp_path):
     """§3.2: a persistent put is acknowledged only once EVERY member's log
     has the record durable — not just the last member's."""

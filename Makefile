@@ -13,11 +13,11 @@ bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run $(if $(ONLY),--only $(ONLY))
 
 # exactly what CI's bench-smoke job runs: the serving perf path end-to-end
-# on tiny configs (unified tick, paged KV + prefix reuse, multi-model
-# cascade + bounded admission)
+# on tiny configs (unified tick, paged KV + prefix reuse, speculative
+# decode, multi-model cascade + bounded admission)
 bench-smoke:
 	BENCH_SMOKE=1 PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
-		--only serve_prefix_reuse,serve_mixed_tick,serve_multi_model
+		--only serve_prefix_reuse,serve_mixed_tick,serve_speculative,serve_multi_model
 
 serve-example:
 	PYTHONPATH=$(PYTHONPATH) python examples/serve_cluster.py

@@ -33,6 +33,7 @@ def main() -> None:
         ("serve_cluster_ttft_tpot", pipelines.bench_serve_cluster),
         ("serve_prefix_reuse", serve.bench_serve_prefix_reuse),
         ("serve_mixed_tick", serve.bench_serve_mixed_tick),
+        ("serve_speculative", serve.bench_serve_speculative),
         ("serve_multi_model", serve.bench_serve_multi_model),
         ("roofline_table", lambda out: roofline.table(out)),
     ]

@@ -36,7 +36,23 @@ host-sync discipline (paged: ``host_syncs == ticks``; dense SSM:
 answered — shed at the light tier fails over to the heavy tier, never into
 silence.
 
-Set ``BENCH_SMOKE=1`` for a tiny-config, few-tick variant of all three (CI
+``serve_speculative``: decode TPOT with speculative decoding on the unified
+tick.  Three passes over identical prompts at the SAME token budget (the
+step's packed shape — and so its per-dispatch cost — is fixed either way):
+a non-speculative baseline; a speculative pass whose requests carry the
+baseline's own output as drafts (the self-drafting cascade's perfect-
+drafter limit — exactly what a ``CascadeRoute`` plants on escalation when
+light and heavy agree); and a speculative pass drafting only from the
+request's own history (n-gram prompt lookup).  Records decode TPOT p50/p99,
+acceptance rate, and the drafted/accepted/rolled-back counters.  Asserts —
+always — that greedy outputs are IDENTICAL across all three passes
+(rejection sampling is lossless), that accepted <= drafted with
+rolled-back making up the difference, that the perfect-drafter acceptance
+rate is >= 0.5, and ``host_syncs == ticks`` with speculation on; outside
+smoke mode the speculative TPOT p50 must beat the baseline (one sync
+amortized over multiple accepted tokens).
+
+Set ``BENCH_SMOKE=1`` for a tiny-config, few-tick variant of all four (CI
 runs this on every PR).  Results land in BENCH_serve.json so the serving
 perf trajectory is tracked across PRs.
 """
@@ -67,7 +83,8 @@ def _write_results(key: str, results: dict, out) -> None:
         except (OSError, json.JSONDecodeError):
             data = {}
     if not all(isinstance(v, dict) and ("turns" in v or "chunked" in v
-                                        or "total" in v or "route" in v)
+                                        or "total" in v or "route" in v
+                                        or "baseline" in v)
                for v in data.values()):
         data = {}                     # pre-PR3 flat schema: start fresh
     data[key] = results
@@ -271,6 +288,111 @@ def bench_serve_mixed_tick(out) -> dict:
             "chunked prefill must bound decode TPOT below the monolithic tick"
         out("serve_mixed_tick/CLAIM chunked-tpot-beats-monolithic,PASS,exact")
     _write_results("serve_mixed_tick", results, out)
+    return results
+
+
+def bench_serve_speculative(out) -> dict:
+    from repro.models import init_params
+    from repro.models.config import ModelConfig
+    from repro.serving.engine import ServeEngine
+    from repro.serving.scheduler import Request
+
+    smoke = _smoke()
+    cfg = ModelConfig(name="bench-spec", family="dense", n_layers=2,
+                      d_model=64 if smoke else 256, n_heads=4, n_kv_heads=2,
+                      d_ff=128 if smoke else 512, vocab_size=256,
+                      dtype="float32", q_chunk=32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_slots = 4 if smoke else 8
+    S = 16 if smoke else 32
+    decode_new = 16 if smoke else 48
+    spec_k = 4
+    # one budget for every pass: full drafting headroom, fixed packed shape
+    # (so baseline and speculative ticks dispatch the same program cost and
+    # the TPOT delta is pure accepted-token amortization, not shape luck)
+    budget = n_slots * (1 + spec_k) + 8
+    max_len = 96 if smoke else 160
+    results: dict = {}
+
+    def run(label, spec, drafts=None):
+        rng = np.random.default_rng(11)      # same stream ⇒ same prompts
+        eng = ServeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                          paged=True, block_size=16, token_budget=budget,
+                          spec_k=spec)
+        done = []
+        eng.on_complete = done.append
+        t0 = time.monotonic()
+        eng.submit(Request(
+            request_id="warm", session_key="w", max_new_tokens=2,
+            prompt=rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)))
+        eng.run_until_drained()
+        compile_s = time.monotonic() - t0
+        mark = len(eng.stats.tpot_s)
+        for i in range(n_slots):
+            req = Request(
+                request_id=f"chat{i}", session_key=f"s{i}",
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    (S,)).astype(np.int32),
+                max_new_tokens=decode_new)
+            if drafts is not None:
+                req.draft_tokens = np.asarray(drafts[req.request_id],
+                                              np.int32)
+            eng.submit(req)
+        t0 = time.monotonic()
+        eng.run_until_drained()
+        wall_s = time.monotonic() - t0
+        assert eng.stats.host_syncs == eng.stats.ticks, \
+            "speculation broke the one-sync-per-tick invariant"
+        st = eng.stats
+        assert st.spec_accepted <= st.spec_drafted
+        assert st.spec_accepted + st.spec_rolled_back == st.spec_drafted
+        tpot = st.tpot_s[mark:]
+        row = {
+            "spec_k": spec, "token_budget": budget, "compile_s": compile_s,
+            "tpot_p50_us": _pct(tpot, 0.50) * 1e6,
+            "tpot_p99_us": _pct(tpot, 0.99) * 1e6,
+            "ticks": st.ticks, "tokens_out": st.tokens_out,
+            "drafted": st.spec_drafted, "accepted": st.spec_accepted,
+            "rolled_back": st.spec_rolled_back,
+            "acceptance_rate": st.spec_acceptance_rate(),
+            "wall_s": wall_s,
+        }
+        results[label] = row
+        out(f"serve_speculative/{label},{row['tpot_p50_us']:.1f},"
+            f"tpot_p99_us={row['tpot_p99_us']:.1f} ticks={row['ticks']} "
+            f"drafted={row['drafted']} accepted={row['accepted']} "
+            f"rolled_back={row['rolled_back']} "
+            f"acceptance_rate={row['acceptance_rate']:.2f}")
+        return {r.request_id: list(r.tokens) for r in done
+                if r.request_id.startswith("chat")}
+
+    base_toks = run("baseline", 0)
+    # the self-drafting cascade's perfect-drafter limit: requests carry the
+    # target's own greedy output as their draft stream (what CascadeRoute
+    # plants on escalation when light and heavy agree)
+    spec_toks = run("speculative", spec_k, drafts=base_toks)
+    ngram_toks = run("self_drafting", spec_k)
+    # losslessness: greedy streams identical across all three passes
+    assert spec_toks == base_toks, \
+        "speculative greedy output diverged from the baseline"
+    assert ngram_toks == base_toks, \
+        "self-drafting greedy output diverged from the baseline"
+    sp = results["speculative"]
+    assert sp["drafted"] > 0 and sp["acceptance_rate"] >= 0.5, \
+        "perfect drafts must verify at >= 0.5 acceptance"
+    speedup = (results["baseline"]["tpot_p50_us"]
+               / max(1e-9, sp["tpot_p50_us"]))
+    results["tpot_p50_speedup"] = speedup
+    out(f"serve_speculative/speedup,{speedup:.2f},"
+        f"baseline_p50_over_speculative_p50 "
+        f"ngram_acceptance={results['self_drafting']['acceptance_rate']:.2f}")
+    if not _smoke():
+        assert sp["tpot_p50_us"] < results["baseline"]["tpot_p50_us"], \
+            "speculative decode must beat baseline TPOT p50"
+        out("serve_speculative/CLAIM spec-tpot-beats-baseline,PASS,exact")
+    out("serve_speculative/CLAIM greedy-output-lossless,PASS,exact")
+    out("serve_speculative/CLAIM counters-consistent,PASS,exact")
+    _write_results("serve_speculative", results, out)
     return results
 
 

@@ -43,7 +43,11 @@ chunk tokens, written in this same dispatch), the cross-request isolation
 (different requests own disjoint physical blocks), and the pad-lane kill
 (pad tokens carry ``token_pos = -1`` so every position is masked and the
 zero-l guard emits exact zeros).  Single-token paged decode is the special
-case ``row_ids == arange(B)`` and is implemented that way.
+case ``row_ids == arange(B)`` and is implemented that way.  Speculative
+VERIFY rows (k fed tokens at consecutive tail positions of one request) are
+the same packing as a k-token prefill chunk — no kernel changes needed for
+speculative decoding; the engine's acceptance rule consumes the per-position
+logits downstream.
 """
 from __future__ import annotations
 

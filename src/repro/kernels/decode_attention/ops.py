@@ -61,7 +61,16 @@ def ragged_paged_attention(q, k_pool, v_pool, block_tables, row_ids,
     rows alike: every token streams its own request's blocks via a per-token
     scalar-prefetched table gather and is causally masked at its own
     position, so intra-chunk causality, cross-request isolation, and pad-lane
-    suppression are all the same mask."""
+    suppression are all the same mask.
+
+    Multi-token VERIFY rows (speculative decoding) are the same packing: a
+    row that feeds k tokens at consecutive tail positions [P, P+k) is
+    indistinguishable from a k-token prefill chunk — K/V for all k positions
+    is written before any token reads, and each token attends causally at
+    its own position, which is exactly the draft-verification semantics the
+    engine's acceptance rule needs.  k = 1 degenerates to today's
+    single-token decode (``paged_decode_attention`` is literally this kernel
+    with ``row_ids = arange(B)``)."""
     if scale is None:
         scale = q.shape[-1] ** -0.5
     return ragged_paged_attention_fwd(q, k_pool, v_pool, block_tables,

@@ -77,7 +77,9 @@ def ragged_paged_attention_ref(q, k_pool, v_pool, block_tables, row_ids,
     per-TOKEN tables through ``row_ids``, then reuse the paged oracle — each
     packed token is a one-token "request" over its own request's blocks.
 
-    q: (T,H,D) packed tokens (prefill-chunk tokens and decode tokens mixed);
+    q: (T,H,D) packed tokens (prefill-chunk tokens, decode tokens, and
+    speculative multi-token VERIFY rows mixed — a row feeding k draft tokens
+    at consecutive tail positions is just a k-token chunk to this oracle);
     block_tables (R,nb) int32 (-1 = unused); row_ids (T,) request row per
     token (-1 = pad); token_pos (T,) absolute positions (-1 = pad).  Pad
     lanes return exact zeros, matching the kernel's zero-l guard."""

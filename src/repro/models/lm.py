@@ -359,6 +359,17 @@ def supports_paged(cfg: ModelConfig) -> bool:
         for seg in cfg.layout() for s in seg.pattern)
 
 
+def supports_speculative(cfg: ModelConfig) -> bool:
+    """Speculative (multi-token verify) decode rows need the paged path:
+    a k-token row rides the packed ragged dispatch as k+1 fed tokens, and
+    rejected-draft K/V is undone by truncating the row's block table
+    (serving/kvcache.rollback_writes).  The dense slot cache has no write
+    watermark to rewind, and SSM/conv state folds the whole history into
+    O(1) per request — it cannot drop the last j tokens at all.  Mirrors
+    ``supports_paged``; engines gate on this exactly as they gate paging."""
+    return supports_paged(cfg)
+
+
 def init_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int):
     """Global KV block pool, same tree layout as init_decode_caches but with
     (num_blocks, block_size) replacing the (batch, seq) plane."""
@@ -404,15 +415,21 @@ def paged_mixed_step(params, pools, block_tables, tokens, positions, row_ids,
 
     tokens (T,) int32 packed tokens; positions (T,) absolute positions (-1 =
     pad lane); row_ids (T,) block-table row per token (-1 = pad);
-    block_tables (R, nb); sample_idx (R,) the packed index each request row
+    block_tables (R, nb); sample_idx the packed index each request row
     samples from — its decode token, or the final token of the prefill chunk
     that completed its prompt (rows with no boundary this tick point anywhere
-    and their logits are ignored host-side).
+    and their logits are ignored host-side).  With sample_idx (R,) one
+    boundary token is gathered per row and logits are (R, V).  Speculative
+    decoding passes sample_idx (R, J): row r's J fed tokens (its last
+    committed token plus J-1 verified draft tokens, lanes repeated for rows
+    with fewer), and logits are (R, J, V) — the target distributions the
+    acceptance rule (models.sampling.speculative_verify) consumes, all from
+    this same single dispatch.
 
     Every layer writes ALL packed K/V before attending, so a chunk token
     sees its same-dispatch predecessors AND any same-tick sibling's shared
-    prefix blocks; the head runs only on the R gathered boundary tokens, not
-    the full packed row.  Returns (logits (R, V), new pools)."""
+    prefix blocks; the head runs only on the gathered boundary tokens, not
+    the full packed row.  Returns (logits, new pools)."""
     x = _embed_inputs(params, tokens[None], cfg)              # (1, T, d)
     embeds0 = x
     new_pools = []
@@ -424,9 +441,10 @@ def paged_mixed_step(params, pools, block_tables, tokens, positions, row_ids,
                                  embeds0=embeds0, mode="mixed",
                                  block_table=block_tables, row_ids=row_ids)
         new_pools.append(np_)
-    xb = jnp.take(x[0], sample_idx, axis=0)                   # (R, d)
-    logits = _head(params, xb[None], cfg)
-    return logits[0], tuple(new_pools)
+    xb = jnp.take(x[0], sample_idx, axis=0)          # (R, d) or (R, J, d)
+    if sample_idx.ndim == 1:
+        return _head(params, xb[None], cfg)[0], tuple(new_pools)
+    return _head(params, xb, cfg), tuple(new_pools)
 
 
 def paged_decode_step(params, pools, block_tables, inputs, positions,

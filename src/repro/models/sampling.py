@@ -1,0 +1,127 @@
+"""In-dispatch samplers: plain sampling-with-scores and speculative verify.
+
+Both run INSIDE the engine's jitted step so the host never sees logits —
+only token ids plus per-token ``[log p(token), entropy]`` scores computed
+from the same log-softmax the sampler needs anyway (cascade gates read
+them; see serving/cluster.CascadeGate).
+
+``speculative_verify`` is the acceptance rule of speculative decoding
+(Leviathan et al.: rejection-sample the target distribution through a
+cheap draft).  The serving engine packs a decode row's fed tokens
+``[t_last, d_1, .., d_m]`` at positions ``[P, .., P+m]`` into the unified
+ragged dispatch; the target model then scores all m+1 positions in that
+ONE step, and this function turns the resulting ``(R, K+1, V)`` logits
+into the row's emitted tokens:
+
+- ``logits[r, i]`` is the target's next-token distribution after consuming
+  fed token i — i.e. the distribution draft ``d_{i+1}`` is a guess from.
+- Drafts here are POINT MASSES (a self-draft / cascade draft proposes one
+  token, not a distribution), so the acceptance probability
+  ``min(1, p(d)/q(d))`` reduces to ``p_target(d_i)`` and the residual
+  ``(p - q)+`` to the target distribution with ``d_i`` masked out,
+  renormalized.  Accept-or-residual then emits EXACTLY the target
+  distribution at every position: ``P(emit d) = p(d)`` and
+  ``P(emit x != d) = (1 - p(d)) * p(x) / (1 - p(d)) = p(x)``.
+- Greedy (``temperature <= 0``) degenerates to: accept while the draft
+  matches the argmax, emit the argmax at the first mismatch — the emitted
+  stream is bit-identical to non-speculative greedy decode.
+
+The emitted tokens are the accepted draft prefix plus one correction
+(the residual sample at the first rejection) or, when every draft is
+accepted, one bonus token from the final position — so a row always emits
+``n_accept + 1`` tokens, between 1 and K+1.  ``draft_len == 0`` rows
+(plain decode, prefill boundaries) fall through to ordinary sampling at
+position 0, which is how the engine runs ONE code path for both modes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _scores(logp: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Per-token [log p(token), entropy(p)] from an UNTEMPERED log-softmax
+    (the engine's scoring convention: confidence is measured under the
+    model's own distribution even when sampling is tempered)."""
+    tok_logp = jnp.take_along_axis(logp, tokens[..., None], axis=-1)[..., 0]
+    ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+    return jnp.stack([tok_logp, ent], axis=-1)
+
+
+def sample_with_scores(logits: jax.Array, seed, temperature: float
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Sample + score one token per row.  logits (B, V); returns
+    (tokens (B,) int32, scores (B, 2))."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    if temperature <= 0:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        key = jax.random.PRNGKey(seed)
+        tok = jax.random.categorical(key, logits / temperature)
+        tok = tok.astype(jnp.int32)
+    return tok, _scores(logp, tok)
+
+
+def speculative_verify(logits: jax.Array, draft_tokens: jax.Array,
+                       draft_len: jax.Array, seed, temperature: float
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Rejection-sampling acceptance over a row's verified draft positions.
+
+    logits (R, K+1, V): row r's target logits at its fed positions (index i
+    = after consuming fed token i; see module docstring).  draft_tokens
+    (R, K) int32 (garbage past ``draft_len``); draft_len (R,) int32 in
+    [0, K].  Returns
+
+    - tokens (R, K+1) int32 — emitted token j of row r is ``tokens[r, j]``;
+      only j <= n_accept[r] are meaningful,
+    - n_accept (R,) int32 — accepted draft count (leading-run),
+    - scores (R, K+1, 2) — [logprob, entropy] per emitted position.
+
+    Rows with ``draft_len == 0`` reduce to ``sample_with_scores`` on their
+    position-0 logits (n_accept = 0, one emitted token).
+    """
+    R, K1, V = logits.shape
+    K = K1 - 1
+    lf = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(lf, axis=-1)
+    idx = jnp.arange(K1, dtype=jnp.int32)[None, :]             # (1, K+1)
+    live = idx[:, :K] < draft_len[:, None]                     # (R, K)
+    if temperature <= 0:
+        # greedy: accept while the draft IS the argmax; candidates double as
+        # both the correction (first mismatch) and the bonus (full accept),
+        # and equal the accepted drafts wherever acceptance holds.
+        cand = jnp.argmax(logits, axis=-1).astype(jnp.int32)   # (R, K+1)
+        acc = (draft_tokens == cand[:, :K]) & live
+    else:
+        key = jax.random.PRNGKey(seed)
+        k_u, k_cand = jax.random.split(key)
+        tl = lf / temperature
+        if K > 0:
+            p = jax.nn.softmax(tl[:, :K, :], axis=-1)
+            pd = jnp.take_along_axis(
+                p, draft_tokens[..., None].astype(jnp.int32), axis=-1)[..., 0]
+            u = jax.random.uniform(k_u, (R, K))
+            # point-mass draft: accept with prob p_target(d)
+            acc = (u < pd) & live
+            # residual (p - q)+ ∝ target with the draft token masked out —
+            # but only where a draft exists; bonus/plain positions sample
+            # the unmodified target.
+            dmask = (jax.nn.one_hot(draft_tokens, V, dtype=jnp.bool_)
+                     & live[..., None])
+            tl = tl.at[:, :K, :].set(
+                jnp.where(dmask, NEG_INF, tl[:, :K, :]))
+        else:
+            acc = jnp.zeros((R, 0), jnp.bool_)
+        cand = jax.random.categorical(k_cand, tl, axis=-1).astype(jnp.int32)
+    n_accept = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1) \
+        if K > 0 else jnp.zeros((R,), jnp.int32)
+    if K > 0:
+        drafts_pad = jnp.concatenate(
+            [draft_tokens.astype(jnp.int32), jnp.zeros((R, 1), jnp.int32)],
+            axis=1)
+        tokens = jnp.where(idx < n_accept[:, None], drafts_pad, cand)
+    else:
+        tokens = cand
+    return tokens, n_accept.astype(jnp.int32), _scores(logp, tokens)

@@ -49,7 +49,11 @@ escalated via an internal ``trigger_put`` into the HEAVY deployment's req
 pool: the request moves to the heavy weights, the weights never move (§2
 data/compute collocation).  Confident light answers never touch the heavy
 model, which is what puts cascaded serving ahead of single-model serving on
-the latency/throughput frontier.
+the latency/throughput frontier.  The escalated request carries the light
+generation as a DRAFT stream (``draft_from_light``): a speculative heavy
+deployment (``spec_k > 0``) verifies the light tokens k at a time in its
+one ragged dispatch — the self-drafting cascade, where the light model
+doubles as the heavy model's draft model and its work is never wasted.
 """
 from __future__ import annotations
 
@@ -96,7 +100,7 @@ class ModelDeployment:
                  paged: bool | None, block_size: int,
                  num_blocks: int | None, prefix_cache: bool,
                  token_budget: int | None, watermark: int | None,
-                 seed_base: int) -> None:
+                 seed_base: int, spec_k: int = 0) -> None:
         if n_replicas > len(node.workers):
             raise ValueError(
                 f"deployment {name!r} wants {n_replicas} replicas but the "
@@ -109,6 +113,11 @@ class ModelDeployment:
         self.req_prefix = f"/serve/{name}/req"
         self.out_prefix = f"/serve/{name}/out"
         self.paged = supports_paged(cfg) if paged is None else paged
+        if spec_k and not self.paged:
+            raise ValueError(
+                f"deployment {name!r}: spec_k={spec_k} needs the paged path "
+                f"(speculative verify rows + KV rollback; see "
+                f"models.supports_speculative)")
         self.worker_ids = list(range(n_replicas))
         session_hash = functools.partial(affinity_shard_hash,
                                          depth=_SESSION_DEPTH)
@@ -125,7 +134,7 @@ class ModelDeployment:
                           prefix_cache=prefix_cache,
                           devstore=node.kv_store(),
                           kv_key=f"/kv/{name}/replica{r}/pool",
-                          token_budget=token_budget)
+                          token_budget=token_budget, spec_k=spec_k)
             self.engines.append(ServeEngine(
                 cfg, params, n_slots=n_slots, max_len=max_len,
                 temperature=temperature, scheduler=Scheduler(n_replicas=1),
@@ -224,7 +233,8 @@ class ModelDeployment:
         payload = obj.payload
         req = Request(request_id=request_id, session_key=session,
                       prompt=payload["prompt"],
-                      max_new_tokens=int(payload.get("max_new_tokens", 16)))
+                      max_new_tokens=int(payload.get("max_new_tokens", 16)),
+                      draft_tokens=payload.get("draft"))
         target = replica
         if self.watermark is not None:
             # minus one: this very event still counts in the worker's
@@ -276,17 +286,23 @@ class ModelDeployment:
 
     # ------------------------------------------------------------- clients
     def submit(self, session_key: str, request_id: str, prompt: Any, *,
-               max_new_tokens: int = 16):
-        """Fire a request into the fast path (trigger_put; nothing stored)."""
+               max_new_tokens: int = 16, draft_tokens: Any = None):
+        """Fire a request into the fast path (trigger_put; nothing stored).
+        ``draft_tokens`` rides in the payload for speculative deployments
+        (``spec_k > 0``): token i is a guess for generated token i — this is
+        how a cascade plants the light model's generation as the heavy
+        model's draft."""
         if self._stopped:
             raise RuntimeError(f"deployment {self.name!r} is stopped")
         key = f"{self.req_prefix}/{session_key}/{request_id}"
         with self._lock:
             self.submitted += 1
         self.node._note_submitted()
-        return self.node.store.trigger_put(
-            key, {"prompt": np.asarray(prompt),
-                  "max_new_tokens": max_new_tokens})
+        payload = {"prompt": np.asarray(prompt),
+                   "max_new_tokens": max_new_tokens}
+        if draft_tokens is not None:
+            payload["draft"] = np.asarray(draft_tokens, np.int32)
+        return self.node.store.trigger_put(key, payload)
 
     def result(self, request_id: str) -> np.ndarray | None:
         if self._stopped:
@@ -318,6 +334,8 @@ class ModelDeployment:
             shed, redirected = self.shed, self.redirected
             submitted, completed = self.submitted, self.completed
             listener_errors = self.listener_errors
+        drafted = sum(e.stats.spec_drafted for e in self.engines)
+        accepted = sum(e.stats.spec_accepted for e in self.engines)
         return {
             "deployment": self.name,
             "paged": self.paged,
@@ -343,6 +361,15 @@ class ModelDeployment:
                                      for e in self.engines),
             "prefix_hits": sum(e.stats.prefix_hits for e in self.engines),
             "blocks_in_use": sum(e.stats.blocks_in_use for e in self.engines),
+            # speculative decoding counters (0s when spec_k == 0; the rate
+            # follows EngineStats.spec_acceptance_rate's convention — NaN
+            # when nothing was drafted, distinct from "all rejected")
+            "spec_drafted": drafted,
+            "spec_accepted": accepted,
+            "spec_rolled_back": sum(e.stats.spec_rolled_back
+                                    for e in self.engines),
+            "spec_acceptance_rate": (accepted / drafted if drafted
+                                     else float("nan")),
             "ttft_p50_s": pct(ttft, 0.50), "ttft_p99_s": pct(ttft, 0.99),
             "tpot_p50_s": pct(tpot, 0.50), "tpot_p99_s": pct(tpot, 0.99),
         }
@@ -408,9 +435,12 @@ class ServeNode:
                temperature: float = 0.0, paged: bool | None = None,
                block_size: int = 16, num_blocks: int | None = None,
                prefix_cache: bool = True, token_budget: int | None = None,
-               watermark: int | None = None) -> ModelDeployment:
+               watermark: int | None = None,
+               spec_k: int = 0) -> ModelDeployment:
         """Host ``cfg`` under ``/serve/<name>``; see ``ModelDeployment``.
         ``watermark`` bounds each replica's queue depth (None = unbounded).
+        ``spec_k`` > 0 enables speculative decoding on paged engines: up to
+        that many draft tokens verified per decode row per tick.
         """
         if name in self.deployments:
             raise ValueError(f"deployment {name!r} already exists")
@@ -422,7 +452,7 @@ class ServeNode:
             max_len=max_len, policy=policy, temperature=temperature,
             paged=paged, block_size=block_size, num_blocks=num_blocks,
             prefix_cache=prefix_cache, token_budget=token_budget,
-            watermark=watermark, seed_base=seed_base)
+            watermark=watermark, seed_base=seed_base, spec_k=spec_k)
         self.deployments[name] = dep
         return dep
 
@@ -559,17 +589,29 @@ class CascadeRoute:
     deployment is the fallback path, with its own watermark as the final
     bound.  ``result()`` resolves to the heavy answer for escalated
     requests and the light answer otherwise.
+
+    ``draft_from_light=True`` makes the cascade SELF-DRAFTING: a
+    gate-escalated request carries the light model's generation as its
+    draft stream, and a speculative heavy deployment (``spec_k > 0``)
+    verifies those tokens k at a time in its one ragged dispatch instead of
+    re-deriving them one tick each — the light model's work is never wasted
+    (CascadeServe), it is the heavy model's draft model.  Wherever the
+    heavy model agrees with the light answer, decode ticks collapse; where
+    it disagrees, the acceptance rule rejects the drafts and the output is
+    exactly what the heavy model alone would have produced.
     """
 
     def __init__(self, light: ModelDeployment, heavy: ModelDeployment,
                  gate: CascadeGate | None = None, *,
-                 escalate_on_error: bool = True) -> None:
+                 escalate_on_error: bool = True,
+                 draft_from_light: bool = True) -> None:
         if light.node is not heavy.node:
             raise ValueError("cascade endpoints must share one ServeNode")
         self.light = light
         self.heavy = heavy
         self.gate = gate or CascadeGate()
         self.escalate_on_error = escalate_on_error
+        self.draft_from_light = draft_from_light
         self._lock = threading.Lock()
         self._pending: dict[str, tuple[str, np.ndarray, int]] = {}
         # bounded like ModelDeployment.routed: a long-running route must not
@@ -652,8 +694,13 @@ class CascadeRoute:
         # route would then resolve to a heavy answer that can never come.
         # The reverse race (heavy completing before the set is updated) is
         # harmless: _resolve falls back to the durable heavy out pool.
+        # Self-drafting: a gate escalation ships the light generation as the
+        # heavy deployment's draft stream (error failovers have no tokens).
+        draft = (np.asarray(req.tokens, np.int32)
+                 if self.draft_from_light and reason == "gate" and req.tokens
+                 else None)
         self.heavy.submit(session, req.request_id, prompt,
-                          max_new_tokens=max_new)
+                          max_new_tokens=max_new, draft_tokens=draft)
         with self._lock:
             self._escalated[req.request_id] = None
             while len(self._escalated) > self._escalated_cap:
@@ -700,14 +747,15 @@ class ServeCluster:
                  block_size: int = 16, num_blocks: int | None = None,
                  prefix_cache: bool = True,
                  token_budget: int | None = None,
-                 watermark: int | None = None) -> None:
+                 watermark: int | None = None,
+                 spec_k: int = 0) -> None:
         self.node = ServeNode(n_workers=n_replicas)
         self.dep = self.node.deploy(
             model_name or cfg.name, cfg, params, n_replicas=n_replicas,
             n_slots=n_slots, max_len=max_len, policy=policy,
             temperature=temperature, paged=paged, block_size=block_size,
             num_blocks=num_blocks, prefix_cache=prefix_cache,
-            token_budget=token_budget, watermark=watermark)
+            token_budget=token_budget, watermark=watermark, spec_k=spec_k)
         self.cfg = cfg
         self.policy = policy
 

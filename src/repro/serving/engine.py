@@ -44,6 +44,29 @@ Fast-path discipline of the unified tick:
   nothing live, nothing admissible — dispatches nothing and does not count
   as a tick).
 
+Speculative decoding (``spec_k > 0``, paged engines only — gated by
+``models.supports_speculative`` exactly as paging is by ``supports_paged``):
+a ``DraftSource`` (serving/draft) proposes up to ``spec_k`` draft tokens per
+decode row — self-drafted from the request's own prompt+generated history,
+or carried on the request by a cascade (the light deployment's generation).
+The row packs ``[t_last, d_1, .., d_m]`` as m+1 consecutive tokens in the
+SAME ragged dispatch (the kernel already treats a multi-token row like a
+prefill chunk: K/V written first, causal mask per token), the head gathers
+all m+1 boundary logits, and the in-dispatch acceptance rule
+(``models.sampling.speculative_verify`` — Leviathan-style rejection
+sampling) keeps the longest target-confirmed prefix plus one
+correction/bonus token.  The host still sees ONE sync per tick, now
+amortized over up to m+1 emitted tokens; KV written for rejected drafts is
+rolled back by truncating the row's block table
+(``kvcache.rollback_writes``).  Budget arithmetic: draft lanes are granted
+LAST — after every live row's mandatory lane and all prefill chunk work has
+packed (``_plan_drafts``) — so a k-token row can never oversubscribe the
+fixed packed shape, never starves a sibling decode row, and never delays a
+waiting prefill: speculation monetizes lanes that would have dispatched as
+pads.  Greedy speculation emits the bit-identical stream of the
+non-speculative engine; sampled speculation emits exactly the target
+distribution (rejection sampling is lossless).
+
 Prefix reuse: admission matches each prompt against the per-replica trie of
 cached token blocks and prefills ONLY the suffix past the last matched block
 (``stats.prefix_hit_tokens``).  Chunk-granularity trie commit
@@ -66,9 +89,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, paged_mixed_step, prefill, supports_paged
+from repro.models import (decode_step, paged_mixed_step, prefill,
+                          sample_with_scores, speculative_verify,
+                          supports_paged, supports_speculative)
 from repro.models.config import ModelConfig
 
+from .draft import DraftSource, default_draft_source
 from .kvcache import CacheManager, PagedCacheManager
 from .scheduler import Request, Scheduler
 
@@ -87,8 +113,17 @@ class EngineStats:
     prefix_hit_tokens: int = 0     # tokens reused from cache
     prefix_hits: int = 0           # requests with a hit
     blocks_in_use: int = 0         # gauge, sampled per tick
+    # speculative decoding (paged engines with spec_k > 0):
+    spec_drafted: int = 0          # draft tokens packed for verification
+    spec_accepted: int = 0         # drafts the target confirmed (kept)
+    spec_rolled_back: int = 0      # rejected drafts whose KV was rolled back
     ttft_s: list = field(default_factory=list)     # time to first token
     tpot_s: list = field(default_factory=list)     # time per output token
+
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the target model confirmed."""
+        return (self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else float("nan"))
 
 
 class ServeEngine:
@@ -100,12 +135,25 @@ class ServeEngine:
                  block_size: int = 16, num_blocks: int | None = None,
                  prefix_cache: bool = True, devstore=None,
                  kv_key: str | None = None,
-                 token_budget: int | None = None) -> None:
+                 token_budget: int | None = None,
+                 spec_k: int = 0,
+                 draft_source: DraftSource | None = None) -> None:
         self.cfg = cfg
         self.params = params
         self.paged = supports_paged(cfg) if paged is None else paged
         if self.paged and not supports_paged(cfg):
             raise ValueError(f"config {cfg.name} cannot use the paged cache")
+        self.spec_k = int(spec_k)
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k={spec_k} must be >= 0")
+        if self.spec_k and (not self.paged or not supports_speculative(cfg)):
+            raise ValueError(
+                f"config {cfg.name} cannot decode speculatively: multi-token "
+                f"verify rows and KV rollback need the paged path "
+                f"(supports_speculative)")
+        self.draft_source = (draft_source if draft_source is not None
+                             else (default_draft_source() if self.spec_k
+                                   else None))
         if self.paged:
             self.cm: Any = PagedCacheManager(
                 cfg, n_slots, max_len, block_size=block_size,
@@ -144,20 +192,11 @@ class ServeEngine:
         temp = temperature
 
         def _sample(logits, seed):
-            """Sample + score in-dispatch: returns (tokens (B,), scores
-            (B, 2)) where scores[:, 0] = log p(token) and scores[:, 1] = the
-            next-token distribution's entropy (nats).  Both come from the
-            same log-softmax the sampler needs anyway, so cascade gates get
-            their confidence signal without the host ever seeing logits."""
-            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-            if temp <= 0:
-                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            else:
-                key = jax.random.PRNGKey(seed)
-                tok = jax.random.categorical(key, logits / temp).astype(jnp.int32)
-            tok_logp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
-            ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
-            return tok, jnp.stack([tok_logp, ent], axis=-1)
+            """Sample + score in-dispatch (models.sampling): (tokens (B,),
+            scores (B, 2)) with scores = [log p(token), entropy], both from
+            the same log-softmax the sampler needs anyway — cascade gates
+            get their confidence signal without the host seeing logits."""
+            return sample_with_scores(logits, seed, temp)
 
         # Paged mode donates the pool operand: the step scatters into every
         # layer's pool leaf, and without donation XLA must copy the whole
@@ -169,12 +208,19 @@ class ServeEngine:
         # aliases the donated (deleted) buffers, so KV reads through the
         # store must come from the tick thread (the engine's one-driver
         # model), never concurrently from another thread.
+        #
+        # The sampler side is speculative_verify over (R, spec_k+1) gathered
+        # boundary logits: with spec_k == 0 every row has draft_len 0 and
+        # the verify degenerates to plain sampling at position 0, so ONE
+        # code path (and one compiled program) serves both modes.
         if self.paged:
-            def _mixed(p, pools, bt, toks, pos, rows, sample_idx, seed):
+            def _mixed(p, pools, bt, toks, pos, rows, sample_idx,
+                       draft_toks, draft_len, seed):
                 logits, pools = paged_mixed_step(p, pools, bt, toks, pos,
                                                  rows, sample_idx, cfg)
-                tok, score = _sample(logits, seed)
-                return tok, score, pools
+                tok, n_acc, score = speculative_verify(logits, draft_toks,
+                                                       draft_len, seed, temp)
+                return tok, n_acc, score, pools
 
             self._mixed = jax.jit(_mixed, donate_argnums=(1,))
         else:
@@ -412,30 +458,84 @@ class ServeEngine:
                                  finished)
         return n
 
+    def _plan_drafts(self, decode_slots: list[int], lanes_left: int
+                     ) -> dict[int, list[int]]:
+        """Per live slot, the draft tokens to verify this tick.
+
+        Token-budget audit: a speculative row packs 1 + len(drafts) tokens,
+        so the old "every decode row costs exactly one token" arithmetic
+        would oversubscribe the fixed packed shape.  Draft lanes are
+        therefore granted LAST, from ``lanes_left`` — the lanes still idle
+        after every live row's mandatory token AND all prefill chunk work
+        has packed — so a k-token row can never exceed token_budget, never
+        starves a sibling decode row of its mandatory lane, and never
+        delays a waiting prefill (TTFT sees exactly the budget the
+        non-speculative tick would give it; speculation only monetizes
+        lanes that would have been pads).  Drafts are further capped at
+        max_new - generated - 1: a fully-accepted row emits drafts + one
+        bonus token, so this cap keeps every emission within max_new AND
+        every draft KV write within ``written_max`` (the admission
+        block-budget rule — speculation never writes a position plain
+        decode would not eventually write)."""
+        plans: dict[int, list[int]] = {}
+        if not self.spec_k:
+            return plans
+        for slot in decode_slots:
+            if lanes_left <= 0:
+                break
+            req = self.live[slot]
+            room = req.max_new_tokens - len(req.tokens) - 1
+            m = min(self.spec_k, room, lanes_left)
+            if m <= 0:
+                continue
+
+            def history(req=req):
+                # built only if a source asks (the cascade draft never does)
+                return np.concatenate([self._norm_prompt(req.prompt),
+                                       np.asarray(req.tokens, np.int64)])
+
+            drafts = self.draft_source.propose(req, history, m)[:m]
+            # keep only a valid prefix: one out-of-vocab guess invalidates
+            # everything the drafter chained after it
+            valid: list[int] = []
+            for t in drafts:
+                if not 0 <= int(t) < self.cfg.vocab_size:
+                    break
+                valid.append(int(t))
+            if valid:
+                plans[slot] = valid
+                lanes_left -= len(valid)
+        return plans
+
     def _tick_mixed(self) -> int:
-        """ONE fixed-shape mixed step: decode rows + prefill chunks packed
-        against the token budget, one dispatch, one host sync."""
+        """ONE fixed-shape mixed step: decode rows (each with up to spec_k
+        verified draft tokens), + prefill chunks packed against the token
+        budget, one dispatch, one host sync."""
         T = self.token_budget
+        K = self.spec_k
         toks = np.zeros(T, np.int32)
         pos = np.full(T, -1, np.int32)
         rows = np.full(T, -1, np.int32)
-        sample_idx = np.zeros(self.cm.n_slots, np.int32)
+        sample_idx = np.zeros((self.cm.n_slots, K + 1), np.int32)
+        draft_toks = np.zeros((self.cm.n_slots, K), np.int32)
+        draft_len = np.zeros(self.cm.n_slots, np.int32)
         finished: list[int] = []
         n = 0
+        decode_slots = list(self.live.keys())
         # 0. grow live rows' tables to cover the position each is about to
         #    write — BEFORE packing, while prefilling slots still sit at
         #    pos=0 (a chunk that completes its prompt this tick sets pos=S,
-        #    but its first decode write is next tick's business)
+        #    but its first decode write is next tick's business); draft
+        #    positions get their own ensure in step 4
         self.cm.ensure_decode_blocks()
         # 1. every live decode row costs one token (budget >= n_slots, so
         #    decodes can never be starved by prefill chunks)
-        decode_slots = list(self.live.keys())
         for slot in decode_slots:
             seq = self.cm.slots[slot]
             toks[n] = self._last_host[slot]
             pos[n] = seq.pos
             rows[n] = slot
-            sample_idx[slot] = n
+            sample_idx[slot] = n                  # all entries → base lane
             n += 1
         # 2. continue partial prefills in admission order (FIFO turns stay
         #    ordered: an older request's chunks always pack first)
@@ -446,34 +546,73 @@ class ServeEngine:
                                  finished)
         # 3. admit new requests into the remainder
         n = self._admit_mixed(toks, pos, rows, sample_idx, n, finished)
+        # 4. draft tokens fill the lanes NOTHING else wanted (they would
+        #    have dispatched as pads): row slot's drafts verify positions
+        #    pos+1..pos+m.  Lane order does not matter — the kernel masks
+        #    by POSITION and writes all packed K/V before any read — so a
+        #    row's draft lanes need not be contiguous with its base lane.
+        plans = self._plan_drafts(decode_slots, T - n)
+        if plans:
+            # grow ONLY the planned rows: by now a slot whose prompt just
+            # completed sits at pos = S, and growing it would claim a
+            # decode block its admission budget never reserved
+            self.cm.ensure_decode_blocks(
+                {s: len(d) for s, d in plans.items()}, only=set(plans))
+            for slot, drafts in plans.items():
+                seq = self.cm.slots[slot]
+                m = len(drafts)
+                toks[n:n + m] = drafts
+                pos[n:n + m] = np.arange(seq.pos + 1, seq.pos + 1 + m)
+                rows[n:n + m] = slot
+                sample_idx[slot, 1:1 + m] = np.arange(n, n + m)
+                draft_toks[slot, :m] = drafts
+                draft_len[slot] = m
+                self.stats.spec_drafted += m
+                n += m
         if n == 0:
             return 0          # idle: nothing dispatched, not a tick
         t0 = time.monotonic()
         bt = jnp.asarray(self.cm.block_tables())       # (n_slots, max_blocks)
-        sampled, scores, pools = self._mixed(
+        sampled, n_acc, scores, pools = self._mixed(
             self.params, self.cm.pools, bt, jnp.asarray(toks),
             jnp.asarray(pos), jnp.asarray(rows), jnp.asarray(sample_idx),
+            jnp.asarray(draft_toks), jnp.asarray(draft_len),
             self._next_seed())
         self.cm.pools = pools
         self.cm.publish()
         self.stats.blocks_in_use = self.cm.blocks_in_use
-        # the ONE sync of this tick: tokens + scores in one device_get
-        host_toks, host_scores = self._to_host((sampled, scores))
+        # the ONE sync of this tick: tokens + accept counts + scores in one
+        # device_get — speculation amortizes it over every accepted token
+        host_toks, host_acc, host_scores = self._to_host(
+            (sampled, n_acc, scores))
         dt = time.monotonic() - t0
         now = time.monotonic()
         n_emitted = 0
-        # 4. decode rows advance
+        # 4. decode rows advance: the accepted draft prefix plus the
+        #    correction/bonus token all land this tick
         for slot in decode_slots:
             req = self.live[slot]
-            tok = int(host_toks[slot])
-            req.tokens.append(tok)
-            req.scores.append(float(host_scores[slot, 0]))
-            req.entropies.append(float(host_scores[slot, 1]))
-            self._last_host[slot] = tok
-            self.cm.slots[slot].pos += 1
-            self.stats.tpot_s.append(dt)
-            self.stats.tokens_out += 1
-            n_emitted += 1
+            seq = self.cm.slots[slot]
+            m = int(draft_len[slot])
+            a = int(host_acc[slot])
+            n_emit = a + 1
+            for j in range(n_emit):
+                req.tokens.append(int(host_toks[slot, j]))
+                req.scores.append(float(host_scores[slot, j, 0]))
+                req.entropies.append(float(host_scores[slot, j, 1]))
+                self.stats.tpot_s.append(dt / n_emit)
+            self._last_host[slot] = int(host_toks[slot, a])
+            seq.pos += n_emit
+            self.stats.tokens_out += n_emit
+            n_emitted += n_emit
+            if m:
+                self.stats.spec_accepted += a
+                if a < m:
+                    # KV written for the rejected tail (positions >= the new
+                    # seq.pos) is rolled back: table truncated, tail blocks
+                    # freed, trie untouched (see kvcache.rollback_writes)
+                    self.stats.spec_rolled_back += m - a
+                    self.cm.rollback_writes(slot, seq.pos)
             if len(req.tokens) >= req.max_new_tokens:
                 self.live.pop(slot)
                 self._release_slot(slot, req)
@@ -481,10 +620,10 @@ class ServeEngine:
         # 5. chunks that completed their prompt emit their first token
         for slot in finished:
             req = self.prefilling.pop(slot)
-            tok = int(host_toks[slot])
+            tok = int(host_toks[slot, 0])
             self._last_host[slot] = tok
             n_emitted += 1
-            self._emit_first_token(req, slot, tok, now, host_scores[slot])
+            self._emit_first_token(req, slot, tok, now, host_scores[slot, 0])
         self.stats.ticks += 1
         if decode_slots:
             self.stats.decode_ticks += 1

@@ -511,14 +511,27 @@ class PagedCacheManager:
         self.slots[slot] = PagedSeq()
 
     # ---------------------------------------------------------- decode I/O
-    def ensure_decode_blocks(self) -> None:
+    def ensure_decode_blocks(self, extra: dict[int, int] | None = None, *,
+                             only: set[int] | None = None) -> None:
         """Grow each active slot's table to cover the position it is about to
-        write.  Admission reserves worst-case block budgets, so allocation
-        here cannot fail unless the caller overran max_len."""
-        for seq in self.slots:
-            if not seq.active:
+        write — plus ``extra[slot]`` further positions for speculative draft
+        tokens verified (and KV-written) in the same dispatch.  Admission
+        reserves worst-case block budgets (``block_cost`` covers
+        ``written_max``, and the engine caps drafts so ``pos + extra`` never
+        exceeds the last written position), so allocation here cannot fail
+        unless the caller overran max_len.
+
+        ``only`` restricts growth to those slots: the engine's mid-tick
+        draft ensure must touch ONLY the rows it planned drafts for — by
+        then a slot that completed its prompt in this very tick already
+        sits at pos = S, and growing it here would demand a decode block
+        its admission budget never reserved (crashing a valid
+        ``max_new_tokens == 1`` request whose prompt ends block-aligned)."""
+        for i, seq in enumerate(self.slots):
+            if not seq.active or (only is not None and i not in only):
                 continue
-            blk_idx = seq.pos // self.block_size
+            last = seq.pos + (extra.get(i, 0) if extra else 0)
+            blk_idx = last // self.block_size
             if blk_idx >= self.max_blocks:
                 raise RuntimeError(
                     f"request {seq.request_id} overran max_len={self.max_len}")
@@ -528,6 +541,35 @@ class PagedCacheManager:
                     raise RuntimeError("KV block pool exhausted mid-decode "
                                        "(admission budget violated)")
                 seq.table.extend(got)
+
+    def rollback_writes(self, slot: int, valid_len: int) -> int:
+        """Speculative-decode rollback: K/V at positions >= ``valid_len`` in
+        this slot belongs to REJECTED draft tokens.  Truncate the block
+        table to the blocks covering positions [0, valid_len) and free the
+        tail blocks — each exactly once.
+
+        Why this is a pure table truncation: tail blocks past the write
+        watermark are always PRIVATE to the request.  Draft positions lie
+        past the prompt, matched prefix blocks all sit below the prompt's
+        block-aligned prefix, and generated-token blocks enter the trie
+        only at ``finish`` — so the freed blocks were freshly allocated
+        this request (refcount 1, not trie-resident) and ``unref`` returns
+        them straight to the free list.  Trie refcounts and shared prefix
+        blocks are untouched, which is what keeps the allocator state
+        identical to a from-scratch replay of only the accepted tokens.
+
+        Stale K/V left INSIDE the kept last block (positions >= valid_len)
+        is harmless: the causal mask hides positions beyond every query,
+        and the row's next decode writes those positions before any token
+        can attend to them.  Returns the number of blocks freed."""
+        seq = self.slots[slot]
+        keep = max(math.ceil(valid_len / self.block_size), seq.committed)
+        if keep >= len(seq.table):
+            return 0
+        tail = seq.table[keep:]
+        del seq.table[keep:]
+        self.alloc.unref(tail)
+        return len(tail)
 
     def block_tables(self, slots: list[int] | None = None) -> np.ndarray:
         """(B, max_blocks) int32 table, -1 = unused (clamped to the null

@@ -27,6 +27,14 @@ per-request *block* budget: admission stops before the pool's
 free+evictable blocks are oversubscribed, counting each candidate's
 worst-case footprint (prefix reuse only makes the realized footprint
 smaller, so the bound is safe).
+
+Token-budget arithmetic with speculative decoding: a decode row is NOT
+always one token — a speculative row feeds 1 + k tokens (its last committed
+token plus k verified drafts).  The engine grants draft lanes LAST, after
+every live row's mandatory lane and all prefill chunk packing
+(engine._plan_drafts), so the budget remainder ``admit_one`` packs prefill
+chunks into is exactly what a non-speculative tick would offer and can
+never be oversubscribed by a k-token row.
 """
 from __future__ import annotations
 
@@ -45,6 +53,11 @@ class Request:
     session_key: str
     prompt: Any                     # token array (1, S) or embeds (1, S, d)
     max_new_tokens: int = 16
+    # optional draft stream for speculative decoding: token i is a guess for
+    # generated token i (e.g. a CascadeRoute plants the LIGHT deployment's
+    # generation here when escalating to heavy, so the heavy engine verifies
+    # the light tokens k at a time instead of re-deriving them one per tick)
+    draft_tokens: Any = None
     arrived_s: float = field(default_factory=time.monotonic)
     # engine-filled:
     slot: int | None = None

@@ -222,6 +222,97 @@ def test_ragged_paged_attention_matches_refs(H, K, D, bs, nb, reqs, win, cap):
                                atol=2e-5, rtol=2e-5)
 
 
+# ------------------------------------------------- speculative verify rows
+# Multi-token VERIFY rows (speculative decoding): a decode row that feeds
+# its last `fed` tokens at consecutive tail positions — fed = 1 + k draft
+# tokens, k ∈ {1, 2, 4} per the acceptance bar, plus the fed = 1 (k = 0)
+# degenerate case that must reproduce today's single-token decode.  Swept
+# across block sizes × window/softcap, mixed with plain decode rows and a
+# prefill chunk in the same packing.
+VERIFY_SWEEP = [
+    # (H, K, D, bs, reqs=((ctx, fed), ...), window, softcap)
+    (4, 2, 32, 8, ((20, 2), (33, 3), (17, 5), (9, 1)), None, None),
+    (4, 4, 16, 16, ((40, 5), (16, 2), (25, 3)), None, 30.0),
+    (2, 2, 64, 32, ((50, 3), (33, 5), (9, 2), (64, 1)), 12, None),
+    (8, 2, 32, 8, ((25, 5), (63, 3), (7, 2), (5, 1), (30, 12)), 16, 50.0),
+    (4, 1, 64, 64, ((100, 5), (128, 2), (90, 3)), None, None),
+]
+
+
+@pytest.mark.parametrize("H,K,D,bs,reqs,win,cap", VERIFY_SWEEP)
+def test_ragged_verify_rows_match_refs(H, K, D, bs, reqs, win, cap):
+    """Verify rows are kernel-wise identical to prefill chunks of the same
+    length: the ragged kernel must match the ragged oracle AND the
+    independently-validated per-token paged decode oracle for every fed
+    position (the logits the acceptance rule consumes)."""
+    rng = np.random.default_rng(H * 31 + bs + len(reqs))
+    ctxs = [c for c, _ in reqs]
+    N = 1 + sum(-(-c // bs) for c in ctxs) + 2
+    ks = jax.random.split(jax.random.PRNGKey(H * 7 + bs), 3)
+    T = sum(f for _, f in reqs) + 2                    # 2 pad lanes
+    q = jax.random.normal(ks[0], (T, H, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, bs, K, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, bs, K, D), jnp.float32)
+    nb = max(-(-c // bs) for c in ctxs)
+    bt = jnp.asarray(_random_block_tables(rng, N, bs, nb, ctxs))
+    rows = np.full(T, -1, np.int32)
+    tpos = np.full(T, -1, np.int32)
+    n = 0
+    for r, (ctx, fed) in enumerate(reqs):
+        rows[n:n + fed] = r
+        tpos[n:n + fed] = np.arange(ctx - fed, ctx)    # verify tail
+        n += fed
+    rows, tpos = jnp.asarray(rows), jnp.asarray(tpos)
+    out = ragged_paged_attention(q, kp, vp, bt, rows, tpos, window=win,
+                                 softcap=cap, interpret=True)
+    ref = ragged_paged_attention_ref(q, kp, vp, bt, rows, tpos, window=win,
+                                     softcap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    per_tok = paged_decode_attention_ref(
+        q[:n], kp, vp, bt[jnp.clip(rows[:n], 0, len(reqs) - 1)], tpos[:n],
+        window=win, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out)[:n], np.asarray(per_tok),
+                               atol=2e-5, rtol=2e-5)
+    assert np.all(np.asarray(out)[n:] == 0)            # pads stay exact zeros
+
+
+def test_verify_row_k0_bitmatches_single_token_decode():
+    """The fed = 1 degenerate verify row IS today's decode: packing each
+    request as a one-token row (with pad lanes interleaved and rows packed
+    out of slot order) must BIT-match the single-token paged decode kernel
+    — speculation changes the packing, never the numbers."""
+    H, K, D, bs = 4, 2, 32, 8
+    nb = 3
+    ctxs = (21, 9, 17)
+    rng = np.random.default_rng(3)
+    N = 1 + sum(-(-c // bs) for c in ctxs) + 2
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    B = len(ctxs)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, bs, K, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, bs, K, D), jnp.float32)
+    bt = jnp.asarray(_random_block_tables(rng, N, bs, nb, ctxs))
+    qpos = jnp.asarray([c - 1 for c in ctxs], jnp.int32)
+    decode = paged_decode_attention(q, kp, vp, bt, qpos, interpret=True)
+    # scrambled one-token-per-row packing with pads: lanes [pad, 1, 0, pad, 2]
+    lanes = [1, 0, 2]
+    T = 5
+    qr = jnp.zeros((T, H, D), jnp.float32)
+    rows = np.full(T, -1, np.int32)
+    tpos = np.full(T, -1, np.int32)
+    for lane, b in zip((1, 2, 4), lanes):
+        qr = qr.at[lane].set(q[b])
+        rows[lane] = b
+        tpos[lane] = int(qpos[b])
+    out = ragged_paged_attention(qr, kp, vp, bt, jnp.asarray(rows),
+                                 jnp.asarray(tpos), interpret=True)
+    out = np.asarray(out)
+    for lane, b in zip((1, 2, 4), lanes):
+        assert np.array_equal(out[lane], np.asarray(decode)[b]), \
+            f"lane {lane} diverged from single-token decode of request {b}"
+
+
 def test_ragged_same_dispatch_shared_prefix_block():
     """Two packed chunks whose tables share a physical prefix block (the
     intra-batch sharing case) read identical prefix KV."""

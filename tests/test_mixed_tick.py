@@ -313,8 +313,11 @@ def test_dense_ssm_path_discipline_unchanged(ssm_params):
     prefill groups, masked fused decode, and the ORIGINAL host-sync
     invariant ``host_syncs == decode_ticks + prefill_batches``."""
     rng = np.random.default_rng(6)
+    from repro.models import supports_speculative
+    assert not supports_speculative(SSM)      # mirrors supports_paged
     eng = ServeEngine(SSM, ssm_params, n_slots=4, max_len=32)
     assert not eng.paged and eng.token_budget is None
+    assert eng.spec_k == 0 and eng.draft_source is None
     eng.scheduler.prefill_budget = 4
     done = []
     eng.on_complete = done.append

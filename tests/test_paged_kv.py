@@ -381,6 +381,111 @@ def test_decode_donates_pool_buffers(params):
                                       jax.tree.leaves(eng.cm.pools)))
 
 
+# =============================================== speculative KV rollback
+def test_rollback_accounting_matches_accepted_only_replay():
+    """Speculative rollback invariant (seeded deterministic sweep): after
+    ANY accept/reject pattern — random draft lengths, random accepted
+    prefixes, across a request's whole lifetime — the allocator's state
+    (blocks in use, free-list size, trie residency, refcount multiset,
+    available()) equals a from-scratch replay that only ever wrote the
+    accepted tokens; and rejected-tail blocks are freed exactly once (the
+    free list never holds a duplicate)."""
+    for seed in range(8):
+        rng = np.random.default_rng(100 + seed)
+        bs = 4
+        mk = lambda: PagedCacheManager(CFG, n_slots=1, max_len=64,
+                                       block_size=bs, num_blocks=24)
+        cm, cm2 = mk(), mk()
+        S = int(rng.integers(3, 12))
+        max_new = int(rng.integers(4, 14))
+        prompt = rng.integers(0, 100, (S,)).astype(np.int32)
+        # --- speculative lifetime on cm: each "tick" drafts m tokens,
+        # accepts a <= m, rolls the rejected tail back
+        slot = cm.acquire("r")
+        seq = cm.begin(slot, prompt, max_new)
+        assert cm.commit_prefill_progress(slot, S)
+        generated = [int(rng.integers(0, 100))]        # boundary token
+        while len(generated) < max_new:
+            room = max_new - len(generated) - 1
+            m = int(rng.integers(0, min(4, room) + 1))
+            cm.ensure_decode_blocks({slot: m})
+            a = int(rng.integers(0, m + 1))            # accepted prefix
+            generated += [int(rng.integers(0, 100)) for _ in range(a + 1)]
+            seq.pos += a + 1
+            if a < m:
+                cm.rollback_writes(slot, seq.pos)
+            free = cm.alloc.free
+            assert len(set(free)) == len(free), "block freed twice"
+        cm.finish(slot, generated)
+        # --- plain replay on cm2: the same accepted stream, one token at
+        # a time, no speculation
+        slot2 = cm2.acquire("r")
+        seq2 = cm2.begin(slot2, prompt, max_new)
+        assert cm2.commit_prefill_progress(slot2, S)
+        for _ in range(len(generated) - 1):
+            cm2.ensure_decode_blocks()
+            seq2.pos += 1
+        cm2.finish(slot2, generated)
+        a1, a2 = cm.alloc, cm2.alloc
+        assert a1.blocks_in_use == a2.blocks_in_use
+        assert len(a1.free) == len(a2.free)
+        assert a1.n_cached == a2.n_cached
+        assert sorted(a1.refcount) == sorted(a2.refcount)
+        assert a1.available() == a2.available()
+        # identical trie CONTENT (paths key on tokens, not block ids)
+        assert set(a1._cached.keys()) == set(a2._cached.keys())
+
+
+def test_rollback_never_touches_shared_prefix_blocks():
+    """A rolled-back speculative tail must free only the request's private
+    tail blocks: trie-resident shared prefix blocks keep their refcounts,
+    residency, and children pins."""
+    bs = 4
+    cm = PagedCacheManager(CFG, n_slots=2, max_len=32, block_size=bs,
+                           num_blocks=16)
+    prompt = np.arange(9, dtype=np.int32)              # 2 full blocks + 1
+    sa = cm.acquire("a")
+    cm.begin(sa, prompt, 4)
+    assert cm.commit_prefill_progress(sa, 9)           # blocks 0-1 cached
+    sb = cm.acquire("b")
+    seq_b = cm.begin(sb, prompt, 12)
+    assert seq_b.reused == 8                           # both full blocks
+    shared = list(seq_b.table[:2])
+    rc_before = [cm.alloc.refcount[b] for b in shared]
+    cached_before = cm.alloc.n_cached
+    assert cm.commit_prefill_progress(sb, 9)
+    # b speculates 5 drafts deep past its prompt, all rejected
+    seq_b.pos = 9
+    cm.ensure_decode_blocks({sb: 5})
+    grown = len(seq_b.table)
+    seq_b.pos += 1                                      # only t_last kept
+    freed = cm.rollback_writes(sb, seq_b.pos)
+    assert freed == grown - len(seq_b.table) and freed > 0
+    assert [cm.alloc.refcount[b] for b in shared] == rc_before
+    assert cm.alloc.n_cached == cached_before
+    assert len(set(cm.alloc.free)) == len(cm.alloc.free)
+    # the freed blocks are genuinely reusable: drain the whole pool
+    cm.finish(sb, [1, 2])
+    cm.release(sa)
+    a = cm.alloc
+    got = a.allocate(a.num_blocks - 1)
+    assert got is not None and len(set(got)) == a.num_blocks - 1
+
+
+def test_rollback_noop_when_everything_accepted():
+    """Full acceptance leaves nothing to roll back: the table already
+    covers exactly the written positions."""
+    cm = PagedCacheManager(CFG, n_slots=1, max_len=32, block_size=4,
+                           num_blocks=12)
+    slot = cm.acquire("r")
+    seq = cm.begin(slot, np.arange(5, dtype=np.int32), 10)
+    assert cm.commit_prefill_progress(slot, 5)
+    cm.ensure_decode_blocks({slot: 3})
+    seq.pos += 4                                        # all 3 drafts + bonus
+    assert cm.rollback_writes(slot, seq.pos) == 0
+    assert len(seq.table) * 4 >= seq.pos
+
+
 def test_supports_paged_gating():
     assert supports_paged(CFG)
     mamba = ModelConfig(name="m", family="ssm", n_layers=2, d_model=32,

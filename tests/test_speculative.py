@@ -1,0 +1,435 @@
+"""Speculative decoding on the unified token-budget tick.
+
+Covers the acceptance rule (greedy prefix-accept; seeded deterministic
+distribution sweep showing rejection sampling emits EXACTLY the target
+distribution regardless of the drafter), the engine fast path (greedy
+streams bit-identical to non-speculative decode for perfect AND adversarial
+drafters, drafted/accepted/rolled-back counter consistency, KV-pool
+exactness after rollback), the invariants (``host_syncs == ticks`` with
+speculation on, one compiled program, the ``supports_speculative`` gate),
+the token-budget audit (a k-token row can never oversubscribe the fixed
+packed shape — the latent 1-token-per-row assumption), and the
+self-drafting cascade (light generation verified by a speculative heavy
+deployment).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (ModelConfig, init_params, sample_with_scores,
+                          speculative_verify, supports_speculative)
+from repro.serving.draft import (ChainDraftSource, DraftSource,
+                                 NgramDraftSource, RequestDraftSource)
+from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import Request
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32, n_heads=4,
+                  n_kv_heads=2, d_ff=64, vocab_size=128, dtype="float32",
+                  q_chunk=16)
+SSM = ModelConfig(name="m", family="ssm", n_layers=2, d_model=32, n_heads=4,
+                  n_kv_heads=2, d_ff=64, vocab_size=128, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _toks(rng, n):
+    return rng.integers(0, CFG.vocab_size, (n,)).astype(np.int32)
+
+
+class EagerDrafts(DraftSource):
+    """Always proposes k tokens: the NEXT tokens of a planted oracle stream
+    when given one, else a fixed junk token (never the model's argmax for
+    the tiny test configs, so acceptance is 0)."""
+
+    def __init__(self, oracle: dict | None = None, junk: int = 1):
+        self.oracle = oracle or {}
+        self.junk = junk
+
+    def propose(self, req, history, k):
+        s = self.oracle.get(req.request_id)
+        if s is not None:
+            g = len(req.tokens)
+            return [int(t) for t in s[g:g + k]]
+        return [self.junk] * k
+
+
+# ======================================================== acceptance rule
+def test_verify_greedy_accepts_matching_prefix():
+    """Greedy: accept while the draft equals the argmax chain; the token at
+    the first mismatch is the correction, a full accept appends the bonus."""
+    V = 8
+    # row logits whose argmax chain is [3, 5, 2, 7]
+    chain = [3, 5, 2, 7]
+    logits = np.full((3, 4, V), -4.0, np.float32)
+    for i, t in enumerate(chain):
+        logits[:, i, t] = 4.0
+    drafts = np.asarray([[3, 5, 9],      # accept 2, correction at index 2
+                         [3, 5, 2],      # accept all 3, bonus at index 3
+                         [0, 0, 0]], np.int32)
+    dlen = np.asarray([3, 3, 0], np.int32)   # row 2: plain (no drafts)
+    toks, n_acc, scores = speculative_verify(
+        jnp.asarray(logits), jnp.asarray(drafts), jnp.asarray(dlen),
+        seed=0, temperature=0.0)
+    toks, n_acc = np.asarray(toks), np.asarray(n_acc)
+    assert list(n_acc) == [2, 3, 0]
+    assert list(toks[0]) == chain            # [3, 5, 2(correction), ·]
+    assert list(toks[1]) == chain            # [3, 5, 2, 7(bonus)]
+    assert toks[2, 0] == chain[0]            # plain row samples position 0
+    # scores are finite logprob/entropy rows for every emitted position
+    assert np.isfinite(np.asarray(scores)).all()
+
+
+def test_rejection_sampling_matches_target_distribution():
+    """THE losslessness property (seeded deterministic sweep, no hypothesis
+    dep): the speculative rejection sampler's empirical next-token
+    distribution equals vanilla sampling from the target model — for a
+    GOOD drafter (draft = target mode) and an ADVERSARIAL one (draft =
+    target anti-mode) alike.  Verified with a chi-square bound against the
+    analytic target distribution at the first emitted position and,
+    conditionally on acceptance, at the second."""
+    V, K, temp = 8, 2, 1.0
+    rng = np.random.default_rng(0)
+    logits1 = jnp.asarray(rng.normal(size=(1, K + 1, V)) * 1.5, jnp.float32)
+    p0 = np.asarray(jax.nn.softmax(logits1[0, 0] / temp))
+    p1 = np.asarray(jax.nn.softmax(logits1[0, 1] / temp))
+    R = 4000                                  # rows are iid samples
+    logits = jnp.broadcast_to(logits1, (R, K + 1, V))
+    seeds = range(5)
+    verify = jax.jit(lambda d, n, s: speculative_verify(
+        logits, d, n, s, temp))
+    vanilla = jax.jit(lambda s: sample_with_scores(logits[:, 0, :], s, temp))
+
+    # chi-square, df = V-1 = 7: the 0.999 quantile is 24.3; the sweep is
+    # seeded so the statistic is deterministic — 30 is a stable margin
+    def chi2(counts, probs, n):
+        return float(np.sum((counts - n * probs) ** 2 / (n * probs)))
+
+    for name, d0 in (("mode", int(np.argmax(p0))),
+                     ("antimode", int(np.argmin(p0)))):
+        drafts = jnp.broadcast_to(
+            jnp.asarray([[d0, int(np.argmax(p1))]], jnp.int32), (R, K))
+        dlen = jnp.full((R,), K, jnp.int32)
+        c0 = np.zeros(V)
+        c1 = np.zeros(V)
+        cv = np.zeros(V)
+        n1 = 0
+        for seed in seeds:
+            toks, n_acc, _ = verify(drafts, dlen, seed)
+            toks, n_acc = np.asarray(toks), np.asarray(n_acc)
+            np.add.at(c0, toks[:, 0], 1)
+            sel = n_acc >= 1                 # reached position 1
+            np.add.at(c1, toks[sel, 1], 1)
+            n1 += int(sel.sum())
+            vt, _ = vanilla(seed + 1000)
+            np.add.at(cv, np.asarray(vt), 1)
+        N = R * len(seeds)
+        assert chi2(c0, p0, N) < 30, f"{name}: first-token dist diverged"
+        assert chi2(cv, p0, N) < 30          # vanilla control on same bound
+        # empirical spec vs empirical vanilla: total variation is small
+        assert 0.5 * np.abs(c0 / N - cv / N).sum() < 0.05
+        assert n1 > 300                      # enough mass for the cond. test
+        assert chi2(c1, p1, n1) < 30, f"{name}: post-accept dist diverged"
+
+
+# ======================================================= engine fast path
+def _run(params, reqs, **kw):
+    eng = ServeEngine(CFG, params, **kw)
+    done = []
+    eng.on_complete = done.append
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    return eng, {r.request_id: list(r.tokens) for r in done}
+
+
+def _mk_reqs(rng, lens, max_new=8, drafts=None):
+    out = []
+    for i, L in enumerate(lens):
+        r = Request(request_id=f"r{i}", session_key=f"s{i}",
+                    prompt=_toks(rng, L), max_new_tokens=max_new)
+        if drafts is not None:
+            r.draft_tokens = np.asarray(drafts[f"r{i}"], np.int32)
+        out.append(r)
+    return out
+
+
+def test_greedy_spec_stream_identical_with_perfect_drafts(params):
+    """Perfect drafts (the baseline's own output): every draft accepted,
+    generated streams bit-identical, strictly fewer ticks, counters
+    consistent, and the one-sync-per-tick invariant holds throughout."""
+    lens = (10, 25, 5)
+    kw = dict(n_slots=4, max_len=96, paged=True, block_size=16,
+              token_budget=32)
+    rng = np.random.default_rng(0)
+    e0, base = _run(params, _mk_reqs(rng, lens), **kw)
+    rng = np.random.default_rng(0)
+    e1, spec = _run(params, _mk_reqs(rng, lens, drafts=base), spec_k=4, **kw)
+    assert spec == base
+    assert e1.stats.spec_drafted > 0
+    assert e1.stats.spec_accepted == e1.stats.spec_drafted   # all on-script
+    assert e1.stats.spec_rolled_back == 0
+    assert e1.stats.ticks < e0.stats.ticks   # >1 token per sync, amortized
+    assert e1.stats.host_syncs == e1.stats.ticks
+    assert e1.stats.spec_acceptance_rate() == 1.0
+    assert e1._mixed._cache_size() == 1      # speculation adds no programs
+
+
+def test_greedy_spec_stream_identical_with_adversarial_drafts(params):
+    """A drafter that is ALWAYS wrong: every draft rejected and rolled
+    back, the stream still bit-identical to the non-speculative baseline
+    (rejection sampling is lossless), and the block pool drains to exactly
+    its full capacity — rejected-tail blocks were freed exactly once."""
+    lens = (10, 25, 5)
+    kw = dict(n_slots=4, max_len=96, paged=True, block_size=16,
+              token_budget=32)
+    rng = np.random.default_rng(0)
+    _, base = _run(params, _mk_reqs(rng, lens), **kw)
+    junk = (int(np.argmax([v.count(v[0]) for v in base.values()])) + 17) % 128
+    rng = np.random.default_rng(0)
+    e2, spec = _run(params, _mk_reqs(rng, lens), spec_k=4,
+                    draft_source=EagerDrafts(junk=junk), **kw)
+    assert spec == base
+    assert e2.stats.spec_drafted > 0
+    assert e2.stats.spec_accepted + e2.stats.spec_rolled_back \
+        == e2.stats.spec_drafted
+    assert e2.stats.host_syncs == e2.stats.ticks
+    a = e2.cm.alloc
+    assert a.available() == a.num_blocks - 1
+    got = a.allocate(a.num_blocks - 1)
+    assert got is not None and len(set(got)) == a.num_blocks - 1
+
+
+def test_spec_counters_consistent_with_ngram_self_drafting(params):
+    """The default drafter (request draft → n-gram fallback) on its own:
+    accepted <= drafted always, rolled-back = drafted - accepted, and the
+    emitted stream still equals the baseline."""
+    lens = (16, 33)
+    kw = dict(n_slots=4, max_len=96, paged=True, block_size=16,
+              token_budget=32)
+    rng = np.random.default_rng(3)
+    _, base = _run(params, _mk_reqs(rng, lens, max_new=10), **kw)
+    rng = np.random.default_rng(3)
+    e, spec = _run(params, _mk_reqs(rng, lens, max_new=10), spec_k=3, **kw)
+    assert spec == base
+    assert 0 <= e.stats.spec_accepted <= e.stats.spec_drafted
+    assert e.stats.spec_rolled_back \
+        == e.stats.spec_drafted - e.stats.spec_accepted
+    assert e.stats.host_syncs == e.stats.ticks
+
+
+# ===================================================== token-budget audit
+def test_k_token_rows_never_oversubscribe_token_budget(params):
+    """THE latent-bug audit (failing-first): the old packing charged every
+    decode row exactly ONE budget token, so appending k draft lanes
+    unchecked would write past the fixed packed shape the step compiled
+    for.  With token_budget == n_slots (the legal minimum) there is no
+    surplus at full occupancy: speculation must quietly stand down (zero
+    drafts packed) rather than oversubscribe, and every row still emits
+    >= 1 token per tick."""
+    rng = np.random.default_rng(4)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=64, paged=True,
+                      block_size=16, token_budget=4, spec_k=4,
+                      draft_source=EagerDrafts())
+    done = []
+    eng.on_complete = done.append
+    for r in _mk_reqs(rng, (2, 2, 2, 2), max_new=6):
+        eng.submit(r)
+    saw_full = False
+    while not eng.idle():
+        live = len(eng.live)
+        before = eng.stats.spec_drafted
+        eng.tick()
+        drafted = eng.stats.spec_drafted - before
+        # the audit: draft lanes only ever claim the surplus past every
+        # live row's mandatory lane (pre-fix: the packing would overrun
+        # the fixed T-lane arrays and crash/oversubscribe here)
+        assert drafted <= max(0, eng.token_budget - live)
+        saw_full = saw_full or live == eng.cm.n_slots
+    assert saw_full                  # full occupancy (zero surplus) reached
+    assert len(done) == 4 and all(len(r.tokens) == 6 for r in done)
+    assert eng.stats.host_syncs == eng.stats.ticks
+
+
+def test_draft_lanes_bounded_by_surplus(params):
+    """With a surplus of 2 lanes over the mandatory ones, at most 2 draft
+    tokens are packed per tick no matter how eager the drafter, and no
+    live decode row is ever starved of its mandatory lane."""
+    rng = np.random.default_rng(5)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=64, paged=True,
+                      block_size=16, token_budget=6, spec_k=4,
+                      draft_source=EagerDrafts())
+    done = []
+    eng.on_complete = done.append
+    for r in _mk_reqs(rng, (4, 4, 4, 4), max_new=6):
+        eng.submit(r)
+    drafted = []
+    while not eng.idle():
+        before = eng.stats.spec_drafted
+        live = {s: len(r.tokens) for s, r in eng.live.items()}
+        eng.tick()
+        drafted.append(eng.stats.spec_drafted - before)
+        # the surplus bound: drafts never exceed budget minus the live
+        # rows' mandatory lanes (prefill chunks only tighten it further)
+        assert drafted[-1] <= max(0, eng.token_budget - len(live))
+        for s, n in live.items():
+            req = eng.live.get(s)
+            if req is not None:
+                assert len(req.tokens) > n, "decode row starved by drafts"
+    assert max(drafted, default=0) > 0       # speculation did engage
+    assert len(done) == 4 and all(len(r.tokens) == 6 for r in done)
+
+
+def test_long_prefill_with_speculation_never_stalls_decodes(params):
+    """The head-of-line property survives speculation: while a long prompt
+    chunk-prefills, every decoding session still advances every tick (by
+    at least its mandatory token), and the sync invariant holds."""
+    rng = np.random.default_rng(6)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=96, paged=True,
+                      block_size=16, token_budget=10, spec_k=2,
+                      draft_source=EagerDrafts())
+    done = []
+    eng.on_complete = done.append
+    eng.submit(Request(request_id="chat", session_key="c",
+                       prompt=_toks(rng, 4), max_new_tokens=30))
+    eng.tick()
+    chat = next(iter(eng.live.values()))
+    eng.submit(Request(request_id="wall", session_key="w",
+                       prompt=_toks(rng, 60), max_new_tokens=2))
+    while "wall" not in {r.request_id for r in done}:
+        n_before = len(chat.tokens)
+        eng.tick()
+        assert len(chat.tokens) > n_before, "decode stalled behind prefill"
+    eng.run_until_drained()
+    assert {r.request_id for r in done} == {"chat", "wall"}
+    assert eng.stats.host_syncs == eng.stats.ticks
+
+
+def test_draft_ensure_skips_same_tick_finished_prompts(params):
+    """Review regression (crashed pre-fix): the mid-tick draft ensure must
+    grow ONLY the rows drafts were planned for.  A slot that completed a
+    block-aligned, full-max_len prompt in this very tick already sits at
+    pos = S with max_new_tokens == 1 — it will never decode-write, its
+    admission budget reserved no decode block, and growing it would raise
+    "overran max_len" and kill the whole tick for a perfectly valid
+    request."""
+    rng = np.random.default_rng(12)
+    eng = ServeEngine(CFG, params, n_slots=4, max_len=32, paged=True,
+                      block_size=16, token_budget=40, spec_k=4,
+                      draft_source=EagerDrafts())
+    done = []
+    eng.on_complete = done.append
+    eng.submit(Request(request_id="live", session_key="a",
+                       prompt=_toks(rng, 4), max_new_tokens=20))
+    eng.tick()                                # live decoding, drafts planned
+    eng.submit(Request(request_id="edge", session_key="b",
+                       prompt=_toks(rng, 32),       # == max_len, block-aligned
+                       max_new_tokens=1))
+    eng.run_until_drained()                   # pre-fix: RuntimeError mid-tick
+    byid = {r.request_id: r for r in done}
+    assert byid["edge"].error is None and len(byid["edge"].tokens) == 1
+    assert byid["live"].error is None and len(byid["live"].tokens) == 20
+    assert eng.stats.host_syncs == eng.stats.ticks
+
+
+# ========================================================== gating + dense
+def test_supports_speculative_gate():
+    """Speculation is gated exactly like paging: pure-attention token
+    models only.  A dense/SSM engine cannot be constructed with spec_k>0,
+    so the dense phase-separated path is untouched by this feature."""
+    assert supports_speculative(CFG)
+    assert not supports_speculative(SSM)
+    with pytest.raises(ValueError, match="speculative"):
+        ServeEngine(SSM, None, spec_k=2)
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeEngine(CFG, None, spec_k=-1)
+    # same gate one level up: a dense deployment cannot be speculative
+    from repro.serving.cluster import ServeNode
+    with ServeNode(n_workers=1) as node:
+        with pytest.raises(ValueError, match="spec_k"):
+            node.deploy("ssm", SSM, None, n_replicas=1, spec_k=2)
+
+
+# ============================================================ draft sources
+def test_ngram_draft_source_prompt_lookup():
+    src = NgramDraftSource(n=3)
+    req = Request(request_id="r", session_key="s", prompt=None)
+    hist = np.asarray([7, 1, 2, 3, 9, 9, 4, 1, 2, 3], np.int32)
+    # suffix [1,2,3] matched at index 1 → continuation [9, 9, 4]
+    assert src.propose(req, lambda: hist, 3) == [9, 9, 4]
+    assert src.propose(req, lambda: hist, 2) == [9, 9]
+    assert src.propose(req, lambda: np.asarray([1, 2, 3]), 2) == []  # no hist
+    # the scan window is bounded: a match older than max_history is missed
+    capped = NgramDraftSource(n=3, max_history=6)
+    assert capped.propose(req, lambda: hist, 3) == []
+
+
+def test_request_draft_source_never_builds_history():
+    """The cascade-path source must not pay the O(prompt+generated) history
+    concatenation on the tick's critical path."""
+    def boom():
+        raise AssertionError("cascade draft source touched history")
+
+    src = RequestDraftSource()
+    req = Request(request_id="r", session_key="s", prompt=None,
+                  draft_tokens=np.asarray([5, 6, 7, 8], np.int32))
+    req.tokens = [5, 6]
+    assert src.propose(req, boom, 3) == [7, 8]
+    req.tokens = [5, 9]                       # diverged: no more drafts
+    assert src.propose(req, boom, 3) == []
+    req.tokens = []
+    assert src.propose(req, boom, 3) == []
+
+
+def test_chain_draft_source_first_yield_wins():
+    class A(DraftSource):
+        def propose(self, req, history, k):
+            return []
+
+    class B(DraftSource):
+        def propose(self, req, history, k):
+            return [1, 2][:k]
+
+    req = Request(request_id="r", session_key="s", prompt=None)
+    assert ChainDraftSource([A(), B()]).propose(req, lambda: np.asarray([0]),
+                                                2) == [1, 2]
+
+
+# ===================================================== self-drafting cascade
+def test_cascade_self_drafting_speculative_heavy(params):
+    """CascadeServe closed loop: everything escalates (threshold 0 trips on
+    any negative mean logprob), the escalated request carries the light
+    generation as its draft, and the SPECULATIVE heavy deployment — same
+    weights here, the perfect-drafter limit — verifies it at full
+    acceptance while producing the exact greedy answer."""
+    from repro.serving.cluster import CascadeGate, CascadeRoute, ServeNode
+
+    rng = np.random.default_rng(7)
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", CFG, params, n_replicas=1, n_slots=4,
+                            max_len=96)
+        heavy = node.deploy("heavy", CFG, params, n_replicas=1, n_slots=4,
+                            max_len=96, spec_k=3, token_budget=32)
+        route = CascadeRoute(light, heavy,
+                             CascadeGate("logprob", threshold=0.0))
+        prompts = {f"r{i}": _toks(rng, 8 + 3 * i) for i in range(3)}
+        for rid, p in prompts.items():
+            route.submit(rid, rid, p, max_new_tokens=6)
+        node.run_until_drained()
+        hs, rs = heavy.stats(), route.stats()
+        assert rs["escalated"] == 3          # threshold 0 trips everything
+        assert hs["spec_drafted"] > 0
+        assert hs["spec_accepted"] == hs["spec_drafted"]
+        assert hs["spec_acceptance_rate"] == 1.0
+        assert hs["spec_rolled_back"] == 0
+        for rid in prompts:
+            heavy_ans = route.result(rid)
+            light_ans = light.result(rid)
+            assert heavy_ans is not None and light_ans is not None
+            # same weights + lossless speculation ⇒ identical greedy answers
+            np.testing.assert_array_equal(heavy_ans, light_ans)
+        for eng in light.engines + heavy.engines:
+            assert eng.stats.host_syncs == eng.stats.ticks

@@ -4,10 +4,15 @@
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-smoke serve-example
+.PHONY: test lint bench bench-smoke serve-example
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+# cascade-lint: lock discipline, host-sync discipline, donation/recompile
+# hazards over the whole tree; exits nonzero on any unsuppressed finding
+lint:
+	PYTHONPATH=$(PYTHONPATH) python -m repro.analysis src/repro
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run $(if $(ONLY),--only $(ONLY))

@@ -1,0 +1,46 @@
+"""cascade-lint: project-specific static analysis + runtime sanitizers.
+
+Cascade's latency story rests on invariants the code can only state by
+convention — this package makes three of them machine-checked:
+
+1. **Lock discipline** (``lock_discipline``): every attribute a class
+   mutates under one of its locks is mutated under that lock *everywhere*
+   (the store/dispatcher/driver threads touch shared state only under
+   their locks).
+2. **Host-sync discipline** (``sync_discipline``): the serving fast path
+   has exactly ONE device→host sync site per tick — ``host_syncs ==
+   ticks`` holds statically, not just when a test happens to trip it.
+3. **Donation & recompile hazards** (``donation``): a buffer donated to a
+   jitted dispatch is dead — reading it afterwards is a use-after-free;
+   and jitted calls must not be fed shape-varying or Python-scalar
+   operands that would break the compile-once fixed-shape tick.
+
+``runner`` is the CLI (``make lint`` / ``python -m repro.analysis``);
+``sanitizer`` is the runtime half — a lock-order tracker (acquisition
+graph + cycle detection) and a device-sync call-site sanitizer wired into
+the threaded serving tests by ``tests/conftest.py``.
+
+Suppressions are inline pragmas with a one-line justification::
+
+    # lint: guarded-by(seq_lock) per-shard sequencer serializes writers
+    # lint: allow-sync(training loop; not on the serving fast path)
+    # lint: allow-donated-read(operand is rebound before this read)
+    # lint: static-ok(value is compile-time constant per engine)
+    # lint: sync-site(THE one per-tick device->host pull)
+
+A pragma suppresses only a matching finding on its own statement (or the
+statement directly below a standalone pragma line); ``guarded-by`` must
+name the inferred guard lock or a lock actually held at the site — a
+wrong name keeps the finding.
+"""
+from .base import Finding, Pragma, SourceInfo, iter_python_files
+from .donation import DonationPass
+from .lock_discipline import LockDisciplinePass
+from .runner import ALL_PASSES, lint_paths, main
+from .sync_discipline import SyncDisciplinePass
+
+__all__ = [
+    "Finding", "Pragma", "SourceInfo", "iter_python_files",
+    "LockDisciplinePass", "SyncDisciplinePass", "DonationPass",
+    "ALL_PASSES", "lint_paths", "main",
+]

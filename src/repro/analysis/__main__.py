@@ -1,0 +1,5 @@
+"""``python -m repro.analysis <paths>`` — run cascade-lint."""
+from .runner import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,234 @@
+"""Pass 3 — donation & recompile hazards around ``jax.jit`` call sites.
+
+Two hot-path rules:
+
+**Donation (use-after-donate).**  ``X = jax.jit(fn, donate_argnums=(i,))``
+hands operand ``i``'s buffer to XLA: after any call ``X(...)`` the operand
+is dead and reading it is a use-after-free (at best an error, at worst a
+silent whole-pool copy — PR 3's original bug class).  Within each function
+the pass tracks calls of known-jitted names, marks the donated positional
+operands' dotted paths dead, and flags any later *read* of a dead path.
+A store to the same path (``self.cm.pools = pools``) revives it.  The
+analysis is linear over the statement stream — the shape all dispatch
+code in this repo has — so a read that is only conditionally dead is
+still flagged; annotate real counterexamples with
+``# lint: allow-donated-read(why)``.
+
+**Recompile (shape/value hazard).**  A jitted callable compiled without
+``static_argnums``/``static_argnames`` re-traces whenever a Python scalar
+argument changes value.  Calls of a known-jitted name that pass a bare
+int/float/bool literal or a ``len(...)`` are flagged: the compile-once
+fixed-shape tick cannot tolerate per-call retraces.  Suppress a
+compile-time-constant with ``# lint: static-ok(why)``.
+
+Only *literal* ``donate_argnums`` tuples/ints are understood; jit wrappers
+built through helpers or comprehensions are out of scope (they get no
+findings, not wrong ones).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+
+from .base import Finding, SourceInfo, dotted_name
+
+
+@dataclass(frozen=True)
+class JittedCallable:
+    name: str                    # dotted name it is callable as, e.g. "self._mixed"
+    donated: tuple[int, ...]     # positional operand indexes donated
+    has_static: bool             # static_argnums / static_argnames given
+
+
+def _literal_argnums(node: ast.AST) -> tuple[int, ...] | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: list[int] = []
+        for el in node.elts:
+            if isinstance(el, ast.Constant) and isinstance(el.value, int):
+                out.append(el.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+def _jit_spec(value: ast.AST) -> tuple[tuple[int, ...], bool] | None:
+    """(donated positions, has_static) for a ``jax.jit(...)`` call, else None."""
+    if not isinstance(value, ast.Call) \
+            or dotted_name(value.func) not in ("jax.jit", "jit"):
+        return None
+    donated: tuple[int, ...] = ()
+    has_static = False
+    for kw in value.keywords:
+        if kw.arg == "donate_argnums":
+            nums = _literal_argnums(kw.value)
+            if nums is None:
+                return None          # non-literal spec: out of scope
+            donated = nums
+        elif kw.arg in ("static_argnums", "static_argnames"):
+            has_static = True
+    return donated, has_static
+
+
+def collect_jitted(tree: ast.Module) -> dict[str, JittedCallable]:
+    """Jitted callables bound to stable names, module- and class-level."""
+    out: dict[str, JittedCallable] = {}
+
+    def record(target: ast.AST, value: ast.AST) -> None:
+        spec = _jit_spec(value)
+        if spec is None:
+            return
+        dn = dotted_name(target)
+        if dn is None:
+            return
+        out[dn] = JittedCallable(dn, spec[0], spec[1])
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                record(t, node.value)
+    return out
+
+
+class _ScopeWalker(ast.NodeVisitor):
+    """Linear walk of one function: dead donated paths + literal-arg calls."""
+
+    def __init__(self, src: SourceInfo, jitted: dict[str, JittedCallable],
+                 qual: str) -> None:
+        self.src = src
+        self.jitted = jitted
+        self.qual = qual
+        self.dead: dict[str, int] = {}     # dotted path -> donation line
+        self.findings: list[Finding] = []
+
+    # ------------------------------------------------------------- helpers
+    def _check_reads(self, node: ast.AST) -> None:
+        if not self.dead:
+            return
+        for sub in ast.walk(node):
+            dn = dotted_name(sub)
+            if dn is None or dn not in self.dead:
+                continue
+            if not isinstance(getattr(sub, "ctx", None), ast.Load):
+                continue
+            line = sub.lineno
+            end = getattr(sub, "end_lineno", line) or line
+            if self.src.pragma_at(line, end, "allow-donated-read"):
+                continue
+            self.findings.append(Finding(
+                self.src.path, line, "donation",
+                f"{dn} was donated to a jitted call on line "
+                f"{self.dead[dn]} and not rebound — reading it is a "
+                f"use-after-donate (in {self.qual})"))
+
+    def _apply_stores(self, node: ast.stmt) -> None:
+        targets: list[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = list(node.targets)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        for t in targets:
+            for el in (t.elts if isinstance(t, (ast.Tuple, ast.List))
+                       else [t]):
+                dn = dotted_name(el)
+                if dn is not None:
+                    self.dead.pop(dn, None)
+
+    def _apply_calls(self, node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            fn = dotted_name(sub.func)
+            spec = self.jitted.get(fn) if fn else None
+            if spec is None:
+                continue
+            for idx in spec.donated:
+                if idx < len(sub.args):
+                    dn = dotted_name(sub.args[idx])
+                    if dn is not None:
+                        self.dead[dn] = sub.lineno
+            if not spec.has_static:
+                self._check_retrace_args(sub, fn)
+
+    def _check_retrace_args(self, call: ast.Call, fn: str) -> None:
+        for arg in call.args:
+            hazard: str | None = None
+            if isinstance(arg, ast.Constant) \
+                    and isinstance(arg.value, (bool, int, float)):
+                hazard = f"Python scalar literal {arg.value!r}"
+            elif isinstance(arg, ast.Call) \
+                    and dotted_name(arg.func) == "len":
+                hazard = "len(...) (varies with input size)"
+            if hazard is None:
+                continue
+            line = arg.lineno
+            end = getattr(arg, "end_lineno", line) or line
+            if self.src.pragma_at(line, end, "static-ok") \
+                    or self.src.pragma_at(call.lineno,
+                                          getattr(call, "end_lineno", None),
+                                          "static-ok"):
+                continue
+            self.findings.append(Finding(
+                self.src.path, line, "recompile",
+                f"{fn} is jitted without static_argnums but is passed "
+                f"{hazard}: every new value retraces — make it static "
+                f"or an array (in {self.qual})"))
+
+    # -------------------------------------------------------------- visits
+    def _statement(self, node: ast.stmt) -> None:
+        """Reads are checked BEFORE this statement's own donation takes
+        effect, so the donating call itself is not a use-after-donate."""
+        self._check_reads(node)
+        self._apply_stores(node)
+        self._apply_calls(node)
+
+    def visit(self, node: ast.AST) -> None:  # type: ignore[override]
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return                    # nested scope: separate analysis
+        if isinstance(node, (ast.If, ast.For, ast.While, ast.With,
+                             ast.Try)):
+            # compound statement: check its header expression, then the
+            # bodies in order (linear approximation of control flow)
+            for field_ in ("test", "iter", "items", "subject"):
+                sub = getattr(node, field_, None)
+                if sub is not None:
+                    subs = sub if isinstance(sub, list) else [sub]
+                    for s in subs:
+                        self._check_reads(s)
+                        self._apply_calls(s)
+            for body_field in ("body", "orelse", "finalbody"):
+                for stmt in getattr(node, body_field, []) or []:
+                    self.visit(stmt)
+            for handler in getattr(node, "handlers", []) or []:
+                for stmt in handler.body:
+                    self.visit(stmt)
+        elif isinstance(node, ast.stmt):
+            self._statement(node)
+
+
+class DonationPass:
+    name = "donation"
+
+    def run(self, src: SourceInfo) -> list[Finding]:
+        jitted = collect_jitted(src.tree)
+        if not jitted:
+            return []
+        findings: list[Finding] = []
+        for qual, fn in self._functions(src.tree):
+            walker = _ScopeWalker(src, jitted, qual)
+            for stmt in fn.body:
+                walker.visit(stmt)
+            findings.extend(walker.findings)
+        return findings
+
+    @staticmethod
+    def _functions(tree: ast.Module):
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef):
+                yield node.name, node
+            elif isinstance(node, ast.ClassDef):
+                for item in node.body:
+                    if isinstance(item, ast.FunctionDef):
+                        yield f"{node.name}.{item.name}", item

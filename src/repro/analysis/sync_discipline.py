@@ -1,0 +1,212 @@
+"""Pass 2 — host-sync discipline: one device→host sync site, statically.
+
+The serving invariant ``stats.host_syncs == stats.ticks`` only trips at
+test time; this pass enforces its precondition at lint time: in the fast
+path packages (``serving/``, ``models/``) every device→host sync point is
+flagged unless it sits inside THE allowlisted sync site.
+
+Flagged constructs:
+
+- ``jax.device_get(...)`` and ``jax.block_until_ready(...)`` calls,
+- ``.block_until_ready()`` / ``.item()`` method calls,
+- ``np.asarray``/``np.array`` whose argument mentions a *device-tainted*
+  name, and ``float()``/``bool()``/``int()`` of a device-tainted name —
+  implicit syncs that are invisible in a grep.
+
+Taint is intra-function: names assigned from ``jnp.*``/``jax.*`` calls or
+from calls of a *jitted callable* are device values; tainted-ness follows
+simple assignment and subscripting.  Jitted callables are recognized per
+module/class: ``NAME = jax.jit(...)``, ``self.NAME = jax.jit(...)``, and
+functions decorated ``@jax.jit`` / ``@functools.partial(jax.jit, ...)``.
+
+The allowlist is a ``# lint: sync-site(...)`` pragma on the function def:
+every sync inside it is sanctioned, and the RUNNER enforces that at most
+one sync site exists across the fast-path packages — a second pragma is
+itself a violation, so the "single sync point" rule cannot erode one
+annotation at a time.  Point suppressions use ``# lint: allow-sync(why)``.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+from .base import Finding, SourceInfo, dotted_name
+
+_DEVICE_PRODUCER_PREFIXES = ("jnp.", "jax.numpy.", "jax.lax.")
+_DEVICE_PRODUCERS = {"jax.device_put", "jax.eval_shape"}
+_HOST_CONVERTERS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+_SCALAR_CONVERTERS = {"float", "bool", "int"}
+
+
+@dataclass
+class SyncSite:
+    """A declared (pragma'd) sanctioned sync function."""
+    path: str
+    qualname: str
+    line: int
+
+
+@dataclass
+class SyncReport:
+    findings: list[Finding] = field(default_factory=list)
+    sync_sites: list[SyncSite] = field(default_factory=list)
+
+
+def _is_jit_call(value: ast.AST) -> bool:
+    return (isinstance(value, ast.Call)
+            and dotted_name(value.func) in ("jax.jit", "jit"))
+
+
+def _jitted_decorated(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        dn = dotted_name(dec)
+        if dn in ("jax.jit", "jit"):
+            return True
+        if isinstance(dec, ast.Call):
+            dn = dotted_name(dec.func)
+            if dn in ("jax.jit", "jit"):
+                return True
+            if dn in ("functools.partial", "partial") and dec.args \
+                    and dotted_name(dec.args[0]) in ("jax.jit", "jit"):
+                return True
+    return False
+
+
+class _FunctionTaint(ast.NodeVisitor):
+    """In-order walk of one function: taint device names, flag sync points."""
+
+    def __init__(self, src: SourceInfo, jitted: set[str], rule: str,
+                 qual: str) -> None:
+        self.src = src
+        self.jitted = jitted          # names whose call yields device values
+        self.rule = rule
+        self.qual = qual
+        self.tainted: set[str] = set()
+        self.findings: list[Finding] = []
+
+    # ------------------------------------------------------------- helpers
+    def _produces_device_value(self, call: ast.Call) -> bool:
+        dn = dotted_name(call.func)
+        if dn is None:
+            return False
+        if dn in _DEVICE_PRODUCERS or dn in self.jitted:
+            return True
+        if dn == "jax.device_get":
+            return False              # that IS the host transfer
+        return dn.startswith(_DEVICE_PRODUCER_PREFIXES)
+
+    def _mentions_tainted(self, node: ast.AST) -> bool:
+        return any(isinstance(n, ast.Name) and n.id in self.tainted
+                   for n in ast.walk(node))
+
+    def _flag(self, node: ast.AST, msg: str) -> None:
+        line = node.lineno
+        end = getattr(node, "end_lineno", line) or line
+        if self.src.pragma_at(line, end, "allow-sync"):
+            return
+        self.findings.append(Finding(self.src.path, line, self.rule,
+                                     f"{msg} (in {self.qual})"))
+
+    def _taint_target(self, target: ast.AST) -> None:
+        if isinstance(target, ast.Name):
+            self.tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._taint_target(el)
+
+    # ------------------------------------------------------------- visits
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.visit(node.value)
+        value = node.value
+        taints = False
+        if isinstance(value, ast.Call):
+            taints = self._produces_device_value(value)
+        elif isinstance(value, ast.Name):
+            taints = value.id in self.tainted
+        elif isinstance(value, ast.Subscript):
+            taints = self._mentions_tainted(value.value)
+        if taints:
+            for t in node.targets:
+                self._taint_target(t)
+        else:
+            # reassignment from a host expression clears the taint
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.tainted.discard(t.id)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        dn = dotted_name(node.func)
+        if dn == "jax.device_get":
+            self._flag(node, "jax.device_get is a device->host sync")
+        elif dn in ("jax.block_until_ready",):
+            self._flag(node, "jax.block_until_ready is a device->host sync")
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "block_until_ready":
+            self._flag(node, ".block_until_ready() is a device->host sync")
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "item" and not node.args:
+            self._flag(node, ".item() forces a device->host transfer")
+        elif dn in _HOST_CONVERTERS and node.args \
+                and self._mentions_tainted(node.args[0]):
+            self._flag(node, f"{dn} of a device value syncs it to host")
+        elif dn in _SCALAR_CONVERTERS and node.args \
+                and self._mentions_tainted(node.args[0]):
+            self._flag(node, f"{dn}() of a device value syncs it to host")
+        self.generic_visit(node)
+
+
+class SyncDisciplinePass:
+    name = "host-sync"
+
+    def run(self, src: SourceInfo) -> list[Finding]:
+        return self.run_full(src).findings
+
+    def run_full(self, src: SourceInfo) -> SyncReport:
+        report = SyncReport()
+        module_jitted = self._module_jitted(src.tree)
+        for cls_name, fn, jitted in self._functions(src.tree, module_jitted):
+            qual = f"{cls_name}.{fn.name}" if cls_name else fn.name
+            deco_first = min([fn.lineno]
+                             + [d.lineno for d in fn.decorator_list])
+            if src.pragma_at(deco_first, fn.lineno, "sync-site"):
+                report.sync_sites.append(
+                    SyncSite(src.path, qual, fn.lineno))
+                continue              # the sanctioned sync point
+            walker = _FunctionTaint(src, jitted, self.name, qual)
+            for stmt in fn.body:
+                walker.visit(stmt)
+            report.findings.extend(walker.findings)
+        return report
+
+    # -------------------------------------------------------------- scans
+    @staticmethod
+    def _module_jitted(tree: ast.Module) -> set[str]:
+        jitted: set[str] = set()
+        for node in tree.body:
+            if isinstance(node, ast.Assign) and _is_jit_call(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        jitted.add(t.id)
+            elif isinstance(node, ast.FunctionDef) \
+                    and _jitted_decorated(node):
+                jitted.add(node.name)
+        return jitted
+
+    @staticmethod
+    def _functions(tree: ast.Module, module_jitted: set[str]):
+        """Yield (class name | None, function, jitted-name set) triples."""
+        for node in tree.body:
+            if isinstance(node, ast.FunctionDef):
+                yield None, node, set(module_jitted)
+            elif isinstance(node, ast.ClassDef):
+                cls_jitted = set(module_jitted)
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Assign) \
+                            and _is_jit_call(sub.value):
+                        for t in sub.targets:
+                            dn = dotted_name(t)
+                            if dn and dn.startswith("self."):
+                                cls_jitted.add(dn)   # "self._mixed"
+                for item in node.body:
+                    if isinstance(item, ast.FunctionDef):
+                        yield node.name, item, cls_jitted

@@ -191,5 +191,7 @@ class Dispatcher:
                     self._rr += 1
             self._pool.submit(ev, qi)
             events.append(ev)
-            self.dispatched += 1
+        if events:
+            with self._lock:  # dispatch() is called from concurrent putters
+                self.dispatched += len(events)
         return events

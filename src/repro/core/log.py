@@ -142,16 +142,18 @@ class PersistentLog:
             buf = bytearray()
             offsets: list[int] = []
             base = self._tail
-            for rec in batch:
-                off = base + len(buf)
-                offsets.append(off)
-                prev = self._last_offset.get(rec.key, _NO_PREV)
-                kb = rec.key.encode()
-                buf += _HEADER.pack(_MAGIC, rec.version, prev, rec.timestamp_ns,
-                                    len(kb), len(rec.payload))
-                buf += kb
-                buf += rec.payload
-                self._last_offset[rec.key] = off
+            with self._meta_lock:  # _last_offset is shared with get()/_recover
+                for rec in batch:
+                    off = base + len(buf)
+                    offsets.append(off)
+                    prev = self._last_offset.get(rec.key, _NO_PREV)
+                    kb = rec.key.encode()
+                    buf += _HEADER.pack(_MAGIC, rec.version, prev,
+                                        rec.timestamp_ns,
+                                        len(kb), len(rec.payload))
+                    buf += kb
+                    buf += rec.payload
+                    self._last_offset[rec.key] = off
             self._file.write(buf)
             self._file.flush()
             os.fsync(self._file.fileno())

@@ -138,7 +138,9 @@ class CascadeStore:
     def create_pool(self, spec: PoolSpec, worker_ids: list[int] | None = None) -> PoolSpec:
         ids = worker_ids if worker_ids is not None else sorted(self.workers)
         self.pools.create(spec)
-        self._shard_maps[spec.path] = build_shard_map(spec.path, ids, spec.replication)
+        with self._meta_lock:  # remove_pool deletes from _shard_maps under it
+            self._shard_maps[spec.path] = build_shard_map(
+                spec.path, ids, spec.replication)
         return spec
 
     def _route(self, key: str) -> tuple[PoolSpec, tuple[int, ...]]:
@@ -236,6 +238,7 @@ class CascadeStore:
         obj = CascadeObject(key=key, payload=payload, timestamp_ns=monotonic_ns())
         with seq_lock:  # atomic multicast: identical order at every replica
             version = self._versions.get(vkey, -1) + 1
+            # lint: guarded-by(seq_lock) per-(pool,shard) sequencer, not _meta_lock, serializes writers of this vkey
             self._versions[vkey] = version
             stamped = None
             for wid in members:

@@ -283,6 +283,7 @@ class ServeEngine:
         self._dispatches += 1
         return jnp.int32(self._seed_base + self._dispatches)
 
+    # lint: sync-site(THE one per-tick device->host pull)
     def _to_host(self, arr):
         """THE device→host sync point; everything host-side reads through
         here so tests/benchmarks can assert the one-sync-per-tick rule.  A

@@ -1,0 +1,52 @@
+"""Tier-1 wiring for the cascade-lint runtime sanitizers.
+
+For the threaded suites (dispatcher / cluster / devstore / store / log)
+every test runs with:
+
+- the **lock-order tracker** installed: all ``threading.Lock``/``RLock``
+  created by ``repro.*`` modules during the test are wrapped, the
+  acquisition graph is recorded, and any cycle (lock-order inversion that
+  could deadlock under another schedule) or blocking self-re-acquire
+  fails the test at teardown — even if the deadlocking schedule never
+  actually ran;
+- the **sync-site sanitizer** installed: a ``jax.device_get`` issued from
+  fast-path code (``repro.serving``/``repro.models``) anywhere other
+  than ``ServeEngine._to_host`` fails the test.
+
+Other suites are untouched: the patch is per-test and uninstalled in a
+finally block.
+"""
+import pytest
+
+from repro.analysis.sanitizer import LockOrderTracker, SyncSiteSanitizer
+
+SANITIZED_MODULES = {
+    "test_dispatcher",
+    "test_serve_cluster",
+    "test_serve_node",
+    "test_devstore_retention",
+    "test_fastpath_devstore",
+    "test_store_core",
+    "test_log",
+}
+
+
+@pytest.fixture(autouse=True)
+def _cascade_sanitizers(request):
+    mod = request.module.__name__.rsplit(".", 1)[-1]
+    if mod not in SANITIZED_MODULES:
+        yield
+        return
+    tracker = LockOrderTracker()
+    sync = SyncSiteSanitizer()
+    tracker.install()
+    sync.install()
+    try:
+        yield
+    finally:
+        tracker.uninstall()
+        sync.uninstall()
+    assert not tracker.violations, (
+        "lock-order sanitizer: " + "; ".join(tracker.violations))
+    assert not sync.violations, (
+        "sync-site sanitizer: " + "; ".join(sync.violations))

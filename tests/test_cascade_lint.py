@@ -1,0 +1,370 @@
+"""Unit tests for the cascade-lint static passes.
+
+Each pass gets: a seeded violation that must be flagged, a clean snippet
+that must not be, and pragma-suppression checks — including the rule that
+a ``guarded-by`` pragma naming the WRONG lock keeps the finding, so
+annotations cannot rot silently.  The final test runs the full driver
+over ``src/repro`` and requires zero unsuppressed findings: the tree is
+clean (fixed or pragma-justified) by construction.
+"""
+import textwrap
+from pathlib import Path
+
+from repro.analysis import (
+    DonationPass,
+    LockDisciplinePass,
+    SourceInfo,
+    SyncDisciplinePass,
+    lint_paths,
+)
+
+REPO_SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+def _run(pass_cls, source: str):
+    src = SourceInfo.from_source(textwrap.dedent(source), "snippet.py")
+    return pass_cls().run(src)
+
+
+# --------------------------------------------------------------------------
+# Pass 1: lock discipline
+# --------------------------------------------------------------------------
+
+LOCKED_CLASS = """
+    import threading
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.items = []
+
+        def add(self, x):
+            with self._lock:
+                self.items.append(x)
+
+        def {bad_method}
+"""
+
+
+def test_lock_pass_flags_unguarded_mutation():
+    src = LOCKED_CLASS.format(bad_method=(
+        "drain(self):\n            self.items = []"))
+    findings = _run(LockDisciplinePass, src)
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == "lock-discipline"
+    assert "Box.items" in f.message and "_lock" in f.message
+
+
+def test_lock_pass_flags_unguarded_mutator_call():
+    src = LOCKED_CLASS.format(bad_method=(
+        "steal(self):\n            self.items.pop()"))
+    findings = _run(LockDisciplinePass, src)
+    assert len(findings) == 1
+    assert "Box.items" in findings[0].message
+
+
+def test_lock_pass_clean_when_consistent():
+    src = LOCKED_CLASS.format(bad_method=(
+        "drain(self):\n            with self._lock:\n"
+        "                self.items = []"))
+    assert _run(LockDisciplinePass, src) == []
+
+
+def test_lock_pass_ignores_init_and_unlocked_attrs():
+    # construction is single-threaded; attrs never locked are single-writer
+    src = """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []
+                self.count = 0
+
+            def bump(self):
+                self.count += 1
+
+            def add(self, x):
+                with self._lock:
+                    self.items.append(x)
+    """
+    assert _run(LockDisciplinePass, src) == []
+
+
+def test_lock_pass_pragma_with_held_local_lock_suppresses():
+    src = """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []
+
+            def add(self, x):
+                with self._lock:
+                    self.items.append(x)
+
+            def drain(self, other_lock):
+                with other_lock:
+                    # lint: guarded-by(other_lock) shard lock owns this slice
+                    self.items = []
+    """
+    assert _run(LockDisciplinePass, src) == []
+
+
+def test_lock_pass_wrong_lock_name_pragma_still_flags():
+    src = """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []
+
+            def add(self, x):
+                with self._lock:
+                    self.items.append(x)
+
+            def drain(self):
+                # lint: guarded-by(_other_lock) stale justification
+                self.items = []
+    """
+    findings = _run(LockDisciplinePass, src)
+    assert len(findings) == 1
+    assert "pragma names" in findings[0].message
+    assert "_other_lock" in findings[0].message
+
+
+def test_lock_pass_nested_def_loses_held_set():
+    # a closure defined inside `with` runs later, when the lock is gone
+    src = """
+        import threading
+
+        class Box:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []
+
+            def add(self, x):
+                with self._lock:
+                    self.items.append(x)
+
+            def sched(self, pool):
+                with self._lock:
+                    def later():
+                        self.items = []
+                    pool.submit(later)
+    """
+    findings = _run(LockDisciplinePass, src)
+    assert len(findings) == 1
+    assert "Box.items" in findings[0].message
+
+
+# --------------------------------------------------------------------------
+# Pass 2: host-sync discipline
+# --------------------------------------------------------------------------
+
+def test_sync_pass_flags_device_get_outside_sync_site():
+    findings = _run(SyncDisciplinePass, """
+        import jax
+
+        def peek(arr):
+            return jax.device_get(arr)
+    """)
+    assert len(findings) == 1
+    assert findings[0].rule == "host-sync"
+    assert "device_get" in findings[0].message
+
+
+def test_sync_pass_flags_item_and_block_until_ready():
+    findings = _run(SyncDisciplinePass, """
+        def peek(arr):
+            arr.block_until_ready()
+            return arr.item()
+    """)
+    assert [f.line for f in findings] == [3, 4]
+
+
+def test_sync_pass_flags_implicit_asarray_of_device_value():
+    findings = _run(SyncDisciplinePass, """
+        import jax.numpy as jnp
+        import numpy as np
+
+        def step(x):
+            y = jnp.sum(x)
+            return np.asarray(y)
+    """)
+    assert len(findings) == 1
+    assert "np.asarray" in findings[0].message
+
+
+def test_sync_pass_flags_float_of_jitted_result():
+    findings = _run(SyncDisciplinePass, """
+        import jax
+
+        _step = jax.jit(lambda x: x)
+
+        def drive(x):
+            out = _step(x)
+            return float(out)
+    """)
+    assert len(findings) == 1
+    assert "float()" in findings[0].message
+
+
+def test_sync_pass_clean_on_host_math():
+    assert _run(SyncDisciplinePass, """
+        import numpy as np
+
+        def host_only(xs):
+            acc = np.asarray(xs)
+            return float(sum(xs))
+    """) == []
+
+
+def test_sync_pass_sync_site_pragma_exempts_function():
+    findings = _run(SyncDisciplinePass, """
+        import jax
+
+        class Engine:
+            # lint: sync-site(the one per-tick pull)
+            def _to_host(self, arr):
+                return jax.device_get(arr)
+
+            def peek(self, arr):
+                return jax.device_get(arr)
+    """)
+    assert len(findings) == 1
+    assert "Engine.peek" in findings[0].message
+
+
+def test_sync_pass_allow_sync_pragma_suppresses():
+    assert _run(SyncDisciplinePass, """
+        import jax
+
+        def debug_dump(arr):
+            return jax.device_get(arr)  # lint: allow-sync(offline debug path)
+    """) == []
+
+
+def test_runner_enforces_single_sync_site_budget(tmp_path):
+    serving = tmp_path / "serving"
+    serving.mkdir()
+    site = ("import jax\n\n\n"
+            "# lint: sync-site(per-tick pull)\n"
+            "def pull(arr):\n"
+            "    return jax.device_get(arr)\n")
+    (serving / "a.py").write_text(site)
+    (serving / "b.py").write_text(site.replace("pull", "pull2"))
+    findings = lint_paths([str(tmp_path)])
+    assert len(findings) == 1
+    assert "second `sync-site` pragma" in findings[0].message
+
+
+# --------------------------------------------------------------------------
+# Pass 3: donation & recompile hazards
+# --------------------------------------------------------------------------
+
+DONATING = """
+    import jax
+
+    _step = jax.jit(lambda p, s: s, donate_argnums=(1,))
+
+    def drive(params, state):
+        out = _step(params, state)
+        {after}
+"""
+
+
+def test_donation_pass_flags_read_after_donate():
+    findings = _run(DonationPass, DONATING.format(after="return state"))
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule == "donation"
+    assert "use-after-donate" in f.message and "state" in f.message
+
+
+def test_donation_pass_rebind_revives_operand():
+    assert _run(DonationPass, DONATING.format(
+        after="state = out\n        return state")) == []
+
+
+def test_donation_pass_pragma_suppresses():
+    assert _run(DonationPass, DONATING.format(
+        after="return state  # lint: allow-donated-read(aliased on purpose)"
+    )) == []
+
+
+def test_donation_pass_tracks_self_attributes():
+    findings = _run(DonationPass, """
+        import jax
+
+        class Engine:
+            def __init__(self, fn):
+                self._mixed = jax.jit(fn, donate_argnums=(1,))
+
+            def tick(self, bt):
+                pools = self._mixed(self.params, self.cm.pools, bt)
+                return self.cm.pools.shape
+    """)
+    assert len(findings) == 1
+    assert "self.cm.pools" in findings[0].message
+
+
+def test_recompile_pass_flags_scalar_literal_to_jit():
+    findings = _run(DonationPass, """
+        import jax
+
+        _step = jax.jit(lambda x, n: x)
+
+        def drive(x):
+            return _step(x, 7)
+    """)
+    assert len(findings) == 1
+    assert findings[0].rule == "recompile"
+    assert "static_argnums" in findings[0].message
+
+
+def test_recompile_pass_flags_len_argument():
+    findings = _run(DonationPass, """
+        import jax
+
+        _step = jax.jit(lambda x, n: x)
+
+        def drive(x, rows):
+            return _step(x, len(rows))
+    """)
+    assert len(findings) == 1
+    assert "len(...)" in findings[0].message
+
+
+def test_recompile_pass_static_argnums_is_clean():
+    assert _run(DonationPass, """
+        import jax
+
+        _step = jax.jit(lambda x, n: x, static_argnums=(1,))
+
+        def drive(x):
+            return _step(x, 7)
+    """) == []
+
+
+def test_recompile_pass_static_ok_pragma_suppresses():
+    assert _run(DonationPass, """
+        import jax
+
+        _step = jax.jit(lambda x, n: x)
+
+        def drive(x):
+            return _step(x, 7)  # lint: static-ok(constant per build)
+    """) == []
+
+
+# --------------------------------------------------------------------------
+# The whole tree is clean under all three passes
+# --------------------------------------------------------------------------
+
+def test_full_tree_is_clean():
+    findings = lint_paths([str(REPO_SRC)])
+    assert findings == [], "\n".join(f.render() for f in findings)

@@ -1,0 +1,177 @@
+"""Runtime sanitizer tests: lock-order tracking and sync-site checking.
+
+The headline regression test: a deliberately inverted acquisition order
+(A then B on one path, B then A on another) is reported as a lock-order
+inversion even though no deadlock actually occurred — the tracker works
+from the acquisition graph, not from a lucky schedule.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.sanitizer import (
+    LockOrderTracker,
+    SyncSiteSanitizer,
+    TrackedLock,
+)
+from repro.core.log import PersistentLog
+
+
+# --------------------------------------------------------------------------
+# lock-order tracker
+# --------------------------------------------------------------------------
+
+def test_inverted_acquisition_order_is_detected():
+    tracker = LockOrderTracker()
+    a = tracker.wrap(name="A")
+    b = tracker.wrap(name="B")
+    with a:
+        with b:
+            pass
+    # the reverse nesting: with another thread interleaving, this deadlocks
+    with b:
+        with a:
+            pass
+    assert len(tracker.violations) == 1
+    assert "lock-order inversion" in tracker.violations[0]
+    assert "A" in tracker.violations[0] and "B" in tracker.violations[0]
+
+
+def test_consistent_acquisition_order_is_clean():
+    tracker = LockOrderTracker()
+    a = tracker.wrap(name="A")
+    b = tracker.wrap(name="B")
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert tracker.violations == []
+
+
+def test_three_lock_cycle_is_detected():
+    tracker = LockOrderTracker()
+    a, b, c = (tracker.wrap(name=n) for n in "ABC")
+    with a:
+        with b:
+            pass
+    with b:
+        with c:
+            pass
+    with c:
+        with a:
+            pass           # closes A -> B -> C -> A
+    assert len(tracker.violations) == 1
+    assert "inversion" in tracker.violations[0]
+
+
+def test_self_deadlock_fails_fast():
+    tracker = LockOrderTracker()
+    a = tracker.wrap(name="A")
+    a.acquire()
+    with pytest.raises(RuntimeError, match="self-deadlock"):
+        a.acquire()
+    assert any("self-deadlock" in v for v in tracker.violations)
+    a.release()
+
+
+def test_reentrant_reacquire_is_allowed():
+    tracker = LockOrderTracker()
+    r = tracker.wrap(name="R", reentrant=True)
+    with r:
+        with r:
+            pass
+    assert tracker.violations == []
+
+
+def test_install_wraps_only_matching_modules():
+    tracker = LockOrderTracker()
+    tracker.install(module_prefixes=("tests.", "test_"))
+    try:
+        ours = threading.Lock()          # created from this test module
+    finally:
+        tracker.uninstall()
+    assert isinstance(ours, TrackedLock)
+    assert not isinstance(threading.Lock(), TrackedLock)   # uninstalled
+    # default prefixes leave test-module locks native
+    tracker2 = LockOrderTracker()
+    tracker2.install()
+    try:
+        native = threading.Lock()
+    finally:
+        tracker2.uninstall()
+    assert not isinstance(native, TrackedLock)
+
+
+def test_install_detects_inversion_through_threading_api():
+    tracker = LockOrderTracker()
+    tracker.install(module_prefixes=("tests.", "test_"))
+    try:
+        a = threading.Lock()
+        b = threading.Lock()
+    finally:
+        tracker.uninstall()
+    with a, b:
+        pass
+    with b, a:
+        pass
+    assert len(tracker.violations) == 1
+
+
+def test_persistent_log_runs_clean_under_tracker(tmp_path):
+    """End-to-end: the write-back thread + append path (Condition over a
+    tracked Lock, _meta_lock/_queue_cv nesting) produce no violations."""
+    tracker = LockOrderTracker()
+    tracker.install()
+    try:
+        log = PersistentLog(str(tmp_path / "wal.log"))
+        for i in range(8):
+            log.append(f"k{i % 3}", f"payload-{i}".encode())
+        log.close()
+    finally:
+        tracker.uninstall()
+    assert tracker.violations == []
+
+
+# --------------------------------------------------------------------------
+# sync-site sanitizer
+# --------------------------------------------------------------------------
+
+def _fastpath_fn(module_name, fn_name):
+    """A function whose frame claims to live in ``module_name``."""
+    ns = {"__name__": module_name, "jax": jax}
+    exec(f"def {fn_name}(arr):\n    return jax.device_get(arr)", ns)
+    return ns[fn_name]
+
+
+def test_device_get_from_wrong_fastpath_site_is_flagged():
+    san = SyncSiteSanitizer()
+    san.install()
+    try:
+        _fastpath_fn("repro.serving.scheduler", "_peek")(jnp.zeros((2,)))
+    finally:
+        san.uninstall()
+    assert len(san.violations) == 1
+    assert "repro.serving.scheduler::_peek" in san.violations[0]
+
+
+def test_device_get_from_the_sync_site_is_allowed():
+    san = SyncSiteSanitizer()
+    san.install()
+    try:
+        _fastpath_fn("repro.serving.engine", "_to_host")(jnp.zeros((2,)))
+    finally:
+        san.uninstall()
+    assert san.violations == []
+
+
+def test_device_get_outside_fastpath_is_allowed():
+    san = SyncSiteSanitizer()
+    san.install()
+    try:
+        jax.device_get(jnp.zeros((2,)))             # test code: fine
+        _fastpath_fn("repro.training.loop", "pull")(jnp.zeros((2,)))
+    finally:
+        san.uninstall()
+    assert san.violations == []

@@ -4,7 +4,7 @@
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench bench-smoke serve-example
+.PHONY: test lint bench bench-smoke chaos-smoke check-trajectory serve-example
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -23,6 +23,21 @@ bench:
 bench-smoke:
 	BENCH_SMOKE=1 PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
 		--only serve_prefix_reuse,serve_mixed_tick,serve_speculative,serve_multi_model
+
+# exactly what CI's chaos-smoke job runs: a seeded fault schedule (replica
+# crash + KV migration, transient submit errors, slow ticks) over the
+# serving path, asserting zero stranded requests and structured errors only
+chaos-smoke:
+	BENCH_SMOKE=1 PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+		--only serve_chaos
+
+# diff the freshly produced BENCH_serve.json against BASELINE (default: the
+# last committed copy, via `git show`); fails on p99 regressions beyond the
+# noise band
+check-trajectory:
+	git show HEAD:BENCH_serve.json > /tmp/BENCH_serve.baseline.json
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.check_trajectory \
+		/tmp/BENCH_serve.baseline.json BENCH_serve.json $(if $(BAND),--band $(BAND))
 
 serve-example:
 	PYTHONPATH=$(PYTHONPATH) python examples/serve_cluster.py

@@ -1,0 +1,109 @@
+"""Perf-trajectory gate: diff a fresh BENCH_serve.json against the last
+committed run and fail on p99 regressions beyond a noise band.
+
+The committed BENCH_serve.json is the recorded trajectory of the serving
+fast path; this script is the first step toward continuous perf-regression
+tracking (ROADMAP): CI copies the committed file aside, reruns the smoke
+benchmarks, then diffs.
+
+Comparison rules:
+
+- only fields named ``*_p99_us`` / ``*_p99_s`` are gated (tail latency is
+  the contract; means and p50s wobble too much on shared runners);
+- a current value worse than ``band`` × baseline fails (the band absorbs
+  runner noise and smoke-vs-full config drift — pass ``--band`` to tune);
+- fields present on only one side are SKIPPED, not failed: new benchmarks
+  add fields, old ones retire them, and a missing baseline is not a
+  regression;
+- non-finite values (NaN from an empty percentile pool) are skipped.
+
+Exit status: 0 clean / field skipped, 1 on any regression beyond the band.
+
+Usage: python -m benchmarks.check_trajectory BASELINE.json CURRENT.json
+       [--band 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def _p99_fields(tree: dict, prefix: str = "") -> dict[str, float]:
+    """Flatten ``tree`` to {dotted.path: value} keeping only finite p99s."""
+    out: dict[str, float] = {}
+    for key, val in tree.items():
+        path = f"{prefix}.{key}" if prefix else key
+        if isinstance(val, dict):
+            out.update(_p99_fields(val, path))
+        elif isinstance(val, list):
+            for i, item in enumerate(val):     # e.g. per-turn rows
+                if isinstance(item, dict):
+                    out.update(_p99_fields(item, f"{path}[{i}]"))
+        elif (isinstance(val, (int, float))
+              and (key.endswith("_p99_us") or key.endswith("_p99_s"))
+              and math.isfinite(val)):
+            out[path] = float(val)
+    return out
+
+
+def compare(baseline: dict, current: dict, band: float
+            ) -> tuple[list[str], list[str]]:
+    """Returns (regressions, report_lines)."""
+    base = _p99_fields(baseline)
+    cur = _p99_fields(current)
+    regressions: list[str] = []
+    lines: list[str] = []
+    for path in sorted(base):
+        if path not in cur:
+            lines.append(f"  skip  {path} (not in current run)")
+            continue
+        b, c = base[path], cur[path]
+        ratio = c / b if b > 0 else float("inf") if c > 0 else 1.0
+        verdict = "ok" if ratio <= band else "REGRESSION"
+        lines.append(f"  {verdict:>10}  {path}: {b:.1f} -> {c:.1f} "
+                     f"({ratio:.2f}x, band {band:.2f}x)")
+        if ratio > band:
+            regressions.append(path)
+    for path in sorted(set(cur) - set(base)):
+        lines.append(f"  new   {path} = {cur[path]:.1f} (no baseline)")
+    return regressions, lines
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="check_trajectory",
+        description="fail on serving p99 regressions vs a committed run")
+    ap.add_argument("baseline", help="committed BENCH_serve.json")
+    ap.add_argument("current", help="freshly produced BENCH_serve.json")
+    ap.add_argument("--band", type=float, default=2.0,
+                    help="allowed ratio current/baseline before failing "
+                         "(default 2.0: smoke runs on shared runners are "
+                         "noisy; tighten for dedicated hardware)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as exc:
+        print(f"# no usable baseline ({exc}); nothing to gate")
+        return 0
+    with open(args.current) as f:
+        current = json.load(f)
+
+    regressions, lines = compare(baseline, current, args.band)
+    print(f"# perf trajectory: {args.current} vs {args.baseline}")
+    for line in lines:
+        print(line)
+    if regressions:
+        print(f"check_trajectory: {len(regressions)} p99 regression(s) "
+              f"beyond the {args.band:.2f}x band: "
+              f"{', '.join(regressions)}", file=sys.stderr)
+        return 1
+    print("check_trajectory: within band")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,6 +35,7 @@ def main() -> None:
         ("serve_mixed_tick", serve.bench_serve_mixed_tick),
         ("serve_speculative", serve.bench_serve_speculative),
         ("serve_multi_model", serve.bench_serve_multi_model),
+        ("serve_chaos", serve.bench_serve_chaos),
         ("roofline_table", lambda out: roofline.table(out)),
     ]
 

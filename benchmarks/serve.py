@@ -84,7 +84,7 @@ def _write_results(key: str, results: dict, out) -> None:
             data = {}
     if not all(isinstance(v, dict) and ("turns" in v or "chunked" in v
                                         or "total" in v or "route" in v
-                                        or "baseline" in v)
+                                        or "baseline" in v or "faults" in v)
                for v in data.values()):
         data = {}                     # pre-PR3 flat schema: start fresh
     data[key] = results
@@ -537,4 +537,102 @@ def bench_serve_multi_model(out) -> dict:
     out("serve_multi_model/CLAIM overload-sheds-or-redirects,PASS,exact")
     out("serve_multi_model/CLAIM shed-fails-over-never-drops,PASS,exact")
     _write_results("serve_multi_model", results, out)
+    return results
+
+
+def bench_serve_chaos(out) -> dict:
+    """Chaos smoke: a SEEDED fault schedule (replica crash with KV
+    migration, transient submit errors, slow ticks) over a cascade-style
+    serve setup.  The claim is availability, not speed: every request
+    reaches a terminal state — a served result or a structured error —
+    with zero stranded requests, and the drain resolves rather than
+    timing out.  Failover counters and post-fault latency land in
+    BENCH_serve.json so degraded-mode tails are tracked across PRs."""
+    from repro.models import init_params
+    from repro.models.config import ModelConfig
+    from repro.serving.cluster import ServeNode
+    from repro.serving.faults import FaultInjector, FaultKind, FaultSpec
+
+    smoke = _smoke()
+    cfg = ModelConfig(name="light", family="dense", n_layers=2,
+                      d_model=32 if smoke else 64, n_heads=4, n_kv_heads=2,
+                      d_ff=64 if smoke else 128, vocab_size=256,
+                      dtype="float32", q_chunk=16)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    S = 12 if smoke else 24
+    max_new = 4 if smoke else 8
+    n_requests = 12 if smoke else 48
+    prompt = lambda: rng.integers(0, 256, (S,)).astype(np.int32)
+    results: dict = {}
+
+    injector = FaultInjector([
+        # one replica dies at a seeded tick; its sessions migrate (KV
+        # spill/restore) or replay onto the sibling
+        FaultSpec(FaultKind.CRASH, deployment="light", at_tick=-8,
+                  kv_recoverable=True),
+        # a couple of transient submit failures bounce to the retry path
+        FaultSpec(FaultKind.SUBMIT_ERROR, deployment="light", count=2),
+        # and some slow ticks stretch the tail without tripping the watchdog
+        FaultSpec(FaultKind.SLOW_TICK, deployment="light", at_tick=2,
+                  count=3, duration_s=0.002),
+    ], seed=1234)
+
+    with ServeNode(n_workers=2) as node:
+        dep = node.deploy("light", cfg, params, n_replicas=2, n_slots=4,
+                          max_len=96, watchdog_s=1.0)
+        # warm the mixed program out of the measurement
+        t0 = time.monotonic()
+        dep.submit("warm", "w0", prompt(), max_new_tokens=2)
+        node.run_until_drained()
+        results["compile_s"] = time.monotonic() - t0
+
+        node.install_faults(injector)
+        rids = [f"r{i}" for i in range(n_requests)]
+        t0 = time.monotonic()
+        for i, rid in enumerate(rids):
+            dep.submit(f"s{i % 4}", rid, prompt(), max_new_tokens=max_new)
+            if i % 3 == 2:
+                node.step()
+        node.run_until_drained()
+        wall_s = time.monotonic() - t0
+
+        st = dep.stats()
+        stranded = [rid for rid in rids if dep.result(rid) is None]
+        assert not stranded, f"stranded requests under chaos: {stranded}"
+        errored = sum(1 for rid in rids if dep.error(rid) is not None)
+        for rid in rids:
+            err = dep.error(rid)
+            if err is None:
+                assert len(dep.result(rid)) == max_new
+            else:
+                assert isinstance(err, dict) and "error" in err, \
+                    f"unstructured failure for {rid}: {err!r}"
+        assert any(e.startswith("crash:") for e in injector.fired_log), \
+            "seeded crash never fired"
+        assert st["failovers"] >= 1, "crash did not mark the replica down"
+
+        results["faults"] = {
+            "failovers": st["failovers"],
+            "rehomed": st["rehomed"], "migrated": st["migrated"],
+            "replayed": st["replayed"],
+            "failover_failed": st["failover_failed"],
+            "submit_retries": st["submit_retries"],
+            "spill_syncs": st["spill_syncs"],
+            "fired": list(injector.fired_log),
+        }
+        results["total"] = {
+            "requests": n_requests, "errored": errored, "wall_s": wall_s,
+            "ttft_p99_us": st["ttft_p99_s"] * 1e6,
+            "tpot_p99_us": st["tpot_p99_s"] * 1e6,
+        }
+        out(f"serve_chaos/failover,{st['failovers']},"
+            f"rehomed={st['rehomed']} migrated={st['migrated']} "
+            f"replayed={st['replayed']} retries={st['submit_retries']}")
+        out(f"serve_chaos/total,{wall_s*1e6/n_requests:.1f},"
+            f"requests={n_requests} errored={errored} "
+            f"ttft_p99_us={results['total']['ttft_p99_us']:.1f}")
+    out("serve_chaos/CLAIM zero-stranded-requests-under-chaos,PASS,exact")
+    out("serve_chaos/CLAIM structured-errors-only,PASS,exact")
+    _write_results("serve_chaos", results, out)
     return results

@@ -79,6 +79,11 @@ class UpcallThreadPool:
         # events rather than every tenant's traffic on the shared worker.
         self._depths = [0] * n_threads
         self._handle_depths: dict[str, int] = {}
+        # lambda exceptions per queue: the upcall thread CONTAINS a raising
+        # lambda (the error rides on the event for any waiter; the thread
+        # keeps serving), and this counts the containments so operators can
+        # see a poisoned lambda instead of silently losing its events.
+        self._errors = [0] * n_threads
         self._depth_lock = threading.Lock()
         self._threads = [
             threading.Thread(target=self._loop, args=(q, i), daemon=True, name=f"{name}-{i}")
@@ -102,6 +107,8 @@ class UpcallThreadPool:
                 ev.error = e
             ev.done_ns = monotonic_ns()
             with self._depth_lock:
+                if ev.error is not None:
+                    self._errors[idx] += 1
                 self._depths[idx] -= 1
                 name = ev.handle.name
                 left = self._handle_depths.get(name, 0) - 1
@@ -134,6 +141,11 @@ class UpcallThreadPool:
         """Outstanding events for ONE lambda handle (by name)."""
         with self._depth_lock:
             return self._handle_depths.get(handle_name, 0)
+
+    def errors(self) -> list[int]:
+        """Contained lambda exceptions per queue."""
+        with self._depth_lock:
+            return list(self._errors)
 
     def stop(self) -> None:
         for q in self.queues:
@@ -175,6 +187,19 @@ class Dispatcher:
         if handle_name is not None:
             return self._pool.depth_for(handle_name)
         return self._pool.depth()
+
+    def stats(self) -> dict[str, Any]:
+        """Dispatch/containment counters: ``dispatched`` events total,
+        ``upcall_errors`` (lambda exceptions the pool contained — the event
+        carries the error, the thread survives) and their per-queue split."""
+        errors = self._pool.errors()
+        with self._lock:
+            dispatched = self.dispatched
+        return {
+            "dispatched": dispatched,
+            "upcall_errors": sum(errors),
+            "upcall_errors_per_queue": errors,
+        }
 
     def dispatch(self, obj: CascadeObject) -> list[UpcallEvent]:
         """One incoming object may match multiple prefixes → multiple events.

@@ -133,6 +133,11 @@ class CascadeStore:
         self._versions: dict[tuple[str, int], int] = {}
         self._rr = RoundRobin()
         self._meta_lock = threading.Lock()
+        # fault-injection seam (serving.faults.FaultInjector.store_hook):
+        # called with the key at trigger_put ENTRY; a raising hook models a
+        # transient send failure the CALLER retries (nothing was counted,
+        # nothing dispatched).  None in production.
+        self.fault_hook = None
 
     # -- pool management -----------------------------------------------------
     def create_pool(self, spec: PoolSpec, worker_ids: list[int] | None = None) -> PoolSpec:
@@ -208,6 +213,8 @@ class CascadeStore:
         pool's key hash so same-key (or, with ``affinity_shard_hash``,
         same-session) objects always land on the same node, in order.
         """
+        if self.fault_hook is not None:
+            self.fault_hook(key)
         spec, members = self._route(key)
         if not spec.can_write(principal):
             raise PermissionError(f"{principal!r} cannot write {spec.path}")

@@ -76,6 +76,7 @@ from repro.models import supports_paged
 from repro.models.config import ModelConfig
 
 from .engine import ServeEngine
+from .faults import InjectedFault, ReplicaCrashed
 from .scheduler import Request, Scheduler
 
 # key = /serve/<model>/req/<session>/<request_id> → 5 components; hashing the
@@ -100,7 +101,9 @@ class ModelDeployment:
                  paged: bool | None, block_size: int,
                  num_blocks: int | None, prefix_cache: bool,
                  token_budget: int | None, watermark: int | None,
-                 seed_base: int, spec_k: int = 0) -> None:
+                 seed_base: int, spec_k: int = 0,
+                 watchdog_s: float | None = None, retry_budget: int = 2,
+                 retry_backoff_s: float = 0.002) -> None:
         if n_replicas > len(node.workers):
             raise ValueError(
                 f"deployment {name!r} wants {n_replicas} replicas but the "
@@ -172,6 +175,24 @@ class ModelDeployment:
         self.redirected = 0      # over-watermark arrivals moved to a sibling
         self.listener_errors = 0  # on_done callbacks that raised (and were
         #                           contained so the completion still landed)
+        # ------------------------------------------------- fault tolerance
+        # ``down`` maps replica → reason; mark_down (driver thread only)
+        # populates it and evacuates.  ``_progress`` backs the per-replica
+        # tick watchdog: (stats snapshot, last time it changed) — a BUSY
+        # replica whose snapshot freezes for > watchdog_s is wedged (an
+        # un-stalled busy engine always advances ticks or prefill tokens).
+        self.watchdog_s = watchdog_s
+        self.retry_budget = retry_budget
+        self.retry_backoff_s = retry_backoff_s
+        self.down: dict[int, str] = {}
+        self.failovers = 0        # replicas marked down
+        self.rehomed = 0          # requests moved off a dead replica
+        self.migrated = 0         # ... with their KV spilled + restored
+        self.replayed = 0         # ... by folding emissions into the prompt
+        self.failover_failed = 0  # ... completed with a replica_failed error
+        self.submit_retries = 0   # submits retried on a sibling / backoff
+        self._progress: list[tuple[tuple, float]] = [
+            ((0, 0, 0), time.monotonic()) for _ in range(n_replicas)]
         # completion listeners (e.g. a CascadeRoute's gate); fired BEFORE the
         # response is put so an escalation's submit is counted before this
         # request's completion — the node can never observe a false drain.
@@ -206,7 +227,7 @@ class ModelDeployment:
         put a mutex on the fast path instead."""
         best, best_depth = None, None
         for r in range(len(self.engines)):
-            if r == replica:
+            if r == replica or r in self.down or self.engines[r].crashed:
                 continue
             d = self.queue_depth(r)
             if d < self.watermark and (best is None or d < best_depth):
@@ -223,6 +244,155 @@ class ModelDeployment:
             self.shed += 1
         self._complete_request(req)
 
+    # ------------------------------------------------- replica health
+    def install_faults(self, injector) -> None:
+        """Bind a ``serving.faults.FaultInjector`` to every replica's
+        engine seams (tick + submit)."""
+        for r, eng in enumerate(self.engines):
+            eng.faults = injector.bind(self.name, r)
+
+    def is_down(self, replica: int) -> bool:
+        return replica in self.down
+
+    def _failover_target(self, exclude: set[int] | tuple = ()) -> int | None:
+        """Least-loaded HEALTHY replica (down/crashed/excluded skipped).
+        No watermark here: completing an already-admitted request beats
+        boundedness — shedding work the client was promised would turn a
+        replica fault into an availability fault."""
+        cands = [r for r in range(len(self.engines))
+                 if r not in self.down and not self.engines[r].crashed
+                 and r not in exclude]
+        if not cands:
+            return None
+        return min(cands, key=self.queue_depth)
+
+    def mark_down(self, replica: int, reason: str) -> None:
+        """Take a dead/wedged replica out of service and re-home every
+        request it holds.  DRIVER THREAD ONLY (it touches engine slot
+        state); idempotent.  Order matters: the down-flag and the engine's
+        ``crashed`` bit are set BEFORE evacuation so a submit racing this
+        mark-down raises ``ReplicaCrashed`` and retries on a sibling
+        instead of landing in the drained queue (``sweep_down`` catches
+        the residual window)."""
+        with self._lock:
+            if replica in self.down:
+                return
+            self.down[replica] = reason
+            self.failovers += 1
+        eng = self.engines[replica]
+        eng.crashed = True
+        spill = eng.paged and eng.kv_recoverable
+        try:
+            queued, inflight = eng.evacuate(spill_kv=spill)
+        except Exception:
+            queued, inflight = [], []
+        for req in queued:
+            self._re_home(req, None)
+        for req, spilled in inflight:
+            self._re_home(req, spilled)
+
+    def sweep_down(self) -> None:
+        """Driver-thread sweep: re-home any request that slipped into a
+        down replica's queue between the submit-side ``crashed`` check and
+        the evacuation drain (the mark-down race's residual window)."""
+        for r in list(self.down):
+            eng = self.engines[r]
+            if eng.idle():
+                continue
+            try:
+                queued, inflight = eng.evacuate(spill_kv=False)
+            except Exception:
+                continue
+            for req in queued:
+                self._re_home(req, None)
+            for req, spilled in inflight:
+                self._re_home(req, spilled)
+
+    def check_watchdog(self, now: float | None = None) -> None:
+        """Per-replica tick watchdog (driver thread): a BUSY replica whose
+        progress snapshot hasn't changed within ``watchdog_s`` is wedged —
+        a healthy busy engine always advances ticks, prefill tokens, or
+        output tokens every driver pass — and is marked down."""
+        if self.watchdog_s is None:
+            return
+        now = time.monotonic() if now is None else now
+        for r, eng in enumerate(self.engines):
+            if r in self.down:
+                continue
+            snap = (eng.stats.ticks, eng.stats.prefill_tokens,
+                    eng.stats.tokens_out)
+            last, since = self._progress[r]
+            if eng.idle() or snap != last:
+                self._progress[r] = (snap, now)
+            elif now - since > self.watchdog_s:
+                self.mark_down(r, "stalled")
+
+    def _fold_for_replay(self, req: Request) -> bool:
+        """Fold the not-yet-folded emissions into the prompt so a sibling's
+        replay PREFILLS them and decode resumes the stream exactly (greedy
+        decoding stays bit-identical to the uninterrupted run).  False for
+        embeds prompts with emissions — tokens can't concatenate onto an
+        embedding matrix, so those sessions can't be replayed."""
+        new = req.tokens[req.replay_offset:]
+        if not new:
+            return True
+        p = np.asarray(req.prompt)
+        if not np.issubdtype(p.dtype, np.integer):
+            return False
+        req.prompt = np.concatenate([p, np.asarray(new, p.dtype)])
+        req.replay_offset = len(req.tokens)
+        return True
+
+    def _re_home(self, req: Request, spilled) -> None:
+        """Move one evacuated request to a healthy sibling: KV migration
+        (adopt the spilled blocks) when possible, replay otherwise; every
+        path terminates — no sibling or no replay means a structured
+        ``replica_failed`` completion, never a stranded request."""
+        tried: set[int] = set()
+        while True:
+            target = self._failover_target(tried)
+            if target is None:
+                self._fail_request(req, "no healthy sibling to re-home onto")
+                return
+            eng = self.engines[target]
+            if spilled is not None and not req.expired() \
+                    and eng.adopt(req, spilled):
+                with self._lock:
+                    self.rehomed += 1
+                    self.migrated += 1
+                    self.routed[req.request_id] = target
+                return
+            replay = bool(req.tokens)
+            if not self._fold_for_replay(req):
+                self._fail_request(
+                    req, "session not replayable (embeds prompt) and its "
+                         "KV was unrecoverable")
+                return
+            try:
+                eng.submit(req)
+            except (ReplicaCrashed, InjectedFault):
+                tried.add(target)
+                with self._lock:
+                    self.submit_retries += 1
+                continue
+            with self._lock:
+                self.rehomed += 1
+                if replay:
+                    self.replayed += 1
+                self.routed[req.request_id] = target
+            return
+
+    def _fail_request(self, req: Request, reason: str) -> None:
+        """Terminal structured error for a request a fault orphaned: the
+        client sees WHY (and keeps any partial tokens) instead of a result
+        that never arrives."""
+        req.error = {"error": "replica_failed", "deployment": self.name,
+                     "reason": reason, "request_id": req.request_id,
+                     "generated": len(req.tokens)}
+        with self._lock:
+            self.failover_failed += 1
+        self._complete_request(req)
+
     # ------------------------------------------------------------- lambdas
     def _on_request(self, replica: int, obj: CascadeObject, _event) -> str:
         """The serving lambda: runs on the replica worker's upcall thread.
@@ -234,24 +404,60 @@ class ModelDeployment:
         req = Request(request_id=request_id, session_key=session,
                       prompt=payload["prompt"],
                       max_new_tokens=int(payload.get("max_new_tokens", 16)),
-                      draft_tokens=payload.get("draft"))
+                      draft_tokens=payload.get("draft"),
+                      deadline_s=payload.get("deadline_s"))
+        if "t0" in payload:
+            # deadline budgets are measured from CLIENT submit time, not
+            # from when the upcall got scheduled
+            req.arrived_s = payload["t0"]
         target = replica
+        if target in self.down or self.engines[target].crashed:
+            # arrival aimed at a dead replica (FIFO affinity outlives the
+            # replica): re-target to the least-loaded healthy sibling
+            t = self._failover_target()
+            if t is None:
+                self._fail_request(req, self.down.get(target, "crashed"))
+                return request_id
+            target = t
         if self.watermark is not None:
             # minus one: this very event still counts in the worker's
             # outstanding-upcall depth while we are running it
-            depth = self.queue_depth(replica) - 1
+            depth = self.queue_depth(target) - 1
             if depth >= self.watermark:
-                target = self._least_loaded_sibling(replica)
-                if target is None:
-                    self._shed(req, replica, depth)
+                sibling = self._least_loaded_sibling(target)
+                if sibling is None:
+                    self._shed(req, target, depth)
                     return request_id
+                target = sibling
                 with self._lock:
                     self.redirected += 1
-        with self._lock:
-            self.routed[request_id] = target
-            while len(self.routed) > self._routed_cap:
-                self.routed.pop(next(iter(self.routed)))
-        self.engines[target].submit(req)
+        # Bounded retry with capped exponential backoff: a transient
+        # injected/real submit failure (or a replica crashing between the
+        # health check above and the enqueue) moves the request to the next
+        # healthy sibling; exhaustion terminates with a structured error —
+        # admission never strands a request.
+        tried: set[int] = set()
+        delay = self.retry_backoff_s
+        for _ in range(self.retry_budget + 1):
+            try:
+                self.engines[target].submit(req)
+            except (ReplicaCrashed, InjectedFault):
+                tried.add(target)
+                with self._lock:
+                    self.submit_retries += 1
+                nxt = self._failover_target(tried)
+                if nxt is None:
+                    break
+                target = nxt
+                time.sleep(delay)
+                delay = min(delay * 2, 0.05)
+                continue
+            with self._lock:
+                self.routed[request_id] = target
+                while len(self.routed) > self._routed_cap:
+                    self.routed.pop(next(iter(self.routed)))
+            return request_id
+        self._fail_request(req, "no healthy replica accepted the submit")
         return request_id
 
     def _on_engine_complete(self, req: Request) -> None:
@@ -286,23 +492,46 @@ class ModelDeployment:
 
     # ------------------------------------------------------------- clients
     def submit(self, session_key: str, request_id: str, prompt: Any, *,
-               max_new_tokens: int = 16, draft_tokens: Any = None):
+               max_new_tokens: int = 16, draft_tokens: Any = None,
+               deadline_s: float | None = None):
         """Fire a request into the fast path (trigger_put; nothing stored).
         ``draft_tokens`` rides in the payload for speculative deployments
         (``spec_k > 0``): token i is a guess for generated token i — this is
         how a cascade plants the light model's generation as the heavy
-        model's draft."""
+        model's draft.  ``deadline_s`` is the request's latency budget from
+        THIS call; transient store-seam failures retry with capped
+        exponential backoff, and exhaustion completes the request with a
+        structured error rather than raising after it was counted."""
         if self._stopped:
             raise RuntimeError(f"deployment {self.name!r} is stopped")
         key = f"{self.req_prefix}/{session_key}/{request_id}"
         with self._lock:
             self.submitted += 1
         self.node._note_submitted()
+        t0 = time.monotonic()
         payload = {"prompt": np.asarray(prompt),
-                   "max_new_tokens": max_new_tokens}
+                   "max_new_tokens": max_new_tokens, "t0": t0}
         if draft_tokens is not None:
             payload["draft"] = np.asarray(draft_tokens, np.int32)
-        return self.node.store.trigger_put(key, payload)
+        if deadline_s is not None:
+            payload["deadline_s"] = float(deadline_s)
+        delay = self.retry_backoff_s
+        for attempt in range(self.retry_budget + 1):
+            try:
+                return self.node.store.trigger_put(key, payload)
+            except InjectedFault:
+                with self._lock:
+                    self.submit_retries += 1
+                if attempt == self.retry_budget:
+                    break
+                time.sleep(delay)
+                delay = min(delay * 2, 0.05)
+        req = Request(request_id=request_id, session_key=session_key,
+                      prompt=payload["prompt"],
+                      max_new_tokens=max_new_tokens, deadline_s=deadline_s,
+                      arrived_s=t0)
+        self._fail_request(req, "store submit failed after retries")
+        return None
 
     def result(self, request_id: str) -> np.ndarray | None:
         if self._stopped:
@@ -334,6 +563,13 @@ class ModelDeployment:
             shed, redirected = self.shed, self.redirected
             submitted, completed = self.submitted, self.completed
             listener_errors = self.listener_errors
+            fault = {"down": dict(self.down),
+                     "failovers": self.failovers,
+                     "rehomed": self.rehomed,
+                     "migrated": self.migrated,
+                     "replayed": self.replayed,
+                     "failover_failed": self.failover_failed,
+                     "submit_retries": self.submit_retries}
         drafted = sum(e.stats.spec_drafted for e in self.engines)
         accepted = sum(e.stats.spec_accepted for e in self.engines)
         return {
@@ -370,6 +606,15 @@ class ModelDeployment:
                                     for e in self.engines),
             "spec_acceptance_rate": (accepted / drafted if drafted
                                      else float("nan")),
+            # fault tolerance: replica health + failover + deadlines
+            **fault,
+            "deadline_exceeded": sum(e.stats.deadline_exceeded
+                                     for e in self.engines),
+            "spill_syncs": sum(e.stats.spill_syncs for e in self.engines),
+            "spilled_sessions": sum(e.stats.spilled_sessions
+                                    for e in self.engines),
+            "adopted_sessions": sum(e.stats.adopted_sessions
+                                    for e in self.engines),
             "ttft_p50_s": pct(ttft, 0.50), "ttft_p99_s": pct(ttft, 0.99),
             "tpot_p50_s": pct(tpot, 0.50), "tpot_p99_s": pct(tpot, 0.99),
         }
@@ -436,11 +681,17 @@ class ServeNode:
                block_size: int = 16, num_blocks: int | None = None,
                prefix_cache: bool = True, token_budget: int | None = None,
                watermark: int | None = None,
-               spec_k: int = 0) -> ModelDeployment:
+               spec_k: int = 0, watchdog_s: float | None = None,
+               retry_budget: int = 2,
+               retry_backoff_s: float = 0.002) -> ModelDeployment:
         """Host ``cfg`` under ``/serve/<name>``; see ``ModelDeployment``.
         ``watermark`` bounds each replica's queue depth (None = unbounded).
         ``spec_k`` > 0 enables speculative decoding on paged engines: up to
         that many draft tokens verified per decode row per tick.
+        ``watchdog_s`` arms the per-replica tick watchdog (None = off): a
+        busy replica with no tick progress within the bound is marked down
+        and its sessions re-home to siblings.  ``retry_budget`` /
+        ``retry_backoff_s`` bound the transient-submit retry loop.
         """
         if name in self.deployments:
             raise ValueError(f"deployment {name!r} already exists")
@@ -452,12 +703,23 @@ class ServeNode:
             max_len=max_len, policy=policy, temperature=temperature,
             paged=paged, block_size=block_size, num_blocks=num_blocks,
             prefix_cache=prefix_cache, token_budget=token_budget,
-            watermark=watermark, seed_base=seed_base, spec_k=spec_k)
+            watermark=watermark, seed_base=seed_base, spec_k=spec_k,
+            watchdog_s=watchdog_s, retry_budget=retry_budget,
+            retry_backoff_s=retry_backoff_s)
         self.deployments[name] = dep
         return dep
 
     def deployment(self, name: str) -> ModelDeployment:
         return self.deployments[name]
+
+    def install_faults(self, injector) -> None:
+        """Install a ``serving.faults.FaultInjector`` at every seam: each
+        deployed replica's tick/submit hooks plus the store's trigger_put
+        hook.  Deploy first, then install (new deployments are not bound
+        retroactively)."""
+        for dep in self.deployments.values():
+            dep.install_faults(injector)
+        self.store.fault_hook = injector.store_hook()
 
     def undeploy(self, name: str) -> None:
         self.deployments[name].stop()
@@ -477,19 +739,38 @@ class ServeNode:
 
     def step(self) -> int:
         """Tick every busy engine across all deployments once; returns how
-        many engines were busy."""
+        many engines were busy.  Replica health runs here too: a crash
+        (raised from the tick seam, or flagged from a submit-side fault)
+        marks the replica down and re-homes its sessions; the per-replica
+        watchdog catches wedged-but-not-crashed replicas; the down-sweep
+        re-homes stragglers that raced into a dead replica's queue — so
+        ``run_until_drained`` RESOLVES (every request reaches a terminal
+        state) when a replica dies mid-drain, instead of timing out."""
         busy = 0
         for dep in list(self.deployments.values()):
-            for eng in dep.engines:
+            for r, eng in enumerate(dep.engines):
+                if dep.is_down(r):
+                    continue
+                if eng.crashed:
+                    dep.mark_down(r, "crashed")
+                    continue
                 if not eng.idle():
-                    eng.tick()
+                    try:
+                        eng.tick()
+                    except ReplicaCrashed:
+                        dep.mark_down(r, "crashed")
+                        continue
                     busy += 1
+            dep.check_watchdog()
+            dep.sweep_down()
         return busy
 
     def _busy_report(self) -> str:
         """Name who is still holding the drain up (for TimeoutError)."""
         parts = []
         for dep in list(self.deployments.values()):
+            if dep.down:
+                parts.append(f"{dep.name}: down={dep.down}")
             for r, eng in enumerate(dep.engines):
                 if not eng.idle():
                     parts.append(
@@ -613,7 +894,8 @@ class CascadeRoute:
         self.escalate_on_error = escalate_on_error
         self.draft_from_light = draft_from_light
         self._lock = threading.Lock()
-        self._pending: dict[str, tuple[str, np.ndarray, int]] = {}
+        self._pending: dict[str, tuple[str, np.ndarray, int,
+                                       float | None, float]] = {}
         # bounded like ModelDeployment.routed: a long-running route must not
         # grow per-request state forever (insertion-order eviction)
         self._escalated: dict[str, None] = {}
@@ -621,24 +903,31 @@ class CascadeRoute:
         self.requests = 0
         self.gate_trips = 0       # escalations decided by the gate
         self.error_failovers = 0  # escalations because light refused
+        self.deadline_skips = 0   # escalations skipped: no budget left
+        self.escalation_failures = 0  # heavy submits that failed after
+        #                               retries (the light answer stands)
         light.on_done.append(self._on_light_done)
 
     # ------------------------------------------------------------- clients
     def submit(self, session_key: str, request_id: str, prompt: Any, *,
-               max_new_tokens: int = 16):
+               max_new_tokens: int = 16, deadline_s: float | None = None):
         p = np.asarray(prompt)
         # record BEFORE submitting (the completion listener may fire before
         # submit returns), and roll back if the submit never happened — a
         # failed submit must not skew escalation_rate or leak the entry
         # (every request that does enter the light deployment completes —
         # served, rejected, or shed — so _pending is otherwise bounded by
-        # what is in flight).
+        # what is in flight).  ``deadline_s`` is the END-TO-END budget from
+        # this call: the heavy tier gets whatever remains after light.
+        t0 = time.monotonic()
         with self._lock:
             self.requests += 1
-            self._pending[request_id] = (session_key, p, max_new_tokens)
+            self._pending[request_id] = (session_key, p, max_new_tokens,
+                                         deadline_s, t0)
         try:
             return self.light.submit(session_key, request_id, p,
-                                     max_new_tokens=max_new_tokens)
+                                     max_new_tokens=max_new_tokens,
+                                     deadline_s=deadline_s)
         except BaseException:
             with self._lock:
                 self.requests -= 1
@@ -680,8 +969,16 @@ class CascadeRoute:
             info = self._pending.pop(req.request_id, None)
         if info is None:
             return                      # not routed through this cascade
-        session, prompt, max_new = info
+        session, prompt, max_new, deadline, t0 = info
         if req.error is not None:
+            # a deadline_exceeded from the light tier is terminal: the
+            # budget is spent, escalating would only burn heavy capacity on
+            # an answer the client has already written off
+            if (isinstance(req.error, dict)
+                    and req.error.get("error") == "deadline_exceeded"):
+                with self._lock:
+                    self.deadline_skips += 1
+                return
             if not self.escalate_on_error:
                 return
             reason = "error_failover"
@@ -689,6 +986,17 @@ class CascadeRoute:
             reason = "gate"
         else:
             return
+        # deadline-aware escalation: the heavy tier only gets what remains
+        # of the END-TO-END budget.  An exhausted budget skips escalation —
+        # the light answer stands (or its error does) rather than queueing
+        # heavy work guaranteed to expire.
+        remaining: float | None = None
+        if deadline is not None:
+            remaining = deadline - (time.monotonic() - t0)
+            if remaining <= 0:
+                with self._lock:
+                    self.deadline_skips += 1
+                return
         # submit FIRST, record after: a failed heavy submit (e.g. stopped
         # deployment) must not leave the request marked escalated — the
         # route would then resolve to a heavy answer that can never come.
@@ -699,8 +1007,27 @@ class CascadeRoute:
         draft = (np.asarray(req.tokens, np.int32)
                  if self.draft_from_light and reason == "gate" and req.tokens
                  else None)
-        self.heavy.submit(session, req.request_id, prompt,
-                          max_new_tokens=max_new, draft_tokens=draft)
+        # bounded retry: a heavy replica crashing at the submit seam (or an
+        # injected transient) must not strand the request — retry briefly,
+        # and on exhaustion let the light answer stand rather than raising
+        # into the completion listener (satellite: heavy-tier crash after a
+        # successful light pass must resolve, never pend forever).  A
+        # submit that the deployment itself contains (returns None after
+        # _fail_request) resolves via the heavy error path.
+        delay = 0.002
+        for attempt in range(3):
+            try:
+                self.heavy.submit(session, req.request_id, prompt,
+                                  max_new_tokens=max_new, draft_tokens=draft,
+                                  deadline_s=remaining)
+                break
+            except (ReplicaCrashed, InjectedFault):
+                if attempt == 2:
+                    with self._lock:
+                        self.escalation_failures += 1
+                    return
+                time.sleep(delay)
+                delay = min(delay * 2, 0.05)
         with self._lock:
             self._escalated[req.request_id] = None
             while len(self._escalated) > self._escalated_cap:
@@ -715,6 +1042,7 @@ class CascadeRoute:
         with self._lock:
             n, trips, fails = self.requests, self.gate_trips, \
                 self.error_failovers
+            skips, esc_fails = self.deadline_skips, self.escalation_failures
         return {
             "light": self.light.name, "heavy": self.heavy.name,
             "metric": self.gate.metric, "threshold": self.gate.threshold,
@@ -722,6 +1050,8 @@ class CascadeRoute:
             "escalated": trips + fails,
             "gate_trips": trips,
             "error_failovers": fails,
+            "deadline_skips": skips,
+            "escalation_failures": esc_fails,
             "escalation_rate": (trips + fails) / n if n else float("nan"),
         }
 
@@ -748,14 +1078,19 @@ class ServeCluster:
                  prefix_cache: bool = True,
                  token_budget: int | None = None,
                  watermark: int | None = None,
-                 spec_k: int = 0) -> None:
+                 spec_k: int = 0,
+                 watchdog_s: float | None = None,
+                 retry_budget: int = 2,
+                 retry_backoff_s: float = 0.002) -> None:
         self.node = ServeNode(n_workers=n_replicas)
         self.dep = self.node.deploy(
             model_name or cfg.name, cfg, params, n_replicas=n_replicas,
             n_slots=n_slots, max_len=max_len, policy=policy,
             temperature=temperature, paged=paged, block_size=block_size,
             num_blocks=num_blocks, prefix_cache=prefix_cache,
-            token_budget=token_budget, watermark=watermark, spec_k=spec_k)
+            token_budget=token_budget, watermark=watermark, spec_k=spec_k,
+            watchdog_s=watchdog_s, retry_budget=retry_budget,
+            retry_backoff_s=retry_backoff_s)
         self.cfg = cfg
         self.policy = policy
 
@@ -794,9 +1129,10 @@ class ServeCluster:
 
     # ------------------------------------------------------------- clients
     def submit(self, session_key: str, request_id: str, prompt: Any, *,
-               max_new_tokens: int = 16):
+               max_new_tokens: int = 16, deadline_s: float | None = None):
         return self.dep.submit(session_key, request_id, prompt,
-                               max_new_tokens=max_new_tokens)
+                               max_new_tokens=max_new_tokens,
+                               deadline_s=deadline_s)
 
     def result(self, request_id: str) -> np.ndarray | None:
         return self.dep.result(request_id)

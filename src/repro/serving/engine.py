@@ -95,7 +95,8 @@ from repro.models import (decode_step, paged_mixed_step, prefill,
 from repro.models.config import ModelConfig
 
 from .draft import DraftSource, default_draft_source
-from .kvcache import CacheManager, PagedCacheManager
+from .faults import ReplicaCrashed
+from .kvcache import CacheManager, PagedCacheManager, SpilledKV
 from .scheduler import Request, Scheduler
 
 
@@ -117,6 +118,15 @@ class EngineStats:
     spec_drafted: int = 0          # draft tokens packed for verification
     spec_accepted: int = 0         # drafts the target confirmed (kept)
     spec_rolled_back: int = 0      # rejected drafts whose KV was rolled back
+    # fault tolerance (serving/faults, deployment failover):
+    deadline_exceeded: int = 0     # requests expired at this replica
+    spill_syncs: int = 0           # device→host KV spills (counted in
+    #                                host_syncs too: a spilled — dead —
+    #                                replica satisfies host_syncs == ticks
+    #                                + spill_syncs; survivors keep the
+    #                                strict host_syncs == ticks)
+    spilled_sessions: int = 0      # live sessions spilled off this replica
+    adopted_sessions: int = 0      # migrated sessions restored INTO this one
     ttft_s: list = field(default_factory=list)     # time to first token
     tpot_s: list = field(default_factory=list)     # time per output token
 
@@ -176,6 +186,15 @@ class ServeEngine:
         self.stats = EngineStats()
         self.live: dict[int, Request] = {}         # slot → decoding request
         self.prefilling: dict[int, Request] = {}   # slot → mid-prompt request
+        # fault-tolerance state (serving/faults + deployment failover):
+        # ``faults`` is an injector seam bound by ModelDeployment
+        # .install_faults; ``crashed`` makes tick/submit raise
+        # ReplicaCrashed (set by an injected crash or the deployment's
+        # mark_down, BEFORE evacuation, so racing submits bounce to a
+        # sibling instead of landing in a drained queue).
+        self.faults = None
+        self.crashed = False
+        self.kv_recoverable = True
         if self.paged:
             # host-side last emitted token per slot: the mixed tick composes
             # its packed batch on host, so no device token vector is needed
@@ -247,6 +266,14 @@ class ServeEngine:
         mid-admission, and one whose worst-case block demand exceeds what the
         pool can EVER provide must not park at the head of the queue
         forever."""
+        if self.crashed:
+            raise ReplicaCrashed(
+                f"replica {self.replica_id} is marked down")
+        if self.faults is not None:
+            self.faults.on_submit()          # may raise InjectedFault
+        if req.expired():
+            self._deadline_error(req, "admission")
+            return
         req.prompt = self._norm_prompt(req.prompt)   # normalize ONCE: every
         err = self._validate(req)                    # later pass is a no-op
         if err is not None:
@@ -260,8 +287,12 @@ class ServeEngine:
             return f"prompt of {S} tokens exceeds max_len={self.cm.max_len}"
         if self.paged:
             # the paged pool has no ring fallback: a decode that reaches
-            # max_len has no block to write and would kill the whole tick
-            if self.cm.written_max(S, req.max_new_tokens) > self.cm.max_len:
+            # max_len has no block to write and would kill the whole tick.
+            # A replayed request's prompt carries replay_offset already-
+            # generated tokens folded in, which max_new_tokens still counts
+            # — subtract them so accounting matches the uninterrupted run.
+            S_eff = S - req.replay_offset
+            if self.cm.written_max(S_eff, req.max_new_tokens) > self.cm.max_len:
                 return (f"prompt of {S} tokens + {req.max_new_tokens} new "
                         f"tokens would write past max_len={self.cm.max_len}")
             # with the pool drained and the prefix cache fully evicted, at
@@ -278,6 +309,39 @@ class ServeEngine:
         req.error = err
         self._complete(req)
 
+    def _deadline_error(self, req: Request, stage: str) -> None:
+        """Expire a request through the completion path with a STRUCTURED
+        reason (stage = where the budget ran out); partial tokens are kept —
+        a deadline is a latency bound, not a correctness failure."""
+        now = time.monotonic()
+        self.stats.deadline_exceeded += 1
+        req.error = {"error": "deadline_exceeded", "stage": stage,
+                     "deadline_s": req.deadline_s,
+                     "elapsed_s": now - req.arrived_s,
+                     "request_id": req.request_id}
+        self._complete(req)
+
+    def _sweep_deadlines(self) -> None:
+        """Per-tick deadline enforcement over every stage a request can be
+        parked in: queued (never admitted), mid-prefill, and decoding.
+        Runs at tick entry so an expired request never consumes another
+        dispatch; slots are released with exact accounting (a decoding
+        slot's written blocks are finished/cached — its KV is valid — and
+        a prefilling slot's refs are dropped, trie residency untouched)."""
+        now = time.monotonic()
+        for req in self.scheduler.pop_expired(self.replica_id, now):
+            self._deadline_error(req, "queued")
+        for slot, req in list(self.prefilling.items()):
+            if req.expired(now):
+                self.prefilling.pop(slot)
+                self.cm.release(slot)
+                self._deadline_error(req, "prefill")
+        for slot, req in list(self.live.items()):
+            if req.expired(now):
+                self.live.pop(slot)
+                self._release_slot(slot, req)
+                self._deadline_error(req, "decode")
+
     # ------------------------------------------------------------- engine
     def _next_seed(self) -> jnp.ndarray:
         self._dispatches += 1
@@ -286,13 +350,12 @@ class ServeEngine:
     # lint: sync-site(THE one per-tick device->host pull)
     def _to_host(self, arr):
         """THE device→host sync point; everything host-side reads through
-        here so tests/benchmarks can assert the one-sync-per-tick rule.  A
-        tuple (tokens, scores) is pulled in ONE blocking ``jax.device_get``
-        — still a single sync."""
+        here so tests/benchmarks can assert the one-sync-per-tick rule.
+        Accepts any pytree — a (tokens, scores) tuple, a single array, or a
+        spilled KV block tree — pulled in ONE blocking ``jax.device_get``:
+        still a single sync per call."""
         self.stats.host_syncs += 1
-        if isinstance(arr, tuple):
-            return tuple(np.asarray(a) for a in jax.device_get(arr))
-        return np.asarray(arr)
+        return jax.tree.map(np.asarray, jax.device_get(arr))
 
     @staticmethod
     def _norm_prompt(prompt) -> np.ndarray:
@@ -305,8 +368,12 @@ class ServeEngine:
         return p
 
     def _block_cost(self, req: Request) -> int:
-        """Worst-case block footprint of a request (reuse only shrinks it)."""
-        S = len(self._norm_prompt(req.prompt))
+        """Worst-case block footprint of a request (reuse only shrinks it).
+        Replayed requests subtract ``replay_offset``: the folded tokens
+        would have been written as decode feedbacks anyway, so the replayed
+        footprint equals the uninterrupted one — exact accounting across a
+        failover."""
+        S = len(self._norm_prompt(req.prompt)) - req.replay_offset
         return self.cm.block_cost(S, req.max_new_tokens)
 
     def idle(self) -> bool:
@@ -373,8 +440,12 @@ class ServeEngine:
         req.tokens.append(tok)
         req.scores.append(float(score[0]))
         req.entropies.append(float(score[1]))
-        req.first_token_s = now
-        self.stats.ttft_s.append(now - req.arrived_s)
+        if req.first_token_s is None:
+            # a replayed (failed-over) request keeps its ORIGINAL first-token
+            # time: re-prefilling on the sibling is recovery, not a prefill
+            # the client observed twice
+            req.first_token_s = now
+            self.stats.ttft_s.append(now - req.arrived_s)
         self.stats.prefills += 1
         self.stats.tokens_out += 1
         if len(req.tokens) >= req.max_new_tokens:
@@ -385,7 +456,12 @@ class ServeEngine:
 
     def _release_slot(self, slot: int, req: Request) -> None:
         if self.paged:
-            self.cm.finish(slot, req.tokens)
+            # a replayed request's first replay_offset tokens were folded
+            # into the prompt; only the rest are "generated" here, so the
+            # trie caches each written position exactly once
+            gen = (req.tokens[req.replay_offset:] if req.replay_offset
+                   else req.tokens)
+            self.cm.finish(slot, gen)
         else:
             self.cm.release(slot)
 
@@ -449,6 +525,12 @@ class ServeEngine:
                 # FIFO session's turns
                 self.scheduler.requeue(self.replica_id, req)
                 break
+            if req.replay_offset:
+                # begin() reserved for the folded prompt as if every token
+                # were fresh; the replayed footprint is the uninterrupted
+                # request's (see _block_cost) — correct it so admission
+                # headroom stays exact across a failover
+                seq.reserve = self._block_cost(req)
             free -= 1
             self.stats.prompt_tokens += len(p)
             self.stats.prefix_hit_tokens += seq.reused
@@ -669,10 +751,94 @@ class ServeEngine:
     def tick(self) -> int:
         """One engine step.  Paged: one unified mixed dispatch (decode rows +
         prefill chunks).  Dense: admit prefills, then decode all live slots.
+
+        Fault seams fire at tick ENTRY — before any dispatch — so the pool
+        is never mid-donation when a fault lands: a crash raises
+        ``ReplicaCrashed`` (the node marks the replica down and evacuates),
+        a stall returns 0 without progress (only the deployment watchdog
+        can see it), a slow tick sleeps then proceeds (deadlines, not
+        failover, handle it).
         """
+        if self.crashed:
+            raise ReplicaCrashed(f"replica {self.replica_id} is marked down")
+        if self.faults is not None:
+            if self.faults.on_tick(self) == "stall":
+                return 0
+        self._sweep_deadlines()
         if self.paged:
             return self._tick_mixed()
         return self._tick_dense()
+
+    # ------------------------------------------------- failover (deployment)
+    def spill(self, slot: int) -> SpilledKV | None:
+        """Spill one live slot's KV blocks to host (driver thread, on a
+        replica being marked down).  The device-side gather happens in the
+        cache manager; the ONE host transfer goes through ``_to_host`` —
+        the same sanctioned sync site as the tick pull — and is counted in
+        ``spill_syncs`` so the invariant on a dead replica is
+        ``host_syncs == ticks + spill_syncs`` (survivors keep the strict
+        ``host_syncs == ticks``)."""
+        if not self.paged:
+            return None
+        seq = self.cm.slots[slot]
+        if not seq.active or not seq.table:
+            return None
+        host_blocks = self._to_host(self.cm.spill_device(slot))
+        self.stats.spill_syncs += 1
+        self.stats.spilled_sessions += 1
+        return SpilledKV(request_id=seq.request_id, pos=seq.pos,
+                         n_blocks=len(seq.table),
+                         block_size=self.cm.block_size, blocks=host_blocks)
+
+    def evacuate(self, *, spill_kv: bool = True
+                 ) -> tuple[list[Request], list[tuple[Request, Any]]]:
+        """Empty a dead replica (driver thread only, after ``crashed`` is
+        set so racing submits bounce): queued requests pop for plain
+        resubmission; mid-prefill requests release their blocks (replay is
+        exact — nothing was emitted); live requests spill their KV when
+        ``spill_kv`` (else, or on spill failure, they re-home as replays).
+        Every slot is released here, so the allocator ends exactly where a
+        normal drain would leave it.  Returns (queued, [(req, spilled)])."""
+        queued = self.scheduler.drain(self.replica_id)
+        inflight: list[tuple[Request, Any]] = []
+        for slot, req in list(self.prefilling.items()):
+            self.prefilling.pop(slot)
+            self.cm.release(slot)
+            inflight.append((req, None))
+        for slot, req in list(self.live.items()):
+            self.live.pop(slot)
+            spilled = None
+            if spill_kv:
+                try:
+                    spilled = self.spill(slot)
+                except Exception:
+                    spilled = None       # unrecoverable KV: replay instead
+            self.cm.release(slot)
+            inflight.append((req, spilled))
+        return queued, inflight
+
+    def adopt(self, req: Request, spilled: SpilledKV | None) -> bool:
+        """Restore a sibling's spilled session into this replica: allocate
+        fresh blocks, scatter the migrated KV in, resume decoding at the
+        spilled position — the client-visible stream continues exactly
+        where the dead replica left it (greedy decoding is bit-identical
+        to the uninterrupted run).  False (nothing allocated) when this
+        replica can't host it; the caller falls back to prompt replay."""
+        if (not self.paged or self.crashed or spilled is None
+                or not req.tokens):
+            return False
+        slot = self.cm.acquire(req.request_id)
+        if slot is None:
+            return False
+        seq = self.cm.adopt(slot, self._norm_prompt(req.prompt), spilled,
+                            req.max_new_tokens)
+        if seq is None:
+            return False                 # cm.adopt released the slot
+        self._last_host[slot] = int(req.tokens[-1])
+        req.slot = slot
+        self.live[slot] = req
+        self.stats.adopted_sessions += 1
+        return True
 
     def run_until_drained(self, max_ticks: int = 10_000) -> None:
         for _ in range(max_ticks):

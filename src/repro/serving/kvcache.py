@@ -50,7 +50,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +81,41 @@ def _splice_slot(global_caches, src_caches, slot, row):
 # Jitted once at module scope: every CacheManager (hence every cluster
 # replica) shares one compilation per (cache structure, source batch) shape.
 _splice_jit = jax.jit(_splice_slot)
+
+
+def _gather_blocks(pools, idx):
+    """Gather the blocks ``idx`` (table order) out of every pool leaf —
+    device-side; leaves are (repeat, num_blocks, bs, K, D), block axis 1."""
+    return jax.tree.map(lambda leaf: leaf[:, idx], pools)
+
+
+def _scatter_blocks(pools, blocks, idx):
+    """Scatter migrated blocks into freshly allocated pool slots ``idx``."""
+    return jax.tree.map(
+        lambda p, b: p.at[:, idx].set(b.astype(p.dtype)), pools, blocks)
+
+
+# Spill gathers are read-only (the source pool stays live until release);
+# restore scatters rewrite every leaf, so the pool operand is donated — same
+# discipline as the engine's mixed step, and the caller reassigns
+# ``self.pools`` from the result before publishing.  Both compile once per
+# distinct block COUNT (the failover path is rare; a compile there is fine).
+_gather_jit = jax.jit(_gather_blocks)
+_scatter_jit = jax.jit(_scatter_blocks, donate_argnums=(0,))
+
+
+@dataclass
+class SpilledKV:
+    """A live session's committed KV, spilled off a (dead) replica: the
+    host-side tree of its table's blocks in TABLE ORDER, plus the positions
+    they back.  Restoring into a sibling allocates the same COUNT of fresh
+    blocks and scatters these in — the session resumes decoding at ``pos``
+    as if it had never moved (KV is valid over [0, pos))."""
+    request_id: str
+    pos: int                      # next position to write on resume
+    n_blocks: int
+    block_size: int
+    blocks: Any                   # host pytree, leaves (..., n_blocks, bs, K, D)
 
 
 @dataclass
@@ -570,6 +605,56 @@ class PagedCacheManager:
         del seq.table[keep:]
         self.alloc.unref(tail)
         return len(tail)
+
+    # -------------------------------------------------- spill / restore
+    def spill_device(self, slot: int):
+        """Device-side gather of this slot's blocks, in table order — NO
+        host transfer happens here (the engine pulls the returned tree
+        through its one sanctioned sync site, ``_to_host``)."""
+        seq = self.slots[slot]
+        idx = jnp.asarray(np.asarray(seq.table, np.int32))
+        return _gather_jit(self.pools, idx)
+
+    def adopt(self, slot: int, prompt: np.ndarray, spilled: SpilledKV,
+              max_new_tokens: int) -> PagedSeq | None:
+        """Install a spilled sibling session into ``slot``: allocate the
+        same count of fresh blocks, scatter the migrated KV in, and resume
+        at ``spilled.pos``.  Accounting is exact: the fresh blocks are
+        refcount-1 private (the source replica's trie residency did not
+        travel), ``reserve`` is the request's original worst-case footprint
+        so decode growth stays within the admission budget, and ``finish``
+        later donates prompt+generated blocks to THIS replica's trie under
+        their token keys (commit-time dedup reconciles any incumbent).
+        Returns None — slot released, nothing allocated — when the block
+        geometry differs or the pool can't cover the worst case."""
+        seq = self.slots[slot]
+        S = len(prompt)
+        reserve = self.block_cost(S, max_new_tokens)
+        if (spilled.block_size != self.block_size
+                or spilled.n_blocks > self.max_blocks
+                or reserve > self.available_for_admission()):
+            self.release(slot)
+            return None
+        fresh = self.alloc.allocate(spilled.n_blocks)
+        if fresh is None:
+            self.release(slot)
+            return None
+        seq.prompt = np.asarray(prompt)
+        seq.table = list(fresh)
+        seq.reused = 0
+        seq.reserve = max(reserve, spilled.n_blocks)
+        seq.prefill_pos = S            # prompt fully in KV already
+        seq.committed = 0              # nothing trie-resident here yet
+        seq.trie_key = ""
+        seq.pos = spilled.pos
+        idx = jnp.asarray(np.asarray(fresh, np.int32))
+        blocks = jax.tree.map(jnp.asarray, spilled.blocks)   # host → device
+        # donation discipline: the devstore entry aliases the donated pool
+        # until publish() reinstalls the fresh tree (driver thread only —
+        # same rule as the engine's mixed dispatch)
+        self.pools = _scatter_jit(self.pools, blocks, idx)
+        self.publish()
+        return seq
 
     def block_tables(self, slots: list[int] | None = None) -> np.ndarray:
         """(B, max_blocks) int32 table, -1 = unused (clamped to the null

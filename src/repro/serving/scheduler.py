@@ -53,6 +53,11 @@ class Request:
     session_key: str
     prompt: Any                     # token array (1, S) or embeds (1, S, d)
     max_new_tokens: int = 16
+    # latency budget, seconds RELATIVE to arrived_s (None = no deadline).
+    # Enforced at engine admission, per tick (engine._sweep_deadlines), and
+    # at the CascadeRoute boundary: an expired request completes with a
+    # structured {"error": "deadline_exceeded", ...} — never a hang.
+    deadline_s: float | None = None
     # optional draft stream for speculative decoding: token i is a guess for
     # generated token i (e.g. a CascadeRoute plants the LIGHT deployment's
     # generation here when escalating to heavy, so the heavy engine verifies
@@ -62,6 +67,13 @@ class Request:
     # engine-filled:
     slot: int | None = None
     tokens: list[int] = field(default_factory=list)
+    # failover replay: how many leading entries of ``tokens`` were folded
+    # into ``prompt`` for replay-prefill on a sibling replica.  Block/write
+    # accounting subtracts it (the folded tokens were going to be written
+    # as decode feedbacks anyway), and completion caches only
+    # ``tokens[replay_offset:]`` as generated — so a replayed request's
+    # allocator footprint is exactly the uninterrupted request's.
+    replay_offset: int = 0
     # per-token scores, surfaced from the SAME in-dispatch sampler that
     # picked the token (no extra device→host traffic): log p(token) under
     # the model, and the full next-token distribution's entropy.  Cascade
@@ -84,6 +96,20 @@ class Request:
         """Mean next-token distribution entropy (high = uncertain)."""
         return (sum(self.entropies) / len(self.entropies)) if self.entropies \
             else float("inf")
+
+    # ------------------------------------------------------------ deadlines
+    def elapsed(self, now: float | None = None) -> float:
+        return (time.monotonic() if now is None else now) - self.arrived_s
+
+    def expired(self, now: float | None = None) -> bool:
+        return (self.deadline_s is not None
+                and self.elapsed(now) > self.deadline_s)
+
+    def remaining(self, now: float | None = None) -> float | None:
+        """Budget left, or None when the request carries no deadline."""
+        if self.deadline_s is None:
+            return None
+        return self.deadline_s - self.elapsed(now)
 
 
 class Scheduler:
@@ -144,6 +170,32 @@ class Scheduler:
         (oldest-first order is preserved when callers requeue a contiguous
         admitted run in reverse)."""
         self.waiting[replica].appendleft(req)
+
+    def pop_expired(self, replica: int, now: float | None = None
+                    ) -> list[Request]:
+        """Remove and return every queued request whose deadline has passed.
+
+        Pop-rotates IN PLACE (pop each element once, append keepers back)
+        rather than rebuilding the deque: an upcall thread may be appending
+        concurrently, and a replacement deque would silently drop its
+        arrival.  Relative order of the keepers is preserved."""
+        q = self.waiting[replica]
+        now = time.monotonic() if now is None else now
+        expired: list[Request] = []
+        for _ in range(len(q)):
+            req = q.popleft()
+            (expired if req.expired(now) else q).append(req)
+        return expired
+
+    def drain(self, replica: int) -> list[Request]:
+        """Pop every queued request (replica evacuation on mark-down).
+        Same in-place pop discipline as ``pop_expired``: a concurrent
+        submit's append is either drained or survives for the sweep."""
+        q = self.waiting[replica]
+        out: list[Request] = []
+        for _ in range(len(q)):
+            out.append(q.popleft())
+        return out
 
     def pending(self, replica: int) -> int:
         return len(self.waiting[replica])

@@ -22,6 +22,7 @@ from repro.analysis.sanitizer import LockOrderTracker, SyncSiteSanitizer
 
 SANITIZED_MODULES = {
     "test_dispatcher",
+    "test_faults",
     "test_serve_cluster",
     "test_serve_node",
     "test_devstore_retention",

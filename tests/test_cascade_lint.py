@@ -262,6 +262,29 @@ def test_runner_enforces_single_sync_site_budget(tmp_path):
     assert "second `sync-site` pragma" in findings[0].message
 
 
+def test_runner_sync_site_budget_covers_fault_injection_module(tmp_path):
+    """The fault-injection seam lives in ``serving/`` — a spill path (or any
+    fault hook) declaring its own sanctioned sync site must trip the global
+    budget rather than quietly becoming a second sync seam (spills are
+    required to pull through the engine's one site)."""
+    serving = tmp_path / "serving"
+    serving.mkdir()
+    (serving / "engine.py").write_text(
+        "import jax\n\n\n"
+        "# lint: sync-site(THE one per-tick device->host pull)\n"
+        "def _to_host(arr):\n"
+        "    return jax.device_get(arr)\n")
+    (serving / "faults.py").write_text(
+        "import jax\n\n\n"
+        "# lint: sync-site(spill pull)\n"
+        "def spill_pull(arr):\n"
+        "    return jax.device_get(arr)\n")
+    findings = lint_paths([str(tmp_path)])
+    assert len(findings) == 1
+    assert findings[0].path.endswith("faults.py")
+    assert "second `sync-site` pragma" in findings[0].message
+
+
 # --------------------------------------------------------------------------
 # Pass 3: donation & recompile hazards
 # --------------------------------------------------------------------------

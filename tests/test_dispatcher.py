@@ -194,3 +194,30 @@ def test_event_timestamps_ordered():
     ev.completion.wait(5)
     assert ev.enqueued_ns <= ev.dequeued_ns <= ev.done_ns
     pool.stop()
+
+
+def test_poisoned_lambda_contained_counted_thread_survives():
+    """A lambda that ALWAYS raises must be contained per event — the error
+    rides on the event, ``stats().upcall_errors`` counts it, and the upcall
+    thread keeps serving later events on the same queue."""
+    from repro.serving.faults import poisoned_lambda
+
+    pool, d = make(n_threads=1)       # one queue: poison and probe share it
+    d.register(LambdaHandle("poison", "/bad",
+                            poisoned_lambda(RuntimeError, "injected")))
+    d.register(LambdaHandle("ok", "/good", lambda o, ev: "alive"))
+    bad = []
+    for i in range(5):
+        bad += d.dispatch(CascadeObject(key="/bad/k", payload=b""))
+    [good] = d.dispatch(CascadeObject(key="/good/k", payload=b""))
+    good.completion.wait(5)
+    for ev in bad:
+        ev.completion.wait(5)
+        assert isinstance(ev.error, RuntimeError)
+    # the thread survived the poison: the later event still ran
+    assert good.result == "alive" and good.error is None
+    st = d.stats()
+    assert st["upcall_errors"] == 5
+    assert st["upcall_errors_per_queue"] == [5]
+    assert st["dispatched"] == 6
+    pool.stop()

@@ -1,0 +1,458 @@
+"""Fault-tolerant fast path: injection, failover with KV migration, and
+deadline-aware retry.
+
+Runs under the PR 6 runtime sanitizers (tests/conftest.py): every test here
+gets the lock-order tracker and the sync-site sanitizer — spills must pull
+through ``ServeEngine._to_host`` like everything else, and no new lock can
+introduce an ordering cycle.
+
+The bit-identical tests are the heart of the failover contract: greedy
+decoding makes the token stream a pure function of the prompt, so a session
+migrated (KV spill + restore) or replayed (emissions folded into the prompt)
+onto a sibling must produce EXACTLY the tokens an uninterrupted run does.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_params
+from repro.serving.cluster import CascadeGate, CascadeRoute, ServeNode
+from repro.serving.faults import (FaultInjector, FaultKind, FaultSpec,
+                                  InjectedFault, ReplicaCrashed)
+from repro.serving.scheduler import Request, Scheduler
+
+LIGHT = ModelConfig(name="light", family="dense", n_layers=2, d_model=32,
+                    n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=128,
+                    dtype="float32", q_chunk=16)
+HEAVY = ModelConfig(name="heavy", family="ssm", n_layers=2, d_model=64,
+                    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                    dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def light_params():
+    return init_params(jax.random.PRNGKey(0), LIGHT)
+
+
+@pytest.fixture(scope="module")
+def heavy_params():
+    return init_params(jax.random.PRNGKey(1), HEAVY)
+
+
+def _prompts(n, seed=7, lo=4, hi=12):
+    rng = np.random.default_rng(seed)
+    return {f"r{i}": rng.integers(0, 128, (int(rng.integers(lo, hi)),))
+            .astype(np.int32) for i in range(n)}
+
+
+# =========================================================== injector unit
+def test_injector_seeded_schedule_is_deterministic():
+    """Negative at_tick draws are seeded: same seed → same schedule."""
+    mk = lambda seed: FaultInjector(
+        [FaultSpec(FaultKind.CRASH, at_tick=-10),
+         FaultSpec(FaultKind.STALL, at_tick=-10)], seed=seed)
+    a, b = mk(3), mk(3)
+    assert [s.at_tick for s in a.specs] == [s.at_tick for s in b.specs]
+    assert all(1 <= s.at_tick <= 10 for s in a.specs)
+
+
+class _DummyEngine:
+    crashed = False
+    kv_recoverable = True
+
+
+def test_injector_crash_fires_once_and_latches_one_replica():
+    inj = FaultInjector([FaultSpec(FaultKind.CRASH, at_tick=2)])
+    e0, e1 = _DummyEngine(), _DummyEngine()
+    s0, s1 = inj.bind("m", 0), inj.bind("m", 1)
+    assert s0.on_tick(e0) is None and s1.on_tick(e1) is None
+    with pytest.raises(ReplicaCrashed):
+        s0.on_tick(e0)                    # m/r0 reaches tick 2 first
+    assert e0.crashed and e0.kv_recoverable
+    # the wildcard latched onto r0: r1 never crashes
+    for _ in range(5):
+        assert s1.on_tick(e1) is None
+    assert not e1.crashed
+    assert inj.fired_log == ["crash:m/r0@tick2"]
+
+
+def test_injector_submit_errors_fire_count_times_then_clear():
+    inj = FaultInjector([FaultSpec(FaultKind.SUBMIT_ERROR, count=2)])
+    seam = inj.bind("m", 0)
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            seam.on_submit()
+    seam.on_submit()                      # budget spent: submits flow again
+    assert len(inj.fired_log) == 2
+
+
+def test_injector_stall_is_permanent_once_armed():
+    inj = FaultInjector([FaultSpec(FaultKind.STALL, at_tick=3)])
+    e = _DummyEngine()
+    seam = inj.bind("m", 0)
+    assert [seam.on_tick(e) for _ in range(2)] == [None, None]
+    assert all(seam.on_tick(e) == "stall" for _ in range(4))
+    assert not e.crashed                  # a wedged replica is not a crash
+
+
+# ========================================================== scheduler unit
+def test_scheduler_pop_expired_keeps_order_and_drain_empties():
+    sched = Scheduler(n_replicas=1)
+    now = time.monotonic()
+    reqs = []
+    for i, dl in enumerate([None, 0.001, 100.0, 0.001, None]):
+        r = Request(request_id=f"r{i}", session_key="s", prompt=[1],
+                    deadline_s=dl)
+        r.arrived_s = now - 1.0           # 1s old: tight deadlines expired
+        sched.submit(r)
+        reqs.append(r)
+    expired = sched.pop_expired(0)
+    assert [r.request_id for r in expired] == ["r1", "r3"]
+    assert [r.request_id for r in sched.waiting[0]] == ["r0", "r2", "r4"]
+    assert [r.request_id for r in sched.drain(0)] == ["r0", "r2", "r4"]
+    assert sched.pending(0) == 0
+
+
+# =================================================== failover: bit-identical
+def _run_failover(params, mode, n=6, max_new=6):
+    """Submit ``n`` requests; in chaos modes, kill replica 0 once it holds
+    live (decoding) sessions and let the deployment re-home them.  Returns
+    (results, deployment stats, per-engine EngineStats list)."""
+    with ServeNode(n_workers=2) as node:
+        dep = node.deploy("light", LIGHT, params, n_replicas=2, n_slots=8,
+                          max_len=64, block_size=8, num_blocks=64,
+                          prefix_cache=False)
+        prompts = _prompts(n)
+        for i, (rid, p) in enumerate(prompts.items()):
+            dep.submit(f"s{i % 3}", rid, p, max_new_tokens=max_new)
+        if mode != "baseline":
+            eng0 = dep.engines[0]
+            stop = time.monotonic() + 30
+            # wait (driving the node) until replica 0 is mid-decode with at
+            # least one emitted token, so the kill lands on live KV state
+            while not any(r.tokens for r in list(eng0.live.values())):
+                node.step()
+                assert time.monotonic() < stop, "replica 0 never went live"
+            if mode == "replay":
+                eng0.kv_recoverable = False
+            dep.mark_down(0, "test-crash")
+        node.run_until_drained()
+        results = {rid: np.asarray(dep.result(rid)) for rid in prompts}
+        errors = {rid: dep.error(rid) for rid in prompts}
+        stats = dep.stats()
+        eng_stats = [e.stats for e in dep.engines]
+        cms = [e.cm for e in dep.engines]
+        assert all(err is None for err in errors.values()), errors
+        return results, stats, eng_stats, cms
+
+
+@pytest.fixture(scope="module")
+def baseline_results(light_params):
+    results, stats, _, _ = _run_failover(light_params, "baseline")
+    assert stats["failovers"] == 0 and stats["rehomed"] == 0
+    return results
+
+
+def test_crash_failover_migrates_kv_bit_identical(light_params,
+                                                  baseline_results):
+    """Kill a replica mid-decode with recoverable KV: its sessions spill,
+    migrate, and resume on the sibling — the client-visible streams are
+    bit-identical to the uninterrupted run."""
+    results, st, eng_stats, cms = _run_failover(light_params, "migrate")
+    for rid, toks in baseline_results.items():
+        np.testing.assert_array_equal(results[rid], toks)
+    assert st["failovers"] == 1 and st["down"] == {0: "test-crash"}
+    assert st["rehomed"] >= 1 and st["migrated"] >= 1
+    assert st["failover_failed"] == 0
+    # sync discipline: the survivor keeps the strict one-sync-per-tick rule;
+    # the dead replica's extra pulls are exactly its spills
+    assert eng_stats[1].host_syncs == eng_stats[1].ticks
+    assert eng_stats[0].host_syncs == eng_stats[0].ticks \
+        + eng_stats[0].spill_syncs
+    assert eng_stats[0].spilled_sessions >= st["migrated"]
+    assert eng_stats[1].adopted_sessions == st["migrated"]
+    # exact block accounting across spill/restore: with the prefix cache off
+    # a drained pool holds NOTHING — every spilled, adopted, and evacuated
+    # block was returned exactly once
+    for cm in cms:
+        assert cm.alloc.blocks_in_use == 0
+        assert all(not s.active for s in cm.slots)
+        assert cm.available_for_admission() == cm.alloc.available()
+
+
+def test_crash_with_unrecoverable_kv_replays_bit_identical(light_params,
+                                                           baseline_results):
+    """Same kill, but the dead replica's KV is unrecoverable: sessions fold
+    their emissions into the prompt and replay-prefill on the sibling —
+    still bit-identical, zero spills."""
+    results, st, eng_stats, cms = _run_failover(light_params, "replay")
+    for rid, toks in baseline_results.items():
+        np.testing.assert_array_equal(results[rid], toks)
+    assert st["failovers"] == 1
+    assert st["replayed"] >= 1 and st["migrated"] == 0
+    assert st["failover_failed"] == 0
+    # no spill happened, so BOTH replicas keep the strict invariant
+    for es in eng_stats:
+        assert es.host_syncs == es.ticks
+        assert es.spill_syncs == 0
+    for cm in cms:
+        assert cm.alloc.blocks_in_use == 0
+
+
+# ======================================================= injector end-to-end
+def test_seeded_chaos_crash_every_request_terminal(light_params):
+    """The acceptance gate: under a SEEDED injected crash, every in-flight
+    request reaches a terminal state — a migrated/replayed result or a
+    structured error — and the drain resolves instead of timing out."""
+    inj = FaultInjector([FaultSpec(FaultKind.CRASH, deployment="light",
+                                   at_tick=-6, kv_recoverable=True)], seed=11)
+    with ServeNode(n_workers=2) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=2,
+                          n_slots=4, max_len=64, block_size=8, num_blocks=64)
+        node.install_faults(inj)
+        prompts = _prompts(8, seed=5)
+        for i, (rid, p) in enumerate(prompts.items()):
+            dep.submit(f"s{i % 4}", rid, p, max_new_tokens=5)
+        node.run_until_drained()
+        st = dep.stats()
+        assert any(e.startswith("crash:light/") for e in inj.fired_log)
+        assert st["failovers"] == 1 and len(st["down"]) == 1
+        for rid in prompts:
+            res, err = dep.result(rid), dep.error(rid)
+            assert res is not None                      # terminal, always
+            if err is None:
+                assert res.shape == (5,)                # full generation
+            else:                                       # structured, never raw
+                assert err["error"] in ("replica_failed",
+                                        "deadline_exceeded")
+        ns = node.stats()
+        assert ns["submitted"] == ns["completed"]
+
+
+def test_stall_watchdog_marks_down_and_drain_resolves(light_params):
+    """A wedged replica (busy, zero tick progress) is invisible to crash
+    handling — only the progress watchdog can see it.  Its sessions must
+    re-home and the drain must RESOLVE, not time out."""
+    inj = FaultInjector([FaultSpec(FaultKind.STALL, deployment="light",
+                                   at_tick=2)])
+    with ServeNode(n_workers=2) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=2,
+                          n_slots=4, max_len=64, block_size=8, num_blocks=64,
+                          watchdog_s=0.15)
+        node.install_faults(inj)
+        prompts = _prompts(6, seed=9)
+        for i, (rid, p) in enumerate(prompts.items()):
+            dep.submit(f"s{i % 3}", rid, p, max_new_tokens=4)
+        node.run_until_drained(timeout_s=60.0)
+        st = dep.stats()
+        assert list(st["down"].values()) == ["stalled"]
+        assert st["failovers"] == 1
+        for rid in prompts:
+            assert dep.result(rid) is not None
+            assert dep.error(rid) is None, dep.error(rid)
+            assert dep.result(rid).shape == (4,)
+
+
+def test_watchdog_tolerates_slow_ticks(light_params):
+    """SLOW_TICK stretches ticks but progress continues — the watchdog must
+    NOT mark the replica down (deadlines, not failover, own slowness)."""
+    inj = FaultInjector([FaultSpec(FaultKind.SLOW_TICK, deployment="light",
+                                   at_tick=1, count=50, duration_s=0.01)])
+    with ServeNode(n_workers=1) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                          n_slots=2, max_len=64, watchdog_s=1.0)
+        node.install_faults(inj)
+        dep.submit("s0", "r0", np.arange(5, dtype=np.int32),
+                   max_new_tokens=3)
+        node.run_until_drained()
+        st = dep.stats()
+        assert st["down"] == {} and st["failovers"] == 0
+        assert dep.result("r0").shape == (3,)
+
+
+# ================================================================ deadlines
+def test_deadline_expired_at_admission_structured_error(light_params):
+    with ServeNode(n_workers=1) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                          n_slots=2, max_len=64)
+        dep.submit("s0", "r0", np.arange(5, dtype=np.int32),
+                   max_new_tokens=4, deadline_s=0.0)
+        node.run_until_drained()
+        err = dep.error("r0")
+        assert err["error"] == "deadline_exceeded"
+        assert err["stage"] == "admission"
+        assert err["elapsed_s"] > err["deadline_s"] == 0.0
+        assert dep.result("r0").shape == (0,)
+        assert dep.stats()["deadline_exceeded"] == 1
+
+
+def test_deadline_mid_generation_sweeps_with_partial_tokens(light_params):
+    """Slow ticks burn a live request's budget: the per-tick sweep expires
+    it with a structured stage and keeps the partial tokens — a deadline is
+    a latency bound, not a correctness failure."""
+    inj = FaultInjector([FaultSpec(FaultKind.SLOW_TICK, deployment="light",
+                                   at_tick=1, count=1000, duration_s=0.02)])
+    with ServeNode(n_workers=1) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                          n_slots=2, max_len=64, watchdog_s=5.0)
+        node.install_faults(inj)
+        dep.submit("s0", "r0", np.arange(6, dtype=np.int32),
+                   max_new_tokens=50, deadline_s=0.08)
+        node.run_until_drained()
+        err = dep.error("r0")
+        assert err["error"] == "deadline_exceeded"
+        assert err["stage"] in ("queued", "prefill", "decode")
+        assert err["elapsed_s"] > 0.08
+        assert dep.result("r0") is not None        # partial tokens kept
+        assert dep.stats()["down"] == {}           # slow ≠ wedged
+
+
+# ============================================================ submit retries
+def test_transient_submit_error_retries_on_sibling(light_params):
+    inj = FaultInjector([FaultSpec(FaultKind.SUBMIT_ERROR,
+                                   deployment="light", count=1)])
+    with ServeNode(n_workers=2) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=2,
+                          n_slots=2, max_len=64)
+        node.install_faults(inj)
+        dep.submit("s0", "r0", np.arange(5, dtype=np.int32),
+                   max_new_tokens=3)
+        node.run_until_drained()
+        assert dep.result("r0").shape == (3,)
+        assert dep.error("r0") is None
+        st = dep.stats()
+        assert st["submit_retries"] >= 1 and st["failover_failed"] == 0
+        assert len(inj.fired_log) == 1
+
+
+def test_submit_retry_exhaustion_fails_structured(light_params):
+    """Every replica refusing the submit must terminate the request with a
+    structured replica_failed — counted, completed, never raised back
+    through a counted submit (which would hang the drain)."""
+    inj = FaultInjector([
+        FaultSpec(FaultKind.SUBMIT_ERROR, deployment="light", replica=0,
+                  count=100),
+        FaultSpec(FaultKind.SUBMIT_ERROR, deployment="light", replica=1,
+                  count=100)])
+    with ServeNode(n_workers=2) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=2,
+                          n_slots=2, max_len=64)
+        node.install_faults(inj)
+        dep.submit("s0", "r0", np.arange(5, dtype=np.int32),
+                   max_new_tokens=3)
+        node.run_until_drained()
+        err = dep.error("r0")
+        assert err["error"] == "replica_failed"
+        assert "no healthy replica" in err["reason"]
+        assert dep.result("r0").shape == (0,)
+        assert dep.stats()["failover_failed"] == 1
+
+
+def test_store_seam_submit_error_retried_with_backoff(light_params):
+    """A transient trigger_put failure (store seam) is retried by the
+    deployment's capped-backoff loop; the request still lands and serves."""
+    inj = FaultInjector([FaultSpec(FaultKind.SUBMIT_ERROR,
+                                   deployment="light", seam="store",
+                                   count=1)])
+    with ServeNode(n_workers=1) as node:
+        dep = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                          n_slots=2, max_len=64)
+        node.install_faults(inj)
+        dep.submit("s0", "r0", np.arange(5, dtype=np.int32),
+                   max_new_tokens=3)
+        node.run_until_drained()
+        assert dep.result("r0").shape == (3,)
+        assert dep.error("r0") is None
+        assert dep.stats()["submit_retries"] >= 1
+        assert inj.fired_log[0].startswith("store_submit_error:")
+
+
+# ======================================================= cascade resilience
+def test_cascade_heavy_crash_after_escalation_resolves(light_params,
+                                                       heavy_params):
+    """Heavy-tier replica crashing AFTER escalation submits succeeded: the
+    escalated requests re-home inside the heavy deployment and every
+    ``result()`` resolves — never pends forever."""
+    inj = FaultInjector([FaultSpec(FaultKind.CRASH, deployment="heavy",
+                                   at_tick=2)])
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=2,
+                            n_slots=4, max_len=64)
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=2,
+                            n_slots=4, max_len=64)
+        node.install_faults(inj)
+        # threshold high enough that EVERY light answer escalates
+        route = CascadeRoute(light, heavy,
+                             gate=CascadeGate(metric="logprob",
+                                              threshold=1e9))
+        prompts = _prompts(6, seed=3)
+        for i, (rid, p) in enumerate(prompts.items()):
+            route.submit(f"s{i % 3}", rid, p, max_new_tokens=4)
+        node.run_until_drained()
+        st = route.stats()
+        assert st["escalated"] == 6
+        assert heavy.stats()["failovers"] == 1
+        for rid in prompts:
+            res = route.result(rid)
+            assert res is not None
+            err = route.error(rid)
+            if err is None:
+                assert res.shape == (4,)    # re-homed heavy answer
+            else:
+                assert err["error"] == "replica_failed"
+
+
+def test_cascade_all_heavy_down_resolves_with_structured_error(light_params,
+                                                               heavy_params):
+    """No surviving heavy replica: escalated requests complete with a
+    structured replica_failed from the heavy deployment — the route still
+    resolves every request."""
+    inj = FaultInjector([FaultSpec(FaultKind.CRASH, deployment="heavy",
+                                   at_tick=1)])
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=2,
+                            n_slots=4, max_len=64)
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=1,
+                            n_slots=4, max_len=64)
+        node.install_faults(inj)
+        route = CascadeRoute(light, heavy,
+                             gate=CascadeGate(metric="logprob",
+                                              threshold=1e9))
+        prompts = _prompts(4, seed=13)
+        for i, (rid, p) in enumerate(prompts.items()):
+            route.submit(f"s{i % 2}", rid, p, max_new_tokens=4)
+        node.run_until_drained()
+        assert heavy.stats()["down"] != {}
+        failed = 0
+        for rid in prompts:
+            assert route.result(rid) is not None
+            err = route.error(rid)
+            if err is not None:
+                assert err["error"] == "replica_failed"
+                failed += 1
+        assert failed >= 1                  # the crash really bit someone
+
+
+def test_cascade_deadline_skips_escalation(light_params, heavy_params):
+    """An exhausted end-to-end budget at the cascade boundary skips the
+    heavy tier entirely: the light outcome stands, ``deadline_skips`` counts
+    the decision, and the heavy deployment never sees the request."""
+    with ServeNode(n_workers=2) as node:
+        light = node.deploy("light", LIGHT, light_params, n_replicas=1,
+                            n_slots=2, max_len=64)
+        heavy = node.deploy("heavy", HEAVY, heavy_params, n_replicas=1,
+                            n_slots=2, max_len=64)
+        route = CascadeRoute(light, heavy,
+                             gate=CascadeGate(metric="logprob",
+                                              threshold=1e9))
+        route.submit("s0", "r0", np.arange(5, dtype=np.int32),
+                     max_new_tokens=4, deadline_s=0.0)
+        node.run_until_drained()
+        err = route.error("r0")
+        assert err["error"] == "deadline_exceeded"
+        assert route.result("r0") is not None
+        st = route.stats()
+        assert st["deadline_skips"] == 1 and st["escalated"] == 0
+        assert heavy.stats()["submitted"] == 0

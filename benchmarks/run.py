@@ -36,6 +36,7 @@ def main() -> None:
         ("serve_speculative", serve.bench_serve_speculative),
         ("serve_multi_model", serve.bench_serve_multi_model),
         ("serve_chaos", serve.bench_serve_chaos),
+        ("serve_overload", serve.bench_serve_overload),
         ("roofline_table", lambda out: roofline.table(out)),
     ]
 

@@ -52,13 +52,28 @@ rate is >= 0.5, and ``host_syncs == ticks`` with speculation on; outside
 smoke mode the speculative TPOT p50 must beat the baseline (one sync
 amortized over multiple accepted tokens).
 
-Set ``BENCH_SMOKE=1`` for a tiny-config, few-tick variant of all four (CI
-runs this on every PR).  Results land in BENCH_serve.json so the serving
-perf trajectory is tracked across PRs.
+``serve_overload``: a diurnal-style overload — a batch flood parks on a
+single watermarked replica, then an interactive trickle arrives on top.
+Pass A is the shed-only FIFO baseline (no SLO classes, no preemption): the
+trickle either sheds at the watermark or queues behind the flood.  Pass B
+runs the same workload with SLO classes and ``preempt=True``: over-watermark
+interactive arrivals admit via preempt-before-shed, and the engine's EDF
+preemption spills a batch victim's KV to the host-side pool to issue them
+immediately.  Asserts — always, including smoke — that B's interactive p99
+TTFT beats A's, that B serves at least as many interactive requests, that
+every batch request in B still completes (EDF aging: absolute virtual
+deadlines bound starvation), zero stranded requests in both passes, and the
+sync discipline per pass (A strict ``host_syncs == ticks``; B ``host_syncs
+== ticks + spill_syncs``).
+
+Set ``BENCH_SMOKE=1`` for a tiny-config, few-tick variant of all of these
+(CI runs this on every PR).  Results land in BENCH_serve.json so the
+serving perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
 import json
+import math
 import os
 import time
 
@@ -635,4 +650,173 @@ def bench_serve_chaos(out) -> dict:
     out("serve_chaos/CLAIM zero-stranded-requests-under-chaos,PASS,exact")
     out("serve_chaos/CLAIM structured-errors-only,PASS,exact")
     _write_results("serve_chaos", results, out)
+    return results
+
+
+def bench_serve_overload(out) -> dict:
+    """Overload A/B: shed-only FIFO vs SLO classes + KV preemption.
+
+    One replica, watermarked queue, batch flood + interactive trickle.
+    The baseline pass submits everything classless (EDF over a uniform
+    class IS arrival-order FIFO) with preemption off — the pre-SLO
+    behavior: interactive arrivals shed at the watermark or queue behind
+    the flood.  The preempt pass tags the trickle ``interactive``: the
+    door admits it over the watermark (preempt-before-shed) and the
+    engine spills a batch victim to issue it at once."""
+    from repro.models import init_params
+    from repro.models.config import ModelConfig
+    from repro.serving.cluster import ServeNode
+    from repro.serving.scheduler import SLO_INTERACTIVE
+
+    smoke = _smoke()
+    cfg = ModelConfig(name="ovl", family="dense", n_layers=2,
+                      d_model=32 if smoke else 64, n_heads=4, n_kv_heads=2,
+                      d_ff=64 if smoke else 128, vocab_size=256,
+                      dtype="float32", q_chunk=16)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_slots = 2
+    n_batch = 6
+    watermark = n_batch              # the parked flood sits AT the mark
+    n_inter = 4 if smoke else 8
+    batch_S, batch_new = (8, 8) if smoke else (16, 16)
+    inter_S, inter_new = 4, 3
+    results: dict = {}
+
+    def run(label, *, preempt):
+        rng = np.random.default_rng(3)
+        done: dict[str, tuple[float | None, bool]] = {}
+
+        def probe(req):
+            ttft = (None if req.first_token_s is None
+                    else req.first_token_s - req.arrived_s)
+            done[req.request_id] = (ttft, req.error is None)
+
+        with ServeNode(n_workers=1) as node:
+            dep = node.deploy("ovl", cfg, params, n_replicas=1,
+                              n_slots=n_slots, max_len=96,
+                              prefix_cache=False, watermark=None,
+                              preempt=preempt)
+            # warm the one jitted step outside the measurement
+            t0 = time.monotonic()
+            dep.submit("warm", "w0",
+                       rng.integers(0, 256, (batch_S,)).astype(np.int32),
+                       max_new_tokens=2)
+            node.run_until_drained()
+            compile_s = time.monotonic() - t0
+            dep.on_done.append(probe)
+
+            rids = []
+            for i in range(n_batch):        # the flood: fills both slots
+                rid = f"b{i}"               # and parks the rest in queue
+                rids.append(rid)
+                dep.submit(f"bs{i}", rid,
+                           rng.integers(0, 256,
+                                        (batch_S,)).astype(np.int32),
+                           max_new_tokens=batch_new)
+            # arm the watermark only once the flood is INSIDE the engine
+            # (upcall lambdas drained): the flood is accepted work parked
+            # at the mark, and the watermark governs what arrives ON TOP —
+            # the trickle.  Arming early would race the flood's own
+            # admission lambdas and shed the flood at its own door.
+            stop = time.monotonic() + 10
+            while dep.engines[0].backlog() < n_batch:
+                assert time.monotonic() < stop, "flood never reached engine"
+                node.step()
+                time.sleep(0.001)
+            dep.watermark = watermark
+            for j in range(n_inter):        # the trickle, on top of it
+                rid = f"i{j}"
+                rids.append(rid)
+                dep.submit(f"is{j}", rid,
+                           rng.integers(0, 256,
+                                        (inter_S,)).astype(np.int32),
+                           max_new_tokens=inter_new,
+                           slo=SLO_INTERACTIVE if preempt else None)
+                for _ in range(2):
+                    node.step()
+            node.run_until_drained()
+
+            stranded = [r for r in rids
+                        if dep.result(r) is None and dep.error(r) is None]
+            assert not stranded, f"stranded under overload: {stranded}"
+            # both passes: the accepted flood must complete — in the
+            # preempt pass this is the EDF aging bound in action (the
+            # preempted flood still finishes, nothing starves)
+            berr = {f"b{i}": dep.error(f"b{i}") for i in range(n_batch)
+                    if dep.error(f"b{i}") is not None}
+            assert not berr, f"batch flood starved/refused: {berr}"
+            st = dep.stats()
+            if preempt:
+                assert st["host_syncs"] == st["ticks"] + st["spill_syncs"]
+                # every batch request issued (the classless warm request
+                # rides in the batch histogram too, hence >=)
+                assert st["queue_wait_s"].get("batch",
+                                              {}).get("n", 0) >= n_batch
+            else:
+                assert st["spill_syncs"] == 0
+                assert st["host_syncs"] == st["ticks"]
+
+        inter_ttft = sorted(done[f"i{j}"][0] for j in range(n_inter)
+                            if done.get(f"i{j}", (None, False))[1])
+        # effective TTFT: a shed request never produced a token — its
+        # first-token latency is unbounded, and the A/B claim must charge
+        # the shed-only baseline for it rather than sampling the survivors
+        eff_ttft = sorted((done[f"i{j}"][0]
+                           if done.get(f"i{j}", (None, False))[1]
+                           else float("inf")) for j in range(n_inter))
+        row = {
+            "compile_s": compile_s,
+            "preempt": preempt,
+            "interactive_served": len(inter_ttft),
+            "interactive_shed": n_inter - len(inter_ttft),
+            "interactive_ttft_p50_us": _pct(inter_ttft, 0.50) * 1e6,
+            "interactive_ttft_p99_us": _pct(inter_ttft, 0.99) * 1e6,
+            "batch_served": sum(1 for i in range(n_batch)
+                                if done.get(f"b{i}", (None, False))[1]),
+            "preemptions": st["preemptions"],
+            "resumes": st["resumes"],
+            "spilled_blocks": st["spilled_blocks"],
+            "preempt_admits": st["preempt_admits"],
+            "shed": st["shed"],
+            "ticks": st["ticks"],
+            "queue_wait_s": st["queue_wait_s"],
+        }
+        results[label] = row
+        out(f"serve_overload/{label},{row['interactive_ttft_p50_us']:.1f},"
+            f"ttft_p99_us={row['interactive_ttft_p99_us']:.1f} "
+            f"served={row['interactive_served']}_of_{n_inter} "
+            f"shed={row['shed']} preemptions={row['preemptions']} "
+            f"resumes={row['resumes']}")
+        return row, eff_ttft
+
+    base, base_eff = run("baseline", preempt=False)
+    pre, pre_eff = run("preempt", preempt=True)
+
+    b_p99 = _pct(base_eff, 0.99) * 1e6       # inf when any shed landed p99
+    p_p99 = _pct(pre_eff, 0.99) * 1e6
+    assert pre["interactive_served"] == n_inter, \
+        "preempt pass shed interactive work it should have admitted"
+    assert pre["interactive_served"] >= base["interactive_served"]
+    assert base["shed"] >= 1, \
+        "the flood never pushed the baseline into its shed-only regime"
+    assert pre["preemptions"] >= 1, "overload never triggered a preemption"
+    assert p_p99 < b_p99, \
+        "preemption failed to beat the shed-only FIFO interactive p99 TTFT"
+    # EDF class separation inside the preempt pass: interactive queue wait
+    # must sit well below the preempted batch flood's
+    pw = pre["queue_wait_s"]
+    assert pw["interactive"]["p50_s"] < pw["batch"]["p50_s"], \
+        "interactive queue wait did not separate from the batch flood"
+    results["total"] = {
+        "n_batch": n_batch, "n_interactive": n_inter,
+        "watermark": watermark,
+        "baseline_eff_p99_finite": math.isfinite(b_p99),
+        "preempt_eff_ttft_p99_us": p_p99,
+    }
+    out(f"serve_overload/effective_p99,{p_p99:.1f},"
+        f"baseline_eff_p99_us={b_p99:.1f}_with_shed_as_inf")
+    out("serve_overload/CLAIM preempt-beats-shed-only-ttft,PASS,exact")
+    out("serve_overload/CLAIM batch-flood-still-completes,PASS,exact")
+    out("serve_overload/CLAIM zero-stranded-requests,PASS,exact")
+    _write_results("serve_overload", results, out)
     return results

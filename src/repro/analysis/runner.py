@@ -5,7 +5,10 @@ Per-pass scope mirrors where each invariant lives:
 - ``lock-discipline`` and ``donation``/``recompile`` run over the whole
   tree (any module may grow threads or jit calls);
 - ``host-sync`` runs only over the fast-path packages (``serving/``,
-  ``models/``) — training and offline tooling may sync freely.
+  ``models/``) plus the named fast-path FILES in ``_FASTPATH_FILES`` —
+  ``core/store.py`` joined when the spill pool put it on the preemption
+  spill/unpark path (the rest of ``core`` is offline tooling and may sync
+  freely).
 
 One check is global rather than per-file: across the fast-path scope
 there must be at most ONE ``sync-site`` pragma.  The invariant is "one
@@ -25,12 +28,20 @@ from .sync_discipline import SyncDisciplinePass, SyncSite
 ALL_PASSES = (LockDisciplinePass, SyncDisciplinePass, DonationPass)
 
 _FASTPATH_PARTS = ("serving", "models")
+# Individual fast-path files outside those packages.  core/store.py hosts
+# the SpillPool the engine parks preempted KV into — it sits on the
+# spill/unpark path, so it must stay inside the one-sync-site budget (it is
+# pure host code: ZERO sync sites of its own) without dragging the whole
+# offline ``core`` package into the sync pass.
+_FASTPATH_FILES = ("core/store.py",)
 MAX_SYNC_SITES = 1
 
 
 def _in_fastpath(path: str) -> bool:
-    parts = path.replace("\\", "/").split("/")
-    return any(p in parts for p in _FASTPATH_PARTS)
+    norm = path.replace("\\", "/")
+    parts = norm.split("/")
+    return (any(p in parts for p in _FASTPATH_PARTS)
+            or any(norm.endswith(f) for f in _FASTPATH_FILES))
 
 
 def lint_paths(paths: list[str]) -> list[Finding]:

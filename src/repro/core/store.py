@@ -308,3 +308,103 @@ class CascadeStore:
     def close(self) -> None:
         for w in self.workers.values():
             w.close()
+
+
+class SpillPool:
+    """Host-side parking lot for preempted KV (ROADMAP item 2's missing
+    piece: before this, spilled KV could only re-home IMMEDIATELY on a
+    failover sibling — ``PagedCacheManager.spill_device`` had nowhere to
+    park).
+
+    Entries are opaque to the pool (the engine parks
+    ``kvcache.SpilledKV`` host copies pulled through its one sync site);
+    capacity is accounted in KV BLOCKS because that is the unit the device
+    pool frees and the unit a resume re-acquires.  When ``store`` is given,
+    each parked entry is also published as a Cascade object under
+    ``prefix/<request_id>`` on the store's volatile pool — so a sibling
+    replica (same node, shared store) can unpark a session that was
+    preempted on a replica that later died, and observers can watch spill
+    traffic like any other pool.  The store has no per-key delete, so
+    unpark/discard/evict write a ``None`` TOMBSTONE version; readers of the
+    pool must treat a ``None`` payload as absent (``unpark`` does).
+
+    Bounded: parking beyond ``capacity_blocks`` evicts the OLDEST parked
+    entries first (their sessions fall back to prompt replay — a
+    correctness-preserving downgrade, exactly the failover fallback), and a
+    single entry larger than the whole pool is refused (``park`` → False,
+    caller replays).  Driver-thread-only by design, like the allocator it
+    shadows: every park/unpark happens inside an engine tick on the
+    deployment's driver, so there is no lock to take.
+    """
+
+    def __init__(self, *, capacity_blocks: int = 256,
+                 store: "CascadeStore | None" = None,
+                 prefix: str = "/spill") -> None:
+        self.capacity_blocks = capacity_blocks
+        self.store = store
+        self.prefix = prefix.rstrip("/")
+        self._entries: dict[str, tuple[Any, int]] = {}  # rid -> (entry, blocks)
+        self.blocks = 0          # gauge: blocks currently parked
+        self.parked = 0          # counters, cumulative
+        self.unparked = 0
+        self.evicted = 0
+
+    def _publish(self, request_id: str, entry: Any) -> None:
+        if self.store is not None:
+            self.store.put(f"{self.prefix}/{request_id}", entry)
+
+    def park(self, request_id: str, entry: Any, n_blocks: int) -> bool:
+        """Park a spilled session's KV; False when it can never fit (the
+        caller falls back to prompt replay).  Evicts oldest-first to make
+        room — evicted sessions also degrade to replay on resume."""
+        if n_blocks > self.capacity_blocks:
+            return False
+        self.discard(request_id)  # re-park replaces (failover double-spill)
+        while self.blocks + n_blocks > self.capacity_blocks:
+            old_rid, (_, old_blocks) = next(iter(self._entries.items()))
+            del self._entries[old_rid]
+            self.blocks -= old_blocks
+            self.evicted += 1
+            self._publish(old_rid, None)
+        self._entries[request_id] = (entry, n_blocks)
+        self.blocks += n_blocks
+        self.parked += 1
+        self._publish(request_id, entry)
+        return True
+
+    def unpark(self, request_id: str) -> Any | None:
+        """Take a parked entry out (resume path); None when absent/evicted.
+        Falls back to the store copy when another replica parked it (this
+        pool instance never saw the park but the object is on the shared
+        pool) — tombstones read as absent."""
+        got = self._entries.pop(request_id, None)
+        if got is not None:
+            entry, n_blocks = got
+            self.blocks -= n_blocks
+            self.unparked += 1
+            self._publish(request_id, None)
+            return entry
+        if self.store is not None:
+            obj = self.store.get(f"{self.prefix}/{request_id}")
+            if obj is not None and obj.payload is not None:
+                self.unparked += 1
+                self._publish(request_id, None)
+                return obj.payload
+        return None
+
+    def discard(self, request_id: str) -> None:
+        """Drop a parked entry without resuming (request completed via
+        replay, expired, or failed)."""
+        got = self._entries.pop(request_id, None)
+        if got is not None:
+            self.blocks -= got[1]
+            self._publish(request_id, None)
+
+    def has(self, request_id: str) -> bool:
+        return request_id in self._entries
+
+    def stats(self) -> dict[str, int]:
+        return {"spill_pool_blocks": self.blocks,
+                "spill_pool_parked": self.parked,
+                "spill_pool_unparked": self.unparked,
+                "spill_pool_evicted": self.evicted}

@@ -71,13 +71,13 @@ from repro.core.dispatcher import LambdaHandle
 from repro.core.objects import CascadeObject
 from repro.core.pools import (DispatchPolicy, Persistence, PoolSpec,
                               affinity_shard_hash)
-from repro.core.store import CascadeStore, Worker
+from repro.core.store import CascadeStore, SpillPool, Worker
 from repro.models import supports_paged
 from repro.models.config import ModelConfig
 
 from .engine import ServeEngine
 from .faults import InjectedFault, ReplicaCrashed
-from .scheduler import Request, Scheduler
+from .scheduler import Request, Scheduler, virtual_deadline
 
 # key = /serve/<model>/req/<session>/<request_id> → 5 components; hashing the
 # first 4 ("serve", model, "req", session) gives per-session affinity.
@@ -103,7 +103,8 @@ class ModelDeployment:
                  token_budget: int | None, watermark: int | None,
                  seed_base: int, spec_k: int = 0,
                  watchdog_s: float | None = None, retry_budget: int = 2,
-                 retry_backoff_s: float = 0.002) -> None:
+                 retry_backoff_s: float = 0.002, preempt: bool = False,
+                 spill_capacity_blocks: int = 256) -> None:
         if n_replicas > len(node.workers):
             raise ValueError(
                 f"deployment {name!r} wants {n_replicas} replicas but the "
@@ -129,6 +130,24 @@ class ModelDeployment:
             replication=n_replicas, dispatch=policy,
             shard_hash=session_hash), worker_ids=self.worker_ids)
         node.store.create_pool(PoolSpec(path=self.out_prefix, replication=1))
+        # Preemption (opt-in, paged only): ONE deployment-wide spill pool,
+        # store-backed under /spill/<name>, shared by every replica engine —
+        # so a session preempted on replica A whose replica later dies can
+        # still be unparked by the sibling its re-homed request lands on.
+        # Engines park/unpark on the driver thread only (tick + mark_down),
+        # so the shared instance needs no lock.
+        self.preempt = bool(preempt)
+        if self.preempt and not self.paged:
+            raise ValueError(f"deployment {name!r}: preemption needs the "
+                             f"paged path (KV blocks to spill)")
+        self.spill_pool: SpillPool | None = None
+        self.spill_prefix = f"/spill/{name}"
+        if self.preempt:
+            node.store.create_pool(PoolSpec(path=self.spill_prefix,
+                                            replication=1))
+            self.spill_pool = SpillPool(
+                capacity_blocks=spill_capacity_blocks, store=node.store,
+                prefix=self.spill_prefix)
         self.engines: list[ServeEngine] = []
         for r in range(n_replicas):
             kw: dict[str, Any] = dict(paged=self.paged)
@@ -137,7 +156,8 @@ class ModelDeployment:
                           prefix_cache=prefix_cache,
                           devstore=node.kv_store(),
                           kv_key=f"/kv/{name}/replica{r}/pool",
-                          token_budget=token_budget, spec_k=spec_k)
+                          token_budget=token_budget, spec_k=spec_k,
+                          spill_pool=self.spill_pool, preempt=self.preempt)
             self.engines.append(ServeEngine(
                 cfg, params, n_slots=n_slots, max_len=max_len,
                 temperature=temperature, scheduler=Scheduler(n_replicas=1),
@@ -173,6 +193,9 @@ class ModelDeployment:
         self.completed = 0
         self.shed = 0            # over-watermark arrivals refused outright
         self.redirected = 0      # over-watermark arrivals moved to a sibling
+        self.preempt_admits = 0  # over-watermark arrivals admitted anyway
+        #                          because the target held a lower-priority
+        #                          in-flight victim (preempt-before-shed)
         self.listener_errors = 0  # on_done callbacks that raised (and were
         #                           contained so the completion still landed)
         # ------------------------------------------------- fault tolerance
@@ -233,6 +256,30 @@ class ModelDeployment:
             if d < self.watermark and (best is None or d < best_depth):
                 best, best_depth = r, d
         return best
+
+    def _can_preempt_for(self, req: Request, replica: int) -> bool:
+        """Whether admitting ``req`` over the watermark is justified by the
+        EDF policy: the target holds some request, in a DIFFERENT session,
+        with a strictly later virtual deadline — either IN FLIGHT (the
+        engine's tick-entry preemption can spill it to make room) or still
+        QUEUED (``req`` will issue ahead of it, so the watermark's wait
+        bound on this arrival holds; the later-deadline entry was already
+        accepted and merely keeps its place).  A lock-free heuristic read
+        over the engine's slot maps and its scheduler's arrival deque
+        (``list(deque)`` snapshots atomically under the GIL — same
+        discipline as ``_least_loaded_sibling``: the watermark bounds
+        growth, so an off-by-one race admits at most one extra request,
+        which the next tick's preemption or shed absorbs)."""
+        if not self.preempt:
+            return False
+        eng = self.engines[replica]
+        vdl = virtual_deadline(req)
+        queued = list(eng.scheduler.waiting[eng.replica_id])
+        inflight = [r for m in (eng.prefilling, eng.live)
+                    for r in list(m.values())]
+        return any(r.session_key != req.session_key
+                   and virtual_deadline(r) > vdl
+                   for r in inflight + queued)
 
     def _shed(self, req: Request, replica: int, depth: int) -> None:
         """MultiTASC++-style shed: refuse with a STRUCTURED reason so the
@@ -328,20 +375,10 @@ class ModelDeployment:
                 self.mark_down(r, "stalled")
 
     def _fold_for_replay(self, req: Request) -> bool:
-        """Fold the not-yet-folded emissions into the prompt so a sibling's
-        replay PREFILLS them and decode resumes the stream exactly (greedy
-        decoding stays bit-identical to the uninterrupted run).  False for
-        embeds prompts with emissions — tokens can't concatenate onto an
-        embedding matrix, so those sessions can't be replayed."""
-        new = req.tokens[req.replay_offset:]
-        if not new:
-            return True
-        p = np.asarray(req.prompt)
-        if not np.issubdtype(p.dtype, np.integer):
-            return False
-        req.prompt = np.concatenate([p, np.asarray(new, p.dtype)])
-        req.replay_offset = len(req.tokens)
-        return True
+        """Replay folding now lives on the request itself
+        (``Request.fold_for_replay`` — the preemption resume path needs it
+        engine-side too); kept as a thin delegate for callers/tests."""
+        return req.fold_for_replay()
 
     def _re_home(self, req: Request, spilled) -> None:
         """Move one evacuated request to a healthy sibling: KV migration
@@ -406,6 +443,8 @@ class ModelDeployment:
                       max_new_tokens=int(payload.get("max_new_tokens", 16)),
                       draft_tokens=payload.get("draft"),
                       deadline_s=payload.get("deadline_s"))
+        if payload.get("slo") is not None:
+            req.slo = str(payload["slo"])
         if "t0" in payload:
             # deadline budgets are measured from CLIENT submit time, not
             # from when the upcall got scheduled
@@ -425,12 +464,23 @@ class ModelDeployment:
             depth = self.queue_depth(target) - 1
             if depth >= self.watermark:
                 sibling = self._least_loaded_sibling(target)
-                if sibling is None:
+                if sibling is not None:
+                    target = sibling
+                    with self._lock:
+                        self.redirected += 1
+                elif self._can_preempt_for(req, target):
+                    # preempt-before-shed: every sibling is saturated, but
+                    # the target holds an in-flight request with a strictly
+                    # later virtual deadline — admit over the watermark and
+                    # let the engine's tick-entry preemption make room by
+                    # spilling that victim, instead of refusing work the
+                    # EDF policy says should run first.  The overshoot is
+                    # bounded: one admission per arrival, one spill per tick.
+                    with self._lock:
+                        self.preempt_admits += 1
+                else:
                     self._shed(req, target, depth)
                     return request_id
-                target = sibling
-                with self._lock:
-                    self.redirected += 1
         # Bounded retry with capped exponential backoff: a transient
         # injected/real submit failure (or a replica crashing between the
         # health check above and the enqueue) moves the request to the next
@@ -470,6 +520,10 @@ class ModelDeployment:
         ``<request_id>/error`` so clients can tell refusal from a short
         generation (read it with ``error()``)."""
         req.done_s = req.done_s or time.monotonic()
+        if self.spill_pool is not None:
+            # terminal state reached outside an engine (shed, failover
+            # failure): a preempted request's parked KV must not leak
+            self.spill_pool.discard(req.request_id)
         for fn in list(self.on_done):
             try:
                 fn(req)
@@ -493,15 +547,19 @@ class ModelDeployment:
     # ------------------------------------------------------------- clients
     def submit(self, session_key: str, request_id: str, prompt: Any, *,
                max_new_tokens: int = 16, draft_tokens: Any = None,
-               deadline_s: float | None = None):
+               deadline_s: float | None = None, slo: str | None = None):
         """Fire a request into the fast path (trigger_put; nothing stored).
         ``draft_tokens`` rides in the payload for speculative deployments
         (``spec_k > 0``): token i is a guess for generated token i — this is
         how a cascade plants the light model's generation as the heavy
         model's draft.  ``deadline_s`` is the request's latency budget from
-        THIS call; transient store-seam failures retry with capped
-        exponential backoff, and exhaustion completes the request with a
-        structured error rather than raising after it was counted."""
+        THIS call; ``slo`` tags its class ("interactive" | "batch", default
+        batch) — the issue queue derives priority from the class target when
+        no explicit deadline is given, and preempting deployments may evict
+        a batch victim's KV for an interactive waiter.  Transient store-seam
+        failures retry with capped exponential backoff, and exhaustion
+        completes the request with a structured error rather than raising
+        after it was counted."""
         if self._stopped:
             raise RuntimeError(f"deployment {self.name!r} is stopped")
         key = f"{self.req_prefix}/{session_key}/{request_id}"
@@ -515,6 +573,8 @@ class ModelDeployment:
             payload["draft"] = np.asarray(draft_tokens, np.int32)
         if deadline_s is not None:
             payload["deadline_s"] = float(deadline_s)
+        if slo is not None:
+            payload["slo"] = str(slo)
         delay = self.retry_backoff_s
         for attempt in range(self.retry_budget + 1):
             try:
@@ -555,12 +615,19 @@ class ModelDeployment:
         """Latency/throughput/admission stats across this deployment."""
         ttft = sorted(t for e in self.engines for t in e.stats.ttft_s)
         tpot = sorted(t for e in self.engines for t in e.stats.tpot_s)
+        queue_waits: dict[str, list[float]] = {}
+        for e in self.engines:
+            for slo, ws in e.stats.queue_wait_s.items():
+                queue_waits.setdefault(slo, []).extend(ws)
+        for ws in queue_waits.values():
+            ws.sort()
 
         def pct(xs: list[float], q: float) -> float:
             return xs[min(len(xs) - 1, int(q * len(xs)))] if xs else float("nan")
 
         with self._lock:
             shed, redirected = self.shed, self.redirected
+            preempt_admits = self.preempt_admits
             submitted, completed = self.submitted, self.completed
             listener_errors = self.listener_errors
             fault = {"down": dict(self.down),
@@ -615,6 +682,20 @@ class ModelDeployment:
                                     for e in self.engines),
             "adopted_sessions": sum(e.stats.adopted_sessions
                                     for e in self.engines),
+            # overload preemption (issue-queue scheduler; zeros when off)
+            "preempt": self.preempt,
+            "preemptions": sum(e.stats.preemptions for e in self.engines),
+            "spilled_blocks": sum(e.stats.spilled_blocks
+                                  for e in self.engines),
+            "resumes": sum(e.stats.resumes for e in self.engines),
+            "preempt_admits": preempt_admits,
+            **(self.spill_pool.stats() if self.spill_pool is not None
+               else {}),
+            # per-SLO-class queue wait (issued_s - arrived_s) histograms
+            "queue_wait_s": {
+                slo: {"n": len(ws),
+                      "p50_s": pct(ws, 0.50), "p99_s": pct(ws, 0.99)}
+                for slo, ws in sorted(queue_waits.items())},
             "ttft_p50_s": pct(ttft, 0.50), "ttft_p99_s": pct(ttft, 0.99),
             "tpot_p50_s": pct(tpot, 0.50), "tpot_p99_s": pct(tpot, 0.99),
         }
@@ -633,6 +714,8 @@ class ModelDeployment:
             self.node.store.unregister_lambda(handle, [wid])
         self.node.store.remove_pool(self.req_prefix)
         self.node.store.remove_pool(self.out_prefix)
+        if self.spill_pool is not None:
+            self.node.store.remove_pool(self.spill_prefix)
         if self.paged and self.node._kv_store is not None:
             self.node._kv_store.remove_prefix(f"/kv/{self.name}")
         self.node.deployments.pop(self.name, None)
@@ -683,7 +766,9 @@ class ServeNode:
                watermark: int | None = None,
                spec_k: int = 0, watchdog_s: float | None = None,
                retry_budget: int = 2,
-               retry_backoff_s: float = 0.002) -> ModelDeployment:
+               retry_backoff_s: float = 0.002,
+               preempt: bool = False,
+               spill_capacity_blocks: int = 256) -> ModelDeployment:
         """Host ``cfg`` under ``/serve/<name>``; see ``ModelDeployment``.
         ``watermark`` bounds each replica's queue depth (None = unbounded).
         ``spec_k`` > 0 enables speculative decoding on paged engines: up to
@@ -692,6 +777,11 @@ class ServeNode:
         busy replica with no tick progress within the bound is marked down
         and its sessions re-home to siblings.  ``retry_budget`` /
         ``retry_backoff_s`` bound the transient-submit retry loop.
+        ``preempt`` (paged only) arms EDF preemption: under pressure an
+        engine may spill one in-flight victim's KV per tick into a
+        deployment-wide host-side spill pool (``spill_capacity_blocks``)
+        and admission turns preempt-before-shed for higher-priority
+        arrivals.
         """
         if name in self.deployments:
             raise ValueError(f"deployment {name!r} already exists")
@@ -705,7 +795,8 @@ class ServeNode:
             prefix_cache=prefix_cache, token_budget=token_budget,
             watermark=watermark, seed_base=seed_base, spec_k=spec_k,
             watchdog_s=watchdog_s, retry_budget=retry_budget,
-            retry_backoff_s=retry_backoff_s)
+            retry_backoff_s=retry_backoff_s, preempt=preempt,
+            spill_capacity_blocks=spill_capacity_blocks)
         self.deployments[name] = dep
         return dep
 
@@ -1081,7 +1172,9 @@ class ServeCluster:
                  spec_k: int = 0,
                  watchdog_s: float | None = None,
                  retry_budget: int = 2,
-                 retry_backoff_s: float = 0.002) -> None:
+                 retry_backoff_s: float = 0.002,
+                 preempt: bool = False,
+                 spill_capacity_blocks: int = 256) -> None:
         self.node = ServeNode(n_workers=n_replicas)
         self.dep = self.node.deploy(
             model_name or cfg.name, cfg, params, n_replicas=n_replicas,
@@ -1090,7 +1183,8 @@ class ServeCluster:
             num_blocks=num_blocks, prefix_cache=prefix_cache,
             token_budget=token_budget, watermark=watermark, spec_k=spec_k,
             watchdog_s=watchdog_s, retry_budget=retry_budget,
-            retry_backoff_s=retry_backoff_s)
+            retry_backoff_s=retry_backoff_s, preempt=preempt,
+            spill_capacity_blocks=spill_capacity_blocks)
         self.cfg = cfg
         self.policy = policy
 
@@ -1129,10 +1223,11 @@ class ServeCluster:
 
     # ------------------------------------------------------------- clients
     def submit(self, session_key: str, request_id: str, prompt: Any, *,
-               max_new_tokens: int = 16, deadline_s: float | None = None):
+               max_new_tokens: int = 16, deadline_s: float | None = None,
+               slo: str | None = None):
         return self.dep.submit(session_key, request_id, prompt,
                                max_new_tokens=max_new_tokens,
-                               deadline_s=deadline_s)
+                               deadline_s=deadline_s, slo=slo)
 
     def result(self, request_id: str) -> np.ndarray | None:
         return self.dep.result(request_id)

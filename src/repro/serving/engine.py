@@ -97,7 +97,7 @@ from repro.models.config import ModelConfig
 from .draft import DraftSource, default_draft_source
 from .faults import ReplicaCrashed
 from .kvcache import CacheManager, PagedCacheManager, SpilledKV
-from .scheduler import Request, Scheduler
+from .scheduler import Request, Scheduler, virtual_deadline
 
 
 @dataclass
@@ -127,8 +127,17 @@ class EngineStats:
     #                                strict host_syncs == ticks)
     spilled_sessions: int = 0      # live sessions spilled off this replica
     adopted_sessions: int = 0      # migrated sessions restored INTO this one
+    # overload preemption (issue-queue scheduler, preempt=True):
+    preemptions: int = 0           # in-flight victims evicted for a waiter
+    spilled_blocks: int = 0        # KV blocks pulled host-side by spills
+    resumes: int = 0               # preempted requests restored via adopt()
+    #                                (replay-fallback resumes re-issue as
+    #                                ordinary admissions and are NOT counted)
     ttft_s: list = field(default_factory=list)     # time to first token
     tpot_s: list = field(default_factory=list)     # time per output token
+    # per-SLO-class queue wait (issued_s - arrived_s), recorded once at a
+    # request's FIRST issue (a preempted request keeps its original wait)
+    queue_wait_s: dict = field(default_factory=dict)   # slo -> [seconds]
 
     def spec_acceptance_rate(self) -> float:
         """Fraction of drafted tokens the target model confirmed."""
@@ -147,7 +156,9 @@ class ServeEngine:
                  kv_key: str | None = None,
                  token_budget: int | None = None,
                  spec_k: int = 0,
-                 draft_source: DraftSource | None = None) -> None:
+                 draft_source: DraftSource | None = None,
+                 spill_pool=None,
+                 preempt: bool = False) -> None:
         self.cfg = cfg
         self.params = params
         self.paged = supports_paged(cfg) if paged is None else paged
@@ -179,6 +190,18 @@ class ServeEngine:
         else:
             self.cm = CacheManager(cfg, n_slots, max_len)
             self.token_budget = None
+        # Preemption (opt-in, paged only): under pressure the tick may evict
+        # one in-flight victim with a strictly later virtual deadline than
+        # the best waiting request, spilling its KV through the one sync
+        # site into ``spill_pool`` (core.store.SpillPool; parked entries
+        # restore via adopt(), with prompt replay when the pool evicted
+        # them).  Off by default: a non-preempting engine's tick stream and
+        # sync accounting are bit-identical to before this feature existed.
+        self.preempt = bool(preempt)
+        self.spill_pool = spill_pool
+        if self.preempt and not self.paged:
+            raise ValueError("preemption spills paged KV blocks; the dense "
+                             "path has no per-request blocks to spill")
         self.scheduler = scheduler or Scheduler(n_replicas=1)
         self.replica_id = replica_id
         self.temperature = temperature
@@ -389,10 +412,19 @@ class ServeEngine:
 
     # ==================================================== dense admission
     def _admit_dense(self) -> None:
+        # Sweep expired entries IMMEDIATELY before batch admission (the
+        # tick-entry sweep is not enough when admission is driven outside
+        # tick(), e.g. run loops calling _admit_dense directly): a dead head
+        # must never consume a free slot or a prefill-budget lane, and must
+        # error out as deadline_exceeded rather than be served late.
+        for req in self.scheduler.pop_expired(self.replica_id):
+            self._deadline_error(req, "queued")
         free = self.cm.n_slots - self.cm.n_active
         reqs = self.scheduler.admit(self.replica_id, free)
         if not reqs:
             return
+        for req in reqs:
+            self._record_issue(req)
         # Batched multi-request prefill: batch CONTIGUOUS same-shape runs
         # (equal-length bucketing — no padding, so ring caches and SSM state
         # stay exact), one jitted prefill and ONE host pull per run.
@@ -467,8 +499,20 @@ class ServeEngine:
 
     def _complete(self, req: Request) -> None:
         req.done_s = time.monotonic()
+        if self.spill_pool is not None:
+            # a preempted request reaching ANY terminal state (done, expired
+            # in queue, rejected) must not leak its parked KV
+            self.spill_pool.discard(req.request_id)
         if self.on_complete is not None:
             self.on_complete(req)
+
+    def _record_issue(self, req: Request) -> None:
+        """Queue-wait bookkeeping at FIRST issue (slot granted): a preempted
+        request keeps its original issue time — its wait was observed once."""
+        if req.issued_s is None:
+            req.issued_s = time.monotonic()
+            self.stats.queue_wait_s.setdefault(req.slo, []).append(
+                req.issued_s - req.arrived_s)
 
     # ================================================== unified paged tick
     def _pack_chunk(self, slot: int, toks: np.ndarray, pos: np.ndarray,
@@ -508,6 +552,26 @@ class ServeEngine:
                 max_blocks=self.cm.num_blocks - 1)
             if req is None:
                 break
+            if self.spill_pool is not None and req.tokens:
+                # resume path: a preempted request re-issuing.  Restore its
+                # parked KV via adopt (the slot decodes again from the NEXT
+                # tick — this tick packs nothing for it, so no lane math
+                # changes); when the pool evicted the entry, fall through to
+                # prompt replay below.
+                parked = self.spill_pool.unpark(req.request_id)
+                if parked is not None and self.adopt(req, parked):
+                    self.stats.resumes += 1
+                    self._record_issue(req)
+                    free -= 1
+                    continue
+            if len(req.tokens) > req.replay_offset:
+                # preempted emissions whose parked KV is gone (evicted, or
+                # adopt couldn't place it): fold them into the prompt so
+                # replay-prefill reproduces the stream exactly
+                if not req.fold_for_replay():
+                    self._reject(req, "cannot replay preempted request: "
+                                      "embeds prompt")
+                    continue
             err = self._validate(req)
             if err is not None:
                 # unservable request enqueued behind submit()'s back (e.g.
@@ -531,6 +595,7 @@ class ServeEngine:
                 # request's (see _block_cost) — correct it so admission
                 # headroom stays exact across a failover
                 seq.reserve = self._block_cost(req)
+            self._record_issue(req)
             free -= 1
             self.stats.prompt_tokens += len(p)
             self.stats.prefix_hit_tokens += seq.reused
@@ -590,10 +655,72 @@ class ServeEngine:
                 lanes_left -= len(valid)
         return plans
 
+    # ------------------------------------------------- preemption (opt-in)
+    def _maybe_preempt(self) -> None:
+        """Tick-entry pressure check: when the best waiting request (the one
+        the next issue would pick) cannot issue for lack of slots/blocks,
+        evict AT MOST ONE in-flight victim whose virtual deadline is
+        strictly later — EDF applied across the issue boundary.  One victim
+        per tick keeps the policy damped (no convoys of spills from a
+        single burst) and bounds the extra sync cost at one spill/tick."""
+        waiter = self.scheduler.best_waiting(self.replica_id)
+        if waiter is None:
+            return
+        need = self._block_cost(waiter)
+        if need > self.cm.num_blocks - 1:
+            return                    # unservable: the rejection path's job
+        if (self.cm.n_slots - self.cm.n_active > 0
+                and need <= self.cm.available_for_admission()):
+            return                    # will issue normally this tick
+        w_vdl = virtual_deadline(waiter)
+        victim_slot, victim, v_vdl = None, None, w_vdl
+        for slot, req in list(self.prefilling.items()) + list(self.live.items()):
+            if req.session_key == waiter.session_key:
+                continue              # same session: waiter can't overtake
+            vdl = virtual_deadline(req)
+            if vdl > v_vdl:
+                victim_slot, victim, v_vdl = slot, req, vdl
+        if victim is not None:
+            self.preempt_slot(victim_slot, victim)
+
+    def preempt_slot(self, slot: int, req: Request) -> None:
+        """Evict one in-flight request and requeue it at the head of its
+        queue (per-session order preserved — it is again the oldest waiting
+        entry of its session).
+
+        Mid-prefill victims release their blocks and replay from the prompt
+        — nothing was emitted, so replay is exact and free.  Decoding
+        victims spill their KV through the ONE sync site (counted in
+        ``spill_syncs``: a preempting tick satisfies ``host_syncs == ticks
+        + spill_syncs``; non-preempting ticks keep the strict equality) and
+        park it in the spill pool; if the park fails — no pool, pool too
+        small — the emissions fold into the prompt NOW so the eventual
+        re-issue replays the stream bit-identically."""
+        if slot in self.prefilling:
+            self.prefilling.pop(slot)
+            self.cm.release(slot)
+        else:
+            self.live.pop(slot)
+            # no pool to park into → skip the spill entirely (and its sync):
+            # the emissions fold for replay below, and host_syncs == ticks
+            # stays strict on a pool-less preempting engine
+            spilled = self.spill(slot) if self.spill_pool is not None else None
+            self.cm.release(slot)
+            parked = (spilled is not None
+                      and self.spill_pool.park(req.request_id, spilled,
+                                               spilled.n_blocks))
+            if not parked:
+                req.fold_for_replay()   # paged prompts are tokens: can't fail
+        req.slot = None
+        self.stats.preemptions += 1
+        self.scheduler.requeue(self.replica_id, req)
+
     def _tick_mixed(self) -> int:
         """ONE fixed-shape mixed step: decode rows (each with up to spec_k
         verified draft tokens), + prefill chunks packed against the token
         budget, one dispatch, one host sync."""
+        if self.preempt:
+            self._maybe_preempt()
         T = self.token_budget
         K = self.spec_k
         toks = np.zeros(T, np.int32)
@@ -769,15 +896,16 @@ class ServeEngine:
             return self._tick_mixed()
         return self._tick_dense()
 
-    # ------------------------------------------------- failover (deployment)
+    # --------------------------------------- spill (failover + preemption)
     def spill(self, slot: int) -> SpilledKV | None:
-        """Spill one live slot's KV blocks to host (driver thread, on a
-        replica being marked down).  The device-side gather happens in the
-        cache manager; the ONE host transfer goes through ``_to_host`` —
-        the same sanctioned sync site as the tick pull — and is counted in
-        ``spill_syncs`` so the invariant on a dead replica is
-        ``host_syncs == ticks + spill_syncs`` (survivors keep the strict
-        ``host_syncs == ticks``)."""
+        """Spill one live slot's KV blocks to host (driver thread): on a
+        replica being marked down (failover), or on a preemption victim
+        being evicted for a higher-priority waiter.  The device-side gather
+        happens in the cache manager; the ONE host transfer goes through
+        ``_to_host`` — the same sanctioned sync site as the tick pull — and
+        is counted in ``spill_syncs`` so the invariant on a spilling
+        replica is ``host_syncs == ticks + spill_syncs`` (replicas that
+        never spill keep the strict ``host_syncs == ticks``)."""
         if not self.paged:
             return None
         seq = self.cm.slots[slot]
@@ -786,6 +914,7 @@ class ServeEngine:
         host_blocks = self._to_host(self.cm.spill_device(slot))
         self.stats.spill_syncs += 1
         self.stats.spilled_sessions += 1
+        self.stats.spilled_blocks += len(seq.table)
         return SpilledKV(request_id=seq.request_id, pos=seq.pos,
                          n_blocks=len(seq.table),
                          block_size=self.cm.block_size, blocks=host_blocks)

@@ -25,6 +25,17 @@ and publish) means a fault landing inside a tick could strand the pool in
 an unreadable state; firing at the seam keeps every recovery path exercised
 without modeling torn device state.
 
+Interplay with preemption (``ServeEngine(preempt=True)``): the tick seam
+fires BEFORE ``_maybe_preempt``, so a crash can never land between a
+victim's spill and its requeue — a preemption either completed on an
+earlier tick (the victim is back in the queue, its KV parked in the
+deployment-shared ``SpillPool``) or never started.  A crashed replica's
+evacuation then drains preempted requests as ordinary QUEUED entries;
+``_re_home`` submits them to a sibling, whose admission unparks the shared
+pool entry and ``adopt``s it — or falls back to prompt replay if the pool
+evicted it.  Either way the stream stays bit-identical under greedy
+decoding, which is what the chaos suite asserts with preemption enabled.
+
 Everything here is pure host logic — no jax, one internal lock — so the
 PR 6 sanitizers (lock-order tracker, sync-site budget) hold trivially and
 the static sync-site budget over ``serving/`` stays at one.

@@ -106,16 +106,36 @@ _scatter_jit = jax.jit(_scatter_blocks, donate_argnums=(0,))
 
 @dataclass
 class SpilledKV:
-    """A live session's committed KV, spilled off a (dead) replica: the
-    host-side tree of its table's blocks in TABLE ORDER, plus the positions
-    they back.  Restoring into a sibling allocates the same COUNT of fresh
-    blocks and scatters these in — the session resumes decoding at ``pos``
-    as if it had never moved (KV is valid over [0, pos))."""
+    """A live session's committed KV, spilled off a replica: the host-side
+    tree of its table's blocks in TABLE ORDER, plus the positions they back.
+    Restoring allocates the same COUNT of fresh blocks and scatters these in
+    — the session resumes decoding at ``pos`` as if it had never moved (KV
+    is valid over [0, pos)).
+
+    Two producers, one restore path: failover spills a DEAD replica's live
+    slots (``engine.evacuate`` → deployment ``_re_home`` adopts immediately
+    on a sibling), and preemption spills a low-priority victim's slot into
+    the host-side ``core.store.SpillPool``, where the entry PARKS — as a
+    Cascade object when the pool is store-backed — until the request
+    re-issues and ``engine.adopt`` unparks it.  Either way ``adopt`` is the
+    single restore site, with prompt replay (``Request.fold_for_replay``)
+    as the fallback when the entry was evicted or geometry changed."""
     request_id: str
     pos: int                      # next position to write on resume
     n_blocks: int
     block_size: int
     blocks: Any                   # host pytree, leaves (..., n_blocks, bs, K, D)
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes this entry pins while parked (spill-pool accounting
+        is in blocks; bytes are for observability).  A property, numpy
+        style, so ``CascadeObject.nbytes()`` sizes a parked entry correctly
+        when the spill pool publishes it to the store."""
+        total = 0
+        for leaf in jax.tree.leaves(self.blocks):
+            total += np.asarray(leaf).nbytes
+        return total
 
 
 @dataclass

@@ -1,0 +1,206 @@
+"""Preemption + resume: bit-parity, block accounting, spill-pool lifecycle.
+
+The acceptance gate for the issue-queue scheduler's preemption: a greedy
+stream interrupted by a preemption — KV spilled to the host-side pool and
+restored via adopt(), OR lost and replayed from the folded prompt — must be
+bit-identical to the uninterrupted run, with the allocator drained to
+exactly zero and every spilled block freed exactly once.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.pools import PoolSpec
+from repro.core.store import CascadeStore, SpillPool, Worker
+from repro.models import ModelConfig, init_params
+from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import Request, SLO_BATCH, SLO_INTERACTIVE
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=32, n_heads=4,
+                  n_kv_heads=2, d_ff=64, vocab_size=128, dtype="float32",
+                  q_chunk=16)
+MAX_NEW_BATCH = 8
+MAX_NEW_INTER = 3
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _prompts(seed):
+    rng = np.random.default_rng(seed)
+    return {
+        "b0": rng.integers(1, CFG.vocab_size, (8,)).astype(np.int32),
+        "b1": rng.integers(1, CFG.vocab_size, (8,)).astype(np.int32),
+        "i0": rng.integers(1, CFG.vocab_size, (4,)).astype(np.int32),
+    }
+
+
+def _req(rid, prompt, slo):
+    max_new = MAX_NEW_INTER if slo == SLO_INTERACTIVE else MAX_NEW_BATCH
+    return Request(request_id=rid, session_key=f"sess-{rid}", prompt=prompt,
+                   max_new_tokens=max_new, slo=slo)
+
+
+def _baseline(params, prompts):
+    """Uninterrupted greedy run with slack capacity: no pressure, no
+    preemption — the reference streams (greedy depends only on the prompt,
+    so slot/tick placement differences cannot change them)."""
+    eng = ServeEngine(CFG, params, n_slots=8, max_len=48, temperature=0.0,
+                      block_size=4, num_blocks=64, prefix_cache=False)
+    done = {}
+    eng.on_complete = lambda r: done.setdefault(r.request_id, r)
+    for rid in ("b0", "b1", "i0"):
+        eng.submit(_req(rid, prompts[rid],
+                        SLO_INTERACTIVE if rid == "i0" else SLO_BATCH))
+    eng.run_until_drained()
+    assert eng.stats.preemptions == 0
+    assert eng.stats.host_syncs == eng.stats.ticks
+    return {rid: list(r.tokens) for rid, r in done.items()}
+
+
+def _preempt_run(params, prompts, spill_pool):
+    """Tight engine (2 slots, 10 usable blocks): both batch requests fill
+    it, then an interactive arrival forces a preemption mid-decode."""
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=48, temperature=0.0,
+                      block_size=4, num_blocks=11, prefix_cache=False,
+                      spill_pool=spill_pool, preempt=True)
+    done = {}
+    eng.on_complete = lambda r: done.setdefault(r.request_id, r)
+    eng.submit(_req("b0", prompts["b0"], SLO_BATCH))
+    eng.submit(_req("b1", prompts["b1"], SLO_BATCH))
+    stop = time.monotonic() + 30
+    while not (len(eng.live) == 2
+               and all(r.tokens for r in eng.live.values())):
+        eng.tick()
+        assert time.monotonic() < stop, "batch requests never went live"
+    eng.submit(_req("i0", prompts["i0"], SLO_INTERACTIVE))
+    eng.run_until_drained()
+    assert {r.error for r in done.values()} == {None}
+    return eng, {rid: list(r.tokens) for rid, r in done.items()}
+
+
+def _assert_drained_exactly(eng):
+    """Exact block accounting: the drained pool holds nothing (prefix cache
+    off), every slot is free, and the free list holds each block exactly
+    once — a double-free on the spilled tail would show up as a duplicate
+    (or as blocks_in_use going negative via an over-long free list)."""
+    alloc = eng.cm.alloc
+    assert alloc.blocks_in_use == 0
+    assert all(not s.active for s in eng.cm.slots)
+    assert len(alloc.free) == len(set(alloc.free)) == eng.cm.num_blocks - 1
+    assert eng.cm.available_for_admission() == alloc.available()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_preempt_resume_via_spill_pool_bit_identical(params, seed):
+    prompts = _prompts(seed)
+    ref = _baseline(params, prompts)
+    pool = SpillPool(capacity_blocks=64)
+    eng, got = _preempt_run(params, prompts, pool)
+    assert got == ref
+    assert eng.stats.preemptions >= 1
+    assert eng.stats.resumes >= 1            # restored via adopt, not replay
+    assert eng.stats.spilled_blocks >= 1
+    assert eng.stats.adopted_sessions == eng.stats.resumes
+    # sync discipline: the extra pulls are exactly the preemption spills
+    assert eng.stats.spill_syncs == eng.stats.spilled_sessions >= 1
+    assert eng.stats.host_syncs == eng.stats.ticks + eng.stats.spill_syncs
+    _assert_drained_exactly(eng)
+    # spill-pool lifecycle: everything parked was unparked (resume) —
+    # nothing leaked, nothing evicted at this capacity
+    assert pool.blocks == 0 and pool.evicted == 0
+    assert pool.parked == pool.unparked >= 1
+    # per-class queue-wait histograms saw both classes
+    assert set(eng.stats.queue_wait_s) == {SLO_BATCH, SLO_INTERACTIVE}
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_preempt_resume_via_replay_fallback_bit_identical(params, seed):
+    """Capacity-0 pool: every park is refused, so the victim's emissions
+    fold into its prompt and the resume replays — still bit-identical."""
+    prompts = _prompts(seed)
+    ref = _baseline(params, prompts)
+    pool = SpillPool(capacity_blocks=0)
+    eng, got = _preempt_run(params, prompts, pool)
+    assert got == ref
+    assert eng.stats.preemptions >= 1
+    assert eng.stats.resumes == 0            # no adopt: replay path only
+    assert eng.stats.adopted_sessions == 0
+    assert pool.parked == 0 and pool.blocks == 0
+    # the spill still happened (and was counted) before the park refusal
+    assert eng.stats.host_syncs == eng.stats.ticks + eng.stats.spill_syncs
+    _assert_drained_exactly(eng)
+
+
+def test_preempt_without_pool_keeps_strict_sync_invariant(params):
+    """No pool at all: the victim is never spilled (no wasted sync) — it
+    folds and replays, and host_syncs == ticks stays STRICT."""
+    prompts = _prompts(3)
+    ref = _baseline(params, prompts)
+    eng, got = _preempt_run(params, prompts, None)
+    assert got == ref
+    assert eng.stats.preemptions >= 1
+    assert eng.stats.spill_syncs == 0 and eng.stats.spilled_blocks == 0
+    assert eng.stats.host_syncs == eng.stats.ticks
+    _assert_drained_exactly(eng)
+
+
+def test_preempt_requires_paged_path(params):
+    with pytest.raises(ValueError, match="preemption"):
+        ServeEngine(CFG, params, paged=False, preempt=True)
+
+
+# ============================================================ SpillPool unit
+def test_spill_pool_park_unpark_discard_accounting():
+    pool = SpillPool(capacity_blocks=8)
+    assert pool.park("a", "kv-a", 3)
+    assert pool.park("b", "kv-b", 4)
+    assert pool.blocks == 7 and pool.has("a") and pool.has("b")
+    assert pool.unpark("a") == "kv-a"
+    assert pool.blocks == 4 and not pool.has("a")
+    assert pool.unpark("a") is None          # absent reads as None
+    pool.discard("b")
+    assert pool.blocks == 0
+    assert pool.stats() == {"spill_pool_blocks": 0, "spill_pool_parked": 2,
+                            "spill_pool_unparked": 1, "spill_pool_evicted": 0}
+
+
+def test_spill_pool_evicts_oldest_first_and_refuses_oversized():
+    pool = SpillPool(capacity_blocks=8)
+    assert not pool.park("huge", "kv", 9)    # can never fit: caller replays
+    assert pool.park("a", "kv-a", 4)
+    assert pool.park("b", "kv-b", 4)
+    assert pool.park("c", "kv-c", 4)         # evicts a (oldest) to fit
+    assert not pool.has("a") and pool.has("b") and pool.has("c")
+    assert pool.evicted == 1 and pool.blocks == 8
+    # re-park replaces rather than double-counting
+    assert pool.park("c", "kv-c2", 2)
+    assert pool.blocks == 6 and pool.unpark("c") == "kv-c2"
+
+
+def test_spill_pool_store_backed_publishes_and_tombstones():
+    w = Worker(0, n_upcall_threads=1)
+    store = CascadeStore([w])
+    store.create_pool(PoolSpec(path="/spill/m"))
+    try:
+        pool = SpillPool(capacity_blocks=8, store=store, prefix="/spill/m")
+        pool.park("r1", {"kv": 1}, 2)
+        obj = store.get("/spill/m/r1")
+        assert obj is not None and obj.payload == {"kv": 1}
+        assert pool.unpark("r1") == {"kv": 1}
+        # no per-key delete on the store: unpark writes a None TOMBSTONE,
+        # and a tombstone must read as absent through the pool
+        obj = store.get("/spill/m/r1")
+        assert obj is not None and obj.payload is None
+        assert pool.unpark("r1") is None
+        # a SIBLING pool instance resolves a park it never saw via the store
+        pool.park("r2", {"kv": 2}, 2)
+        sibling = SpillPool(capacity_blocks=8, store=store, prefix="/spill/m")
+        assert sibling.unpark("r2") == {"kv": 2}
+        assert sibling.unpark("r2") is None  # tombstoned for everyone
+    finally:
+        store.close()

@@ -1,0 +1,156 @@
+"""Issue-queue scheduler: SLO classes, EDF priority, per-session FIFO,
+out-of-order readiness.  Pure host-side — no engine, no jax dispatch."""
+import numpy as np
+
+from repro.serving.scheduler import (Request, Scheduler, SLO_BATCH,
+                                     SLO_INTERACTIVE, SLO_TARGETS,
+                                     virtual_deadline)
+
+
+def _req(rid, session="s", *, slo=SLO_BATCH, deadline_s=None, arrived_s=None,
+         max_new=4, prompt_len=4):
+    r = Request(request_id=rid, session_key=session,
+                prompt=np.arange(prompt_len, dtype=np.int32),
+                max_new_tokens=max_new, deadline_s=deadline_s, slo=slo)
+    if arrived_s is not None:
+        r.arrived_s = arrived_s
+    return r
+
+
+def test_virtual_deadline_explicit_beats_class_target():
+    r = _req("r", slo=SLO_BATCH, deadline_s=0.1, arrived_s=100.0)
+    assert virtual_deadline(r) == 100.1
+    r2 = _req("r2", slo=SLO_INTERACTIVE, arrived_s=100.0)
+    assert virtual_deadline(r2) == 100.0 + SLO_TARGETS[SLO_INTERACTIVE]
+
+
+def test_interactive_issues_ahead_of_earlier_batch():
+    s = Scheduler(n_replicas=1)
+    s.submit(_req("b0", "sb", slo=SLO_BATCH, arrived_s=100.0))
+    s.submit(_req("i0", "si", slo=SLO_INTERACTIVE, arrived_s=100.1))
+    got = s.admit_one(0, free_slots=1)
+    assert got.request_id == "i0"
+    assert s.admit_one(0, free_slots=1).request_id == "b0"
+
+
+def test_batch_ages_past_fresh_interactive():
+    # absolute virtual deadlines ARE the aging mechanism: a batch request
+    # older than the class-target gap beats any fresh interactive arrival
+    gap = SLO_TARGETS[SLO_BATCH] - SLO_TARGETS[SLO_INTERACTIVE]
+    s = Scheduler(n_replicas=1)
+    s.submit(_req("b0", "sb", slo=SLO_BATCH, arrived_s=100.0))
+    s.submit(_req("i0", "si", slo=SLO_INTERACTIVE,
+                  arrived_s=100.0 + gap + 0.01))
+    assert s.admit_one(0, free_slots=1).request_id == "b0"
+
+
+def test_uniform_class_degenerates_to_fifo():
+    s = Scheduler(n_replicas=1)
+    for i in range(5):
+        s.submit(_req(f"r{i}", f"s{i}", arrived_s=100.0 + i))
+    order = [s.admit_one(0, free_slots=1).request_id for _ in range(5)]
+    assert order == [f"r{i}" for i in range(5)]
+
+
+def test_per_session_fifo_holds_across_classes():
+    # a session's later INTERACTIVE turn must not overtake its earlier
+    # BATCH turn: only the oldest waiting entry per session is eligible
+    s = Scheduler(n_replicas=1)
+    s.submit(_req("t0", "sess", slo=SLO_BATCH, arrived_s=100.0))
+    s.submit(_req("t1", "sess", slo=SLO_INTERACTIVE, arrived_s=100.1))
+    s.submit(_req("x0", "other", slo=SLO_BATCH, arrived_s=100.2))
+    assert s.admit_one(0, free_slots=1).request_id == "t0"
+    # t1 now IS its session's oldest entry and its class wins over x0
+    assert s.admit_one(0, free_slots=1).request_id == "t1"
+    assert s.admit_one(0, free_slots=1).request_id == "x0"
+
+
+def test_blocked_head_does_not_stall_other_sessions():
+    # out-of-order issue: session A's head can't get blocks; session B's
+    # ready request issues past it, but session A's OWN later turn cannot
+    s = Scheduler(n_replicas=1)
+    s.submit(_req("a0", "sa", arrived_s=100.0))
+    s.submit(_req("a1", "sa", arrived_s=100.1))
+    s.submit(_req("b0", "sb", arrived_s=100.2))
+    cost = {"a0": 8, "a1": 1, "b0": 2}.__getitem__
+
+    def admit(free):
+        return s.admit_one(0, free_slots=1, free_blocks=free,
+                           block_cost=lambda r: cost(r.request_id),
+                           max_blocks=10)
+
+    got = admit(4)
+    assert got is not None and got.request_id == "b0"
+    assert admit(4) is None          # a0 still blocked, a1 still gated
+    got = admit(8)
+    assert got.request_id == "a0"    # blocks freed: session order intact
+    assert admit(8).request_id == "a1"
+
+
+def test_oversized_demand_pops_through_for_rejection():
+    s = Scheduler(n_replicas=1)
+    s.submit(_req("huge", "s", arrived_s=100.0))
+    got = s.admit_one(0, free_slots=1, free_blocks=2,
+                      block_cost=lambda r: 99, max_blocks=10)
+    assert got is not None and got.request_id == "huge"
+
+
+def test_admit_skips_expired_entries():
+    # dense-path satellite: a dead head must not consume a slot or a
+    # prefill-budget lane — admit() leaves it queued for pop_expired
+    s = Scheduler(n_replicas=1, prefill_budget=4)
+    s.submit(_req("dead", "sd", deadline_s=0.0, arrived_s=0.0))
+    s.submit(_req("ok", "so", arrived_s=100.0))
+    got = s.admit(0, free_slots=4)
+    assert [r.request_id for r in got] == ["ok"]
+    assert [r.request_id for r in s.pop_expired(0)] == ["dead"]
+    assert s.pending(0) == 0
+
+
+def test_expired_older_turn_gates_its_sessions_younger_turn():
+    # per-session order is absolute: until the sweep clears the expired
+    # older turn, the session's younger turn stays held back
+    s = Scheduler(n_replicas=1)
+    s.submit(_req("dead", "sess", deadline_s=0.0, arrived_s=0.0))
+    s.submit(_req("next", "sess", arrived_s=100.0))
+    assert s.admit_one(0, free_slots=1) is None
+    s.pop_expired(0)
+    assert s.admit_one(0, free_slots=1).request_id == "next"
+
+
+def test_best_waiting_is_read_only_and_priority_ordered():
+    s = Scheduler(n_replicas=1)
+    s.submit(_req("b0", "sb", slo=SLO_BATCH, arrived_s=100.0))
+    s.submit(_req("i0", "si", slo=SLO_INTERACTIVE, arrived_s=100.1))
+    assert s.best_waiting(0).request_id == "i0"
+    assert s.pending(0) == 2          # nothing popped
+    assert s.best_waiting(0).request_id == "i0"
+
+
+def test_requeue_restores_session_precedence():
+    s = Scheduler(n_replicas=1)
+    s.submit(_req("r0", "s", arrived_s=100.0))
+    s.submit(_req("r1", "s", arrived_s=100.1))
+    got = s.admit_one(0, free_slots=1)
+    assert got.request_id == "r0"
+    s.requeue(0, got)
+    assert s.admit_one(0, free_slots=1).request_id == "r0"
+    assert s.admit_one(0, free_slots=1).request_id == "r1"
+
+
+def test_fold_for_replay_round_trip():
+    r = _req("r", prompt_len=3)
+    r.tokens = [7, 8]
+    assert r.fold_for_replay()
+    assert r.replay_offset == 2
+    assert list(np.asarray(r.prompt)) == [0, 1, 2, 7, 8]
+    # idempotent: nothing new to fold
+    assert r.fold_for_replay()
+    assert len(np.asarray(r.prompt)) == 5
+
+
+def test_fold_for_replay_refuses_embeds():
+    r = Request(request_id="e", session_key="s",
+                prompt=np.zeros((3, 4), np.float32))
+    r.tokens = [1]
+    assert not r.fold_for_replay()

@@ -20,10 +20,10 @@ bench:
 # exactly what CI's bench-smoke job runs: the serving perf path end-to-end
 # on tiny configs (unified tick, paged KV + prefix reuse, speculative
 # decode, multi-model cascade + bounded admission, SLO-class overload with
-# KV preemption vs the shed-only FIFO baseline)
+# KV preemption vs the shed-only FIFO baseline, quantized-vs-bf16 KV pool)
 bench-smoke:
 	BENCH_SMOKE=1 PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
-		--only serve_prefix_reuse,serve_mixed_tick,serve_speculative,serve_multi_model,serve_overload
+		--only serve_prefix_reuse,serve_mixed_tick,serve_speculative,serve_multi_model,serve_overload,serve_kv_quant
 
 # exactly what CI's chaos-smoke job runs: a seeded fault schedule (replica
 # crash + KV migration, transient submit errors, slow ticks) over the

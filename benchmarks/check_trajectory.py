@@ -12,15 +12,22 @@ Comparison rules:
   the contract; means and p50s wobble too much on shared runners);
 - a current value worse than ``band`` × baseline fails (the band absorbs
   runner noise and smoke-vs-full config drift — pass ``--band`` to tune);
-- fields present on only one side are SKIPPED, not failed: new benchmarks
-  add fields, old ones retire them, and a missing baseline is not a
-  regression;
-- non-finite values (NaN from an empty percentile pool) are skipped.
+- a baseline field MISSING from the current run FAILS: a benchmark that
+  silently stops emitting its p99s (renamed field, dropped bench, empty
+  percentile pool collapsing to NaN) would otherwise pass the gate by
+  vanishing.  Retiring a field deliberately is ``--allow-missing PATH``
+  (repeatable; a dotted-path prefix matches its whole subtree);
+- fields present only in the current run are reported as new, not failed
+  (new benchmarks add fields; the next committed run baselines them);
+- non-finite values (NaN from an empty percentile pool) are dropped on
+  BOTH sides before comparison — so a baseline field that goes NaN counts
+  as missing, not as skipped.
 
-Exit status: 0 clean / field skipped, 1 on any regression beyond the band.
+Exit status: 0 clean, 1 on any regression beyond the band or any
+disappeared field not covered by --allow-missing.
 
 Usage: python -m benchmarks.check_trajectory BASELINE.json CURRENT.json
-       [--band 2.0]
+       [--band 2.0] [--allow-missing PATH ...]
 """
 from __future__ import annotations
 
@@ -28,6 +35,7 @@ import argparse
 import json
 import math
 import sys
+from typing import Sequence
 
 
 def _p99_fields(tree: dict, prefix: str = "") -> dict[str, float]:
@@ -48,16 +56,25 @@ def _p99_fields(tree: dict, prefix: str = "") -> dict[str, float]:
     return out
 
 
-def compare(baseline: dict, current: dict, band: float
+def compare(baseline: dict, current: dict, band: float,
+            allow_missing: Sequence[str] = ()
             ) -> tuple[list[str], list[str]]:
-    """Returns (regressions, report_lines)."""
+    """Returns (regressions, report_lines).  Disappeared baseline fields
+    count as regressions unless matched by an ``allow_missing`` prefix."""
     base = _p99_fields(baseline)
     cur = _p99_fields(current)
     regressions: list[str] = []
     lines: list[str] = []
     for path in sorted(base):
         if path not in cur:
-            lines.append(f"  skip  {path} (not in current run)")
+            if any(path == a or path.startswith(a + ".")
+                   for a in allow_missing):
+                lines.append(f"  retired  {path} (--allow-missing)")
+            else:
+                lines.append(f"  MISSING  {path} (in baseline, absent from "
+                             f"current run — a silently-vanished bench "
+                             f"field; retire it with --allow-missing)")
+                regressions.append(path)
             continue
         b, c = base[path], cur[path]
         ratio = c / b if b > 0 else float("inf") if c > 0 else 1.0
@@ -81,6 +98,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="allowed ratio current/baseline before failing "
                          "(default 2.0: smoke runs on shared runners are "
                          "noisy; tighten for dedicated hardware)")
+    ap.add_argument("--allow-missing", action="append", default=[],
+                    metavar="PATH",
+                    help="dotted field path (or prefix) whose disappearance "
+                         "from the current run is a deliberate retirement, "
+                         "not a failure; repeatable")
     args = ap.parse_args(argv)
 
     try:
@@ -92,13 +114,14 @@ def main(argv: list[str] | None = None) -> int:
     with open(args.current) as f:
         current = json.load(f)
 
-    regressions, lines = compare(baseline, current, args.band)
+    regressions, lines = compare(baseline, current, args.band,
+                                 args.allow_missing)
     print(f"# perf trajectory: {args.current} vs {args.baseline}")
     for line in lines:
         print(line)
     if regressions:
-        print(f"check_trajectory: {len(regressions)} p99 regression(s) "
-              f"beyond the {args.band:.2f}x band: "
+        print(f"check_trajectory: {len(regressions)} p99 regression(s)/"
+              f"disappearance(s) beyond the {args.band:.2f}x band: "
               f"{', '.join(regressions)}", file=sys.stderr)
         return 1
     print("check_trajectory: within band")

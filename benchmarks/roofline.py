@@ -1,5 +1,12 @@
 """§Roofline table generator: reads the dry-run JSONs and emits the
-per-(arch × shape) three-term table used by EXPERIMENTS.md."""
+per-(arch × shape) three-term table used by EXPERIMENTS.md.
+
+Also the KV-bytes-per-decode-token accounting mode (``kv_bytes_table``):
+decode is bandwidth-bound — every cached K/V byte is read once per decode
+token — so the KV-quantization win should be reported as *bytes moved*
+(theoretical, from the pool layout) against *achieved bandwidth* (from the
+measured ``serve_kv_quant`` A/B), not just wall-clock, which on shared
+hosts mostly measures noise."""
 from __future__ import annotations
 
 import glob
@@ -37,6 +44,55 @@ def table(out, out_dir: str = "experiments/dryrun", tag: str = "") -> None:
             f"{r['compute_s']:.4f},{r['memory_s']:.4f},{r['collective_s']:.4f},"
             f"{r['dominant'].replace('_s','')},{r['useful_flops_ratio']:.2f},"
             f"{d['memory_analysis']['temp_bytes']/2**30:.1f}")
+
+
+# ---------------------------------------------------------------- KV bytes
+# itemsize of each pool storage dtype; quantized entries add one f32 scale
+# per (slot, kv-head), i.e. 4 bytes amortized over head_dim values.
+_KV_ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1, "fp8_e4m3": 1}
+_KV_SCALED = {"int8", "fp8_e4m3"}
+
+
+def kv_bytes_per_decode_token(n_layers: int, n_kv_heads: int, head_dim: int,
+                              kv_dtype: str) -> float:
+    """Theoretical pool bytes per token slot: K+V over every layer, plus
+    per-(slot, kv-head) f32 scales when quantized.  A decode token at
+    context length L streams L× this per step — THE number the int8-vs-bf16
+    ≥1.8x claim is made on (2D/(D+4) at head_dim D)."""
+    per_head = 2 * head_dim * _KV_ITEMSIZE[kv_dtype]       # K + V
+    if kv_dtype in _KV_SCALED:
+        per_head += 2 * 4                                  # k_scale + v_scale
+    return float(n_layers * n_kv_heads * per_head)
+
+
+def kv_bytes_table(out, bench_json: str = "BENCH_serve.json") -> None:
+    """Achieved-vs-theoretical KV bandwidth accounting from the
+    ``serve_kv_quant`` A/B results (measured ``kv_bytes_per_token`` and
+    TPOT at a fixed context): achieved_GBps = ctx × bytes/token / TPOT.
+    Emits MISSING rows when the bench hasn't run yet."""
+    out("kv_bytes/arm,kv_dtype,meas_B_per_tok,theor_B_per_tok,"
+        "ctx_tokens,tpot_p50_us,achieved_MBps,ratio_vs_baseline")
+    try:
+        data = json.load(open(bench_json)).get("serve_kv_quant")
+    except (OSError, json.JSONDecodeError):
+        data = None
+    if not data:
+        out("kv_bytes/baseline,MISSING (run serve_kv_quant first)")
+        return
+    arms = [(k, v) for k, v in data.items()
+            if isinstance(v, dict) and "kv_bytes_per_token" in v]
+    base_bytes = next((v["kv_bytes_per_token"] for k, v in arms
+                       if k == "baseline"), None)
+    for name, arm in arms:
+        meas = arm["kv_bytes_per_token"]
+        theor = kv_bytes_per_decode_token(
+            arm["n_layers"], arm["n_kv_heads"], arm["head_dim"],
+            arm["kv_dtype"])
+        ctx, tpot = arm["ctx_tokens"], arm["tpot_p50_s"]
+        bw = ctx * meas / tpot / 1e6 if tpot > 0 else float("nan")
+        ratio = base_bytes / meas if base_bytes else float("nan")
+        out(f"kv_bytes/{name},{arm['kv_dtype']},{meas:.0f},{theor:.0f},"
+            f"{ctx},{tpot*1e6:.0f},{bw:.1f},{ratio:.2f}")
 
 
 def markdown_table(out_dir: str = "experiments/dryrun", tag: str = "") -> str:

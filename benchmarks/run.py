@@ -37,7 +37,9 @@ def main() -> None:
         ("serve_multi_model", serve.bench_serve_multi_model),
         ("serve_chaos", serve.bench_serve_chaos),
         ("serve_overload", serve.bench_serve_overload),
+        ("serve_kv_quant", serve.bench_serve_kv_quant),
         ("roofline_table", lambda out: roofline.table(out)),
+        ("roofline_kv_bytes", lambda out: roofline.kv_bytes_table(out)),
     ]
 
     def out(line: str) -> None:

@@ -820,3 +820,103 @@ def bench_serve_overload(out) -> dict:
     out("serve_overload/CLAIM zero-stranded-requests,PASS,exact")
     _write_results("serve_overload", results, out)
     return results
+
+
+def bench_serve_kv_quant(out) -> dict:
+    """A/B: bf16 KV block pool vs int8 (per-(block, slot, kv-head) scales)
+    at the SAME fixed token budget, seeds, and prompts — decode is
+    bandwidth-bound, so the quantized pool should cut decode TPOT by cutting
+    the bytes each decode token streams from the pool.
+
+    Always asserts the machine-independent half of the claim: measured
+    ``kv_bytes_per_token`` drops >= 1.8x (int8+f32-scales vs bf16 is
+    2D/(D+4) = 1.88x at head_dim 64), both streams complete error-free, and
+    ``host_syncs == ticks`` per arm.  Outside smoke mode the wall-clock half
+    is asserted too: int8 decode TPOT p50 must beat bf16 (on a CPU host this
+    measures the XLA-fallback dequant, so the assert rides the non-smoke
+    path exactly like serve_mixed_tick's).  Records per-arm
+    ``kv_bytes_per_token`` + shape fields so ``roofline.kv_bytes_table``
+    can report achieved vs theoretical bandwidth."""
+    from repro.serving.engine import ServeEngine
+    from repro.models import init_params
+    from repro.models.config import ModelConfig
+    from repro.serving.scheduler import Request
+
+    smoke = _smoke()
+    # head_dim 64 so the int8 byte ratio (2D/(D+4)) clears the 1.8x bar;
+    # long-ish contexts so decode actually streams multiple blocks per token
+    cfg = ModelConfig(name="bench-kvq", family="dense", n_layers=2,
+                      d_model=128, n_heads=2, n_kv_heads=2, head_dim=64,
+                      d_ff=128 if smoke else 256, vocab_size=256,
+                      dtype="float32", q_chunk=32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    n_slots = 4
+    S = 48 if smoke else 160
+    decode_new = 12 if smoke else 48
+    max_len = 96 if smoke else 256
+    budget = 48
+    arms = {"baseline": "bfloat16", "int8": "int8"}
+    results: dict = {}
+
+    for label, kv_dtype in arms.items():
+        rng = np.random.default_rng(23)      # same stream ⇒ same prompts
+        eng = ServeEngine(cfg, params, n_slots=n_slots, max_len=max_len,
+                          paged=True, block_size=16, token_budget=budget,
+                          kv_dtype=kv_dtype)
+        done = []
+        eng.on_complete = done.append
+        t0 = time.monotonic()
+        eng.submit(Request(request_id="warm", session_key="warm",
+                           prompt=rng.integers(0, cfg.vocab_size, (8,))
+                           .astype(np.int32), max_new_tokens=2))
+        eng.run_until_drained()
+        compile_s = time.monotonic() - t0
+        mark = len(eng.stats.tpot_s)
+        for i in range(n_slots):
+            eng.submit(Request(
+                request_id=f"r{i}", session_key=f"s{i}",
+                prompt=rng.integers(0, cfg.vocab_size, (S,))
+                .astype(np.int32), max_new_tokens=decode_new))
+        t0 = time.monotonic()
+        eng.run_until_drained()
+        wall_s = time.monotonic() - t0
+        tpot = eng.stats.tpot_s[mark:]
+        assert eng.stats.host_syncs == eng.stats.ticks
+        assert all(r.error is None for r in done)
+        row = {
+            "kv_dtype": kv_dtype,
+            "kv_bytes_per_token": eng.cm.kv_bytes_per_token(),
+            "n_layers": cfg.n_layers, "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "ctx_tokens": S + decode_new,
+            "compile_s": compile_s,
+            "tpot_p50_s": _pct(tpot, 0.50),
+            "tpot_p50_us": _pct(tpot, 0.50) * 1e6,
+            "tpot_p99_us": _pct(tpot, 0.99) * 1e6,
+            "ticks": eng.stats.ticks,
+            "wall_s": wall_s,
+        }
+        results[label] = row
+        out(f"serve_kv_quant/{label},{row['tpot_p50_us']:.1f},"
+            f"kv_bytes_per_token={row['kv_bytes_per_token']:.0f} "
+            f"tpot_p99_us={row['tpot_p99_us']:.1f} ticks={row['ticks']}")
+
+    byte_ratio = (results["baseline"]["kv_bytes_per_token"]
+                  / results["int8"]["kv_bytes_per_token"])
+    tpot_ratio = (results["baseline"]["tpot_p50_us"]
+                  / max(1e-9, results["int8"]["tpot_p50_us"]))
+    results["total"] = {"kv_byte_ratio": byte_ratio,
+                        "tpot_ratio_p50": tpot_ratio}
+    out(f"serve_kv_quant/byte_ratio,{byte_ratio:.2f},"
+        f"tpot_ratio_p50={tpot_ratio:.2f}")
+    assert byte_ratio >= 1.8, \
+        f"int8 pool must cut KV bytes/token >= 1.8x vs bf16 (got " \
+        f"{byte_ratio:.2f}x)"
+    out("serve_kv_quant/CLAIM int8-halves-kv-bytes-per-token,PASS,exact")
+    if not smoke:
+        assert results["int8"]["tpot_p50_us"] \
+            < results["baseline"]["tpot_p50_us"], \
+            "int8 KV pool failed to beat bf16 decode TPOT p50"
+        out("serve_kv_quant/CLAIM int8-beats-bf16-tpot,PASS,exact")
+    _write_results("serve_kv_quant", results, out)
+    return results

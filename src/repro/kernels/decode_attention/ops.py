@@ -1,4 +1,12 @@
-"""Jit'd public wrappers for the decode-attention kernels (dense + paged)."""
+"""Jit'd public wrappers for the decode-attention kernels (dense + paged).
+
+Quantized KV pools: every paged wrapper takes optional ``k_scale``/
+``v_scale`` operands (per-(block, slot, kv-head) f32, shape
+``(num_blocks, block_size, K)``).  Passing them flips the kernel into
+dequantize-in-register mode — the int8/fp8 pool leaves are the only K/V
+bytes streamed from HBM.  Presence of the operands is the switch, so one
+jitted wrapper serves every ``kv_dtype`` without retracing on value.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,28 +14,36 @@ import functools
 import jax
 
 from .kernel import (decode_attention_fwd, paged_decode_attention_fwd,
-                     ragged_paged_attention_fwd)
-from .ref import (decode_attention_ref, paged_decode_attention_ref,
+                     ragged_paged_attention_fwd, suggest_block_size)
+from .quant import (KV_DTYPES, dequantize_kv, is_quantized, quantize_kv,
+                    resolve_kv_dtype)
+from .ref import (decode_attention_ref, paged_decode_attention_quant_ref,
+                  paged_decode_attention_ref,
+                  ragged_paged_attention_quant_ref,
                   ragged_paged_attention_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
                                              "block_k", "interpret"))
 def decode_attention(q, k_cache, v_cache, q_pos, cache_pos, *,
+                     k_scale=None, v_scale=None,
                      window: int | None = None, softcap: float | None = None,
                      scale: float | None = None, block_k: int = 512,
                      interpret: bool = False):
-    """One-token decode attention.  q: (B,H,D); caches (B,S,K,D)."""
+    """One-token decode attention.  q: (B,H,D); caches (B,S,K,D);
+    optional quantized-cache scales (B,S,K)."""
     if scale is None:
         scale = q.shape[-1] ** -0.5
     return decode_attention_fwd(q, k_cache, v_cache, q_pos, cache_pos,
                                 scale=scale, softcap=softcap, window=window,
-                                block_k=block_k, interpret=interpret)
+                                block_k=block_k, k_scale=k_scale,
+                                v_scale=v_scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
                                              "interpret"))
 def paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos, *,
+                           k_scale=None, v_scale=None,
                            window: int | None = None,
                            softcap: float | None = None,
                            scale: float | None = None,
@@ -42,15 +58,19 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos, *,
         scale = q.shape[-1] ** -0.5
     return paged_decode_attention_fwd(q, k_pool, v_pool, block_tables, q_pos,
                                       scale=scale, softcap=softcap,
-                                      window=window, interpret=interpret)
+                                      window=window, k_scale=k_scale,
+                                      v_scale=v_scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "dimension_semantics",
                                              "interpret"))
 def ragged_paged_attention(q, k_pool, v_pool, block_tables, row_ids,
-                           token_pos, *, window: int | None = None,
+                           token_pos, *, k_scale=None, v_scale=None,
+                           window: int | None = None,
                            softcap: float | None = None,
                            scale: float | None = None,
+                           dimension_semantics: tuple | None = None,
                            interpret: bool = False):
     """Mixed prefill-chunk + decode attention over a paged KV pool.
 
@@ -70,15 +90,25 @@ def ragged_paged_attention(q, k_pool, v_pool, block_tables, row_ids,
     its own position, which is exactly the draft-verification semantics the
     engine's acceptance rule needs.  k = 1 degenerates to today's
     single-token decode (``paged_decode_attention`` is literally this kernel
-    with ``row_ids = arange(B)``)."""
+    with ``row_ids = arange(B)``).
+
+    ``k_scale``/``v_scale`` (num_blocks, block_size, K) f32 mark the pool
+    as quantized; ``dimension_semantics`` is the real-TPU tuning hook (nb
+    must stay sequential — see kernel.DEFAULT_DIMENSION_SEMANTICS)."""
     if scale is None:
         scale = q.shape[-1] ** -0.5
     return ragged_paged_attention_fwd(q, k_pool, v_pool, block_tables,
                                       row_ids, token_pos, scale=scale,
                                       softcap=softcap, window=window,
+                                      k_scale=k_scale, v_scale=v_scale,
+                                      dimension_semantics=dimension_semantics,
                                       interpret=interpret)
 
 
 __all__ = ["decode_attention", "decode_attention_ref",
            "paged_decode_attention", "paged_decode_attention_ref",
-           "ragged_paged_attention", "ragged_paged_attention_ref"]
+           "paged_decode_attention_quant_ref",
+           "ragged_paged_attention", "ragged_paged_attention_ref",
+           "ragged_paged_attention_quant_ref",
+           "KV_DTYPES", "resolve_kv_dtype", "is_quantized",
+           "quantize_kv", "dequantize_kv", "suggest_block_size"]

@@ -1,0 +1,94 @@
+"""KV-block quantization helpers shared by the pool writers, the Pallas
+kernels, and the pure-JAX oracles.
+
+The paged KV pool stores blocks in one of four dtypes
+(``KV_DTYPES``): ``float32``/``bfloat16`` keep the historical unscaled
+layout; ``int8``/``fp8_e4m3`` add per-(block, slot, kv-head) ``float32``
+scale leaves (``k_scale``/``v_scale`` of shape ``(num_blocks,
+block_size, n_kv_heads)`` alongside ``k``/``v``).
+
+Scale granularity is deliberately per *token* (pool slot), not per
+block: a per-block scale would make every stored value depend on which
+other tokens currently share the block, so rewriting one slot (chunked
+prefill, speculative rollback + rewrite, migration scatter into fresh
+blocks) would requantize its neighbours and break the bit-stability
+contract that failover/preemption replay relies on.  With per-slot
+scales a written token's quantized bytes depend only on that token —
+spill→adopt and preempt→resume round-trip exactly, and greedy streams
+stay bit-identical at a fixed precision.
+
+Quantization is symmetric absmax over the head dim:
+``scale = amax(|x|) / qmax`` per (token, kv-head), zero-guarded so an
+all-zero vector round-trips to zeros with scale 1.  int8 rounds to
+nearest; fp8-e4m3 relies on the hardware cast's rounding.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Accepted ``kv_dtype`` knob values (None ≡ unquantized model dtype).
+KV_DTYPES = ("float32", "bfloat16", "int8", "fp8_e4m3")
+
+_QUANTIZED = {
+    "int8": (jnp.int8, 127.0),
+    "fp8_e4m3": (jnp.float8_e4m3fn, 448.0),
+}
+
+_ALIASES = {
+    "fp32": "float32", "f32": "float32",
+    "bf16": "bfloat16",
+    "fp8": "fp8_e4m3", "float8_e4m3fn": "fp8_e4m3", "e4m3": "fp8_e4m3",
+}
+
+
+def resolve_kv_dtype(kv_dtype: str | None) -> str | None:
+    """Canonicalise a ``kv_dtype`` knob value; None passes through."""
+    if kv_dtype is None:
+        return None
+    name = _ALIASES.get(kv_dtype, kv_dtype)
+    if name not in KV_DTYPES:
+        raise ValueError(
+            f"kv_dtype {kv_dtype!r} not in {KV_DTYPES} (or aliases "
+            f"{sorted(_ALIASES)})")
+    return name
+
+
+def is_quantized(kv_dtype: str | None) -> bool:
+    return resolve_kv_dtype(kv_dtype) in _QUANTIZED
+
+
+def storage_dtype(kv_dtype: str | None, model_dtype) -> jnp.dtype:
+    """The dtype pool ``k``/``v`` leaves are stored in."""
+    name = resolve_kv_dtype(kv_dtype)
+    if name is None:
+        return jnp.dtype(model_dtype)
+    if name in _QUANTIZED:
+        return jnp.dtype(_QUANTIZED[name][0])
+    return jnp.dtype(name)
+
+
+def qmax(kv_dtype: str) -> float:
+    return _QUANTIZED[resolve_kv_dtype(kv_dtype)][1]
+
+
+def quantize_kv(x: jnp.ndarray, kv_dtype: str):
+    """Quantize ``x`` (..., n_kv_heads, head_dim) → (q, scale).
+
+    ``scale`` has shape ``x.shape[:-1]`` (one f32 scale per token per
+    kv-head); ``q * scale[..., None]`` dequantizes.
+    """
+    dt, qm = _QUANTIZED[resolve_kv_dtype(kv_dtype)]
+    x = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = jnp.where(amax > 0.0, amax / qm, 1.0)
+    scaled = x / scale[..., None]
+    if dt == jnp.int8:
+        q = jnp.clip(jnp.round(scaled), -qm, qm).astype(jnp.int8)
+    else:
+        q = jnp.clip(scaled, -qm, qm).astype(dt)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_kv`: (..., K, D) × (..., K) → f32."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]

@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .quant import dequantize_kv
+
 NEG_INF = -1e30
 
 
@@ -92,3 +94,39 @@ def ragged_paged_attention_ref(q, k_pool, v_pool, block_tables, row_ids,
                                      scale=scale)
     valid = (jnp.asarray(token_pos) >= 0) & (jnp.asarray(row_ids) >= 0)
     return jnp.where(valid[:, None, None], out, 0).astype(out.dtype)
+
+
+def dequant_pool(k_pool, v_pool, k_scale, v_scale):
+    """Dequantize quantized pool leaves back to f32 pools.
+
+    pools (N,bs,K,D) int8/fp8; scales (N,bs,K) f32 — one scale per pool
+    slot per kv-head (see quant.py for why granularity is per-slot)."""
+    return dequantize_kv(k_pool, k_scale), dequantize_kv(v_pool, v_scale)
+
+
+def paged_decode_attention_quant_ref(q, k_pool, v_pool, k_scale, v_scale,
+                                     block_tables, q_pos, *,
+                                     window: int | None = None,
+                                     softcap: float | None = None,
+                                     scale: float | None = None):
+    """Quantized-pool oracle: dequantize, then run the paged oracle.
+
+    Because dequantization is an elementwise `q * scale` in f32 here and
+    in the kernel, kernel-vs-this-oracle parity stays at the same tight
+    tolerance as the unquantized pair."""
+    kd, vd = dequant_pool(k_pool, v_pool, k_scale, v_scale)
+    return paged_decode_attention_ref(q, kd, vd, block_tables, q_pos,
+                                      window=window, softcap=softcap,
+                                      scale=scale)
+
+
+def ragged_paged_attention_quant_ref(q, k_pool, v_pool, k_scale, v_scale,
+                                     block_tables, row_ids, token_pos, *,
+                                     window: int | None = None,
+                                     softcap: float | None = None,
+                                     scale: float | None = None):
+    """Quantized-pool oracle for the ragged kernel (see above)."""
+    kd, vd = dequant_pool(k_pool, v_pool, k_scale, v_scale)
+    return ragged_paged_attention_ref(q, kd, vd, block_tables, row_ids,
+                                      token_pos, window=window,
+                                      softcap=softcap, scale=scale)

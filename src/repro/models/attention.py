@@ -21,6 +21,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_attention import quant as da_quant
+
 from .config import LayerSpec, ModelConfig
 from .layers import dense_init, dtype_of, rmsnorm, rmsnorm_axes, rmsnorm_init, rope, softcap
 
@@ -192,18 +194,54 @@ def _cache_write(cache: dict, k_new, v_new, positions) -> dict:
 
 
 # ------------------------------------------------------------------ paging
-def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int) -> dict:
+def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
+                    kv_dtype: str | None = None) -> dict:
     """One layer's share of the global KV block pool.
 
     Unlike the dense per-slot cache there is no batch axis and no "pos" leaf:
     blocks are a flat pool shared by every request, and the absolute position
     of slot p in a request's logical block j is implicit (j·bs + p), fixed by
     the request's block table.  Local-window layers use the same full-length
-    pool and mask positionally (a paged ring would forbid block sharing)."""
+    pool and mask positionally (a paged ring would forbid block sharing).
+
+    ``kv_dtype`` (default ``cfg.kv_dtype``) picks the storage dtype; int8 /
+    fp8_e4m3 add ``k_scale``/``v_scale`` leaves — one f32 scale per (block,
+    slot, kv-head), quantize-on-write in the block writers below.  Scales
+    init to 1 so untouched blocks (incl. the reserved null block) dequantize
+    to exact zeros."""
     K, D = cfg.n_kv_heads, cfg.head_dim
-    dt = dtype_of(cfg)
-    return {"k": jnp.zeros((num_blocks, block_size, K, D), dtype=dt),
+    kv_dtype = cfg.kv_dtype if kv_dtype is None else kv_dtype
+    dt = da_quant.storage_dtype(kv_dtype, dtype_of(cfg))
+    pool = {"k": jnp.zeros((num_blocks, block_size, K, D), dtype=dt),
             "v": jnp.zeros((num_blocks, block_size, K, D), dtype=dt)}
+    if da_quant.is_quantized(kv_dtype):
+        pool["k_scale"] = jnp.ones((num_blocks, block_size, K), jnp.float32)
+        pool["v_scale"] = jnp.ones((num_blocks, block_size, K), jnp.float32)
+    return pool
+
+
+def _dequant_pool_leaves(pool: dict):
+    """f32 K/V leaves for the XLA densify fallback (identity when the pool
+    is unquantized).  The fallback materializes a dequantized pool copy —
+    acceptable off-TPU; the Pallas path dequantizes in-register instead."""
+    if "k_scale" not in pool:
+        return pool["k"], pool["v"]
+    return (da_quant.dequantize_kv(pool["k"], pool["k_scale"]),
+            da_quant.dequantize_kv(pool["v"], pool["v_scale"]))
+
+
+def _quantize_for_pool(pool: dict, k_new, v_new):
+    """Quantize new K/V entries to the pool's storage dtype (identity for
+    unquantized pools).  Per-token-per-head scales mean a written token's
+    bytes depend only on that token — rewrites (chunked prefill, rollback,
+    migration scatter) never requantize neighbours, which is what keeps
+    greedy streams bit-identical across spill/adopt/preempt/resume."""
+    if "k_scale" not in pool:
+        return k_new, v_new, None, None
+    name = "int8" if pool["k"].dtype == jnp.int8 else "fp8_e4m3"
+    kq, ks = da_quant.quantize_kv(k_new, name)
+    vq, vs = da_quant.quantize_kv(v_new, name)
+    return kq, vq, ks, vs
 
 
 def _paged_write(pool: dict, k_new, v_new, positions, block_table) -> dict:
@@ -216,8 +254,13 @@ def _paged_write(pool: dict, k_new, v_new, positions, block_table) -> dict:
     blk = jnp.take_along_axis(block_table, positions // bs, axis=1)
     blk = jnp.maximum(blk, 0)                                # (B, T)
     slot = positions % bs
-    return {"k": pool["k"].at[blk, slot].set(k_new.astype(pool["k"].dtype)),
-            "v": pool["v"].at[blk, slot].set(v_new.astype(pool["v"].dtype))}
+    k_new, v_new, ks, vs = _quantize_for_pool(pool, k_new, v_new)
+    out = {"k": pool["k"].at[blk, slot].set(k_new.astype(pool["k"].dtype)),
+           "v": pool["v"].at[blk, slot].set(v_new.astype(pool["v"].dtype))}
+    if ks is not None:
+        out["k_scale"] = pool["k_scale"].at[blk, slot].set(ks)
+        out["v_scale"] = pool["v_scale"].at[blk, slot].set(vs)
+    return out
 
 
 def _ragged_paged_write(pool: dict, k_new, v_new, positions, block_table,
@@ -235,8 +278,13 @@ def _ragged_paged_write(pool: dict, k_new, v_new, positions, block_table,
     valid = (row_ids >= 0) & (positions >= 0)
     blk = jnp.where(valid, jnp.maximum(blk, 0), 0)
     slot = jnp.where(valid, posc % bs, 0)
-    return {"k": pool["k"].at[blk, slot].set(k_new.astype(pool["k"].dtype)),
-            "v": pool["v"].at[blk, slot].set(v_new.astype(pool["v"].dtype))}
+    k_new, v_new, ks, vs = _quantize_for_pool(pool, k_new, v_new)
+    out = {"k": pool["k"].at[blk, slot].set(k_new.astype(pool["k"].dtype)),
+           "v": pool["v"].at[blk, slot].set(v_new.astype(pool["v"].dtype))}
+    if ks is not None:
+        out["k_scale"] = pool["k_scale"].at[blk, slot].set(ks)
+        out["v_scale"] = pool["v_scale"].at[blk, slot].set(vs)
+    return out
 
 
 # ------------------------------------------------------------------- apply
@@ -339,11 +387,14 @@ def paged_attention(params: dict, x: jax.Array, positions: jax.Array, *,
             from repro.kernels.decode_attention import ops as da_ops
             out = da_ops.ragged_paged_attention(
                 q[0], pool["k"], pool["v"], block_table, row_ids,
-                positions[0], window=spec.window, softcap=cap, scale=scale,
+                positions[0], k_scale=pool.get("k_scale"),
+                v_scale=pool.get("v_scale"), window=spec.window,
+                softcap=cap, scale=scale,
                 interpret=(backend == "pallas_interpret"))[None]
         else:
             from repro.kernels.decode_attention.ref import densify_pool
-            kd, vd, kpos = densify_pool(pool["k"], pool["v"], block_table)
+            kp, vp = _dequant_pool_leaves(pool)
+            kd, vd, kpos = densify_pool(kp, vp, block_table)
             rows = jnp.clip(row_ids, 0, block_table.shape[0] - 1)
             out = _ragged_attend_chunked(
                 q[0], kd, vd, kpos, positions[0], rows, window=spec.window,
@@ -355,11 +406,13 @@ def paged_attention(params: dict, x: jax.Array, positions: jax.Array, *,
         from repro.kernels.decode_attention import ops as da_ops
         out = da_ops.paged_decode_attention(
             q[:, 0], pool["k"], pool["v"], block_table, positions[:, 0],
+            k_scale=pool.get("k_scale"), v_scale=pool.get("v_scale"),
             window=spec.window, softcap=cap, scale=scale,
             interpret=(backend == "pallas_interpret"))[:, None]
     else:
         from repro.kernels.decode_attention.ref import densify_pool
-        kd, vd, kpos = densify_pool(pool["k"], pool["v"], block_table)
+        kp, vp = _dequant_pool_leaves(pool)
+        kd, vd, kpos = densify_pool(kp, vp, block_table)
         # chunked for suffix prefill (T may approach max_len, and the full
         # (B,K,G,T,nb*bs) f32 score tensor is the dominant buffer exactly as
         # in dense prefill); decode's T=1 short-circuits to plain _attend

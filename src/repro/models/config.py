@@ -88,6 +88,10 @@ class ModelConfig:
     optimizer: str = "adamw"            # adamw | adafactor
     dtype: str = "bfloat16"
     attn_backend: str = "xla"           # xla | pallas | pallas_interpret
+    # Paged KV pool storage dtype: None = model dtype; "int8"/"fp8_e4m3"
+    # add per-(block, slot, kv-head) f32 scale leaves and quantize-on-write
+    # (kernels dequantize in-register after the block-table gather).
+    kv_dtype: str | None = None         # None | float32 | bfloat16 | int8 | fp8_e4m3
     q_chunk: int = 512                  # query chunking for the xla flash path
     remat: bool = True
     # Pin block outputs with an optimization barrier so GSPMD's TP all-reduce

@@ -370,14 +370,21 @@ def supports_speculative(cfg: ModelConfig) -> bool:
     return supports_paged(cfg)
 
 
-def init_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int):
+def init_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     kv_dtype: str | None = None):
     """Global KV block pool, same tree layout as init_decode_caches but with
-    (num_blocks, block_size) replacing the (batch, seq) plane."""
+    (num_blocks, block_size) replacing the (batch, seq) plane.
+
+    ``kv_dtype`` (default ``cfg.kv_dtype``) selects the storage precision;
+    quantized pools carry per-(block, slot, kv-head) scale leaves that ride
+    the same tree through donation, spill/adopt, and sharding."""
+    kv_dtype = cfg.kv_dtype if kv_dtype is None else kv_dtype
     pools = []
     for seg in cfg.layout():
         pos_pools = []
         for spec in seg.pattern:
-            one = attn_mod.init_paged_pool(cfg, num_blocks, block_size)
+            one = attn_mod.init_paged_pool(cfg, num_blocks, block_size,
+                                           kv_dtype=kv_dtype)
             stacked = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (seg.repeat,) + a.shape), one)
             pos_pools.append(stacked)

@@ -154,6 +154,7 @@ class ServeEngine:
                  block_size: int = 16, num_blocks: int | None = None,
                  prefix_cache: bool = True, devstore=None,
                  kv_key: str | None = None,
+                 kv_dtype: str | None = None,
                  token_budget: int | None = None,
                  spec_k: int = 0,
                  draft_source: DraftSource | None = None,
@@ -179,7 +180,7 @@ class ServeEngine:
             self.cm: Any = PagedCacheManager(
                 cfg, n_slots, max_len, block_size=block_size,
                 num_blocks=num_blocks, prefix_cache=prefix_cache,
-                devstore=devstore, kv_key=kv_key)
+                devstore=devstore, kv_key=kv_key, kv_dtype=kv_dtype)
             self.token_budget = (token_budget if token_budget is not None
                                  else max(32, 2 * n_slots))
             if self.token_budget < n_slots:
@@ -188,6 +189,11 @@ class ServeEngine:
                     f"every live decode row costs one token per tick, so a "
                     f"smaller budget would starve decodes")
         else:
+            from repro.kernels.decode_attention.quant import is_quantized
+            if is_quantized(kv_dtype):
+                raise ValueError(
+                    f"kv_dtype={kv_dtype!r} quantizes paged KV blocks; the "
+                    f"dense slot cache has no block pool to quantize")
             self.cm = CacheManager(cfg, n_slots, max_len)
             self.token_budget = None
         # Preemption (opt-in, paged only): under pressure the tick may evict

@@ -427,7 +427,8 @@ class PagedCacheManager:
     def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int, *,
                  block_size: int = 16, num_blocks: int | None = None,
                  prefix_cache: bool = True, devstore=None,
-                 kv_key: str | None = None) -> None:
+                 kv_key: str | None = None,
+                 kv_dtype: str | None = None) -> None:
         self.cfg, self.n_slots, self.max_len = cfg, n_slots, max_len
         self.block_size = block_size
         self.max_blocks = max(1, math.ceil(max_len / block_size))
@@ -436,9 +437,11 @@ class PagedCacheManager:
             # the prefix cache can retain blocks past their request
             num_blocks = 1 + (n_slots + 2) * self.max_blocks
         self.num_blocks = num_blocks
+        self.kv_dtype = cfg.kv_dtype if kv_dtype is None else kv_dtype
         self.alloc = PrefixBlockAllocator(num_blocks, block_size,
                                           enable_cache=prefix_cache)
-        self.pools = init_paged_pools(cfg, num_blocks, block_size)
+        self.pools = init_paged_pools(cfg, num_blocks, block_size,
+                                      kv_dtype=self.kv_dtype)
         self.slots = [PagedSeq() for _ in range(n_slots)]
         if devstore is None:
             from repro.core.devstore import DeviceStore
@@ -456,6 +459,18 @@ class PagedCacheManager:
         """Install the current pool tree on the device store (reference
         move — the leaves already live on the right devices)."""
         self.devstore.put(self.kv_key, self.pools, donate=True)
+
+    def kv_bytes_per_token(self) -> float:
+        """HBM bytes the pool stores per token slot, summed over every
+        layer's K/V (and, when quantized, scale) leaves.  This is also the
+        bytes a decode token READS per full-context pass, so the quant win
+        (bf16 → int8+f32-scales ≈ 2D/(D+4)) shows up here independent of
+        wall-clock noise."""
+        per_slot = 0.0
+        for leaf in jax.tree.leaves(self.pools):
+            per_slot += leaf.dtype.itemsize * leaf.size / (
+                self.num_blocks * self.block_size)
+        return per_slot
 
     # ------------------------------------------------------ slot interface
     def acquire(self, request_id: str) -> int | None:

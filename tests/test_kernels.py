@@ -414,3 +414,179 @@ def test_model_pallas_backend_matches_xla():
     lx, _ = forward(params, toks, pos, cfg_x, mode="score")
     lp, _ = forward(params, toks, pos, cfg_p, mode="score")
     np.testing.assert_allclose(lx, lp, atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------- quantized KV pools
+# Parity sweep across the kv_dtype ladder × block sizes × window/softcap.
+# Two-sided contract: (1) kernel vs the SAME-precision oracle stays at the
+# unquantized tolerance (both dequantize identical stored values, so the
+# pool dtype must not perturb the kernel's arithmetic); (2) quantized
+# output vs the f32-pool truth sits within an EXPLICIT tolerance ladder —
+# the accuracy budget README documents per dtype.
+QUANT_LADDER = {
+    "float32": 2e-5,          # storage == compute: exact
+    "bfloat16": 2e-2,         # 8-bit mantissa on K/V values
+    "int8": 8e-2,             # symmetric absmax, per-(slot, kv-head) scale
+    "fp8_e4m3": 2.5e-1,       # 3-bit mantissa, same scale granularity
+}
+
+QUANT_CASES = [
+    # (bs, nb, reqs=((ctx, chunk), ...), window, softcap)
+    (8, 4, ((25, 5), (9, 1)), None, None),
+    (16, 3, ((33, 33), (40, 1), (17, 1)), None, 30.0),
+    (32, 2, ((50, 11), (33, 1)), 12, None),
+    (64, 2, ((100, 4), (90, 1)), 20, 50.0),
+]
+
+
+def _quantize_pool(kp, vp, kv_dtype):
+    """Pool leaves at the target storage dtype (+ scales when quantized)."""
+    from repro.kernels.decode_attention.quant import quantize_kv
+    if kv_dtype in ("float32", "bfloat16"):
+        dt = jnp.dtype(kv_dtype)
+        return kp.astype(dt), vp.astype(dt), None, None
+    kq, ks = quantize_kv(kp, kv_dtype)
+    vq, vs = quantize_kv(vp, kv_dtype)
+    return kq, vq, ks, vs
+
+
+@pytest.mark.parametrize("kv_dtype", ["float32", "bfloat16", "int8",
+                                      "fp8_e4m3"])
+@pytest.mark.parametrize("bs,nb,reqs,win,cap", QUANT_CASES)
+def test_ragged_quantized_pool_parity(kv_dtype, bs, nb, reqs, win, cap):
+    from repro.kernels.decode_attention.ops import (
+        ragged_paged_attention_quant_ref)
+    H, K, D = 4, 2, 64
+    rng = np.random.default_rng(bs + len(reqs))
+    ctxs = [c for c, _ in reqs]
+    N = 1 + sum(-(-c // bs) for c in ctxs) + 2
+    ks_ = jax.random.split(jax.random.PRNGKey(bs), 3)
+    T = sum(ch for _, ch in reqs) + 2                   # 2 pad lanes
+    q = jax.random.normal(ks_[0], (T, H, D), jnp.float32)
+    kp = jax.random.normal(ks_[1], (N, bs, K, D), jnp.float32)
+    vp = jax.random.normal(ks_[2], (N, bs, K, D), jnp.float32)
+    bt = jnp.asarray(_random_block_tables(rng, N, bs, nb, ctxs))
+    rows = np.full(T, -1, np.int32)
+    tpos = np.full(T, -1, np.int32)
+    n = 0
+    for r, (ctx, chunk) in enumerate(reqs):
+        rows[n:n + chunk] = r
+        tpos[n:n + chunk] = np.arange(ctx - chunk, ctx)
+        n += chunk
+    rows, tpos = jnp.asarray(rows), jnp.asarray(tpos)
+
+    kq, vq, kscale, vscale = _quantize_pool(kp, vp, kv_dtype)
+    out = ragged_paged_attention(q, kq, vq, bt, rows, tpos, k_scale=kscale,
+                                 v_scale=vscale, window=win, softcap=cap,
+                                 interpret=True)
+    if kscale is None:
+        oracle = ragged_paged_attention_ref(q, kq, vq, bt, rows, tpos,
+                                            window=win, softcap=cap)
+    else:
+        oracle = ragged_paged_attention_quant_ref(
+            q, kq, vq, kscale, vscale, bt, rows, tpos, window=win,
+            softcap=cap)
+    # (1) kernel vs same-precision oracle: the unquantized tolerance
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               atol=2e-5, rtol=2e-5)
+    # (2) quantized result vs the f32-pool truth: the documented ladder
+    truth = ragged_paged_attention_ref(q, kp, vp, bt, rows, tpos,
+                                       window=win, softcap=cap)
+    tol = QUANT_LADDER[kv_dtype]
+    np.testing.assert_allclose(np.asarray(out)[:n], np.asarray(truth)[:n],
+                               atol=tol, rtol=tol)
+    # (3) pad lanes are exact zeros at EVERY precision
+    assert np.all(np.asarray(out)[n:] == 0)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+def test_paged_decode_quantized_parity(kv_dtype):
+    """Single-token decode (the batched engine path) with a quantized pool."""
+    from repro.kernels.decode_attention.ops import (
+        paged_decode_attention_quant_ref)
+    B, H, K, D, bs, nb = 3, 4, 2, 64, 16, 8
+    ctxs = (100, 17, 64)
+    rng = np.random.default_rng(5)
+    N = 1 + sum(-(-c // bs) for c in ctxs) + 2
+    ks_ = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks_[0], (B, H, D), jnp.float32)
+    kp = jax.random.normal(ks_[1], (N, bs, K, D), jnp.float32)
+    vp = jax.random.normal(ks_[2], (N, bs, K, D), jnp.float32)
+    bt = jnp.asarray(_random_block_tables(rng, N, bs, nb, ctxs))
+    qpos = jnp.asarray([c - 1 for c in ctxs], jnp.int32)
+    kq, vq, kscale, vscale = _quantize_pool(kp, vp, kv_dtype)
+    out = paged_decode_attention(q, kq, vq, bt, qpos, k_scale=kscale,
+                                 v_scale=vscale, interpret=True)
+    oracle = paged_decode_attention_quant_ref(q, kq, vq, kscale, vscale,
+                                              bt, qpos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               atol=2e-5, rtol=2e-5)
+    truth = paged_decode_attention_ref(q, kp, vp, bt, qpos)
+    tol = QUANT_LADDER[kv_dtype]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(truth),
+                               atol=tol, rtol=tol)
+
+
+def test_quantize_kv_roundtrip_properties():
+    """Unit contract of the quantizer: zero vectors round-trip to exact
+    zeros with scale 1 (untouched pool blocks stay null), dequantized
+    error is bounded by half a quantization step per element, and
+    quantization is deterministic (same input → same bits)."""
+    from repro.kernels.decode_attention.quant import (dequantize_kv,
+                                                      quantize_kv)
+    x = np.random.default_rng(0).normal(size=(5, 8, 2, 64)).astype(np.float32)
+    x[2] = 0.0                                     # an all-zero block
+    for name, step in (("int8", 1 / 127.0), ("fp8_e4m3", 1 / 8.0)):
+        q, s = quantize_kv(jnp.asarray(x), name)
+        q2, s2 = quantize_kv(jnp.asarray(x), name)
+        assert np.array_equal(np.asarray(q), np.asarray(q2))
+        assert np.array_equal(np.asarray(s), np.asarray(s2))
+        assert np.all(np.asarray(s)[2] == 1.0)
+        y = np.asarray(dequantize_kv(q, s))
+        assert np.all(y[2] == 0.0)
+        # |x - dq| <= (quant step) * amax per (token, head) row
+        amax = np.abs(x).max(axis=-1, keepdims=True)
+        assert np.all(np.abs(x - y) <= step * amax + 1e-7)
+
+
+def test_ragged_early_out_padding_invariance():
+    """The per-token num_blocks early-out must be EXACT: widening the block
+    tables with extra -1 columns (a larger nb grid whose tail every token
+    skips) and mixing rows of very different lengths must be bit-identical
+    to the tight layout."""
+    H, K, D, bs = 4, 2, 64, 8
+    ctxs = (60, 3, 17)
+    rng = np.random.default_rng(3)
+    nb = max(-(-c // bs) for c in ctxs)
+    N = 1 + sum(-(-c // bs) for c in ctxs) + 2
+    ks_ = jax.random.split(jax.random.PRNGKey(4), 3)
+    T = 5
+    q = jax.random.normal(ks_[0], (T, H, D), jnp.float32)
+    kp = jax.random.normal(ks_[1], (N, bs, K, D), jnp.float32)
+    vp = jax.random.normal(ks_[2], (N, bs, K, D), jnp.float32)
+    bt = _random_block_tables(rng, N, bs, nb, ctxs)
+    rows = jnp.asarray([0, 1, 2, 2, -1], jnp.int32)
+    tpos = jnp.asarray([59, 2, 15, 16, -1], jnp.int32)
+    tight = ragged_paged_attention(q, kp, vp, jnp.asarray(bt), rows, tpos,
+                                   interpret=True)
+    wide = np.concatenate([bt, np.full((len(ctxs), 5), -1, np.int32)],
+                          axis=1)
+    padded = ragged_paged_attention(q, kp, vp, jnp.asarray(wide), rows,
+                                    tpos, interpret=True)
+    assert np.array_equal(np.asarray(tight), np.asarray(padded))
+    # and the tight layout itself still matches the oracle
+    ref = ragged_paged_attention_ref(q, kp, vp, jnp.asarray(bt), rows, tpos)
+    np.testing.assert_allclose(np.asarray(tight), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_suggest_block_size_monotone():
+    """Tuning hook sanity: bigger VMEM budgets never suggest smaller
+    blocks, and the suggestion always fits the budget it was given."""
+    from repro.kernels.decode_attention.kernel import suggest_block_size
+    prev = 0
+    for budget in (1 << 14, 1 << 16, 1 << 20, 1 << 24):
+        bs = suggest_block_size(128, 8, vmem_budget_bytes=budget)
+        assert bs >= prev
+        prev = bs
+    assert suggest_block_size(128, 8, vmem_budget_bytes=1 << 24) == 512

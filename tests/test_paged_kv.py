@@ -512,3 +512,178 @@ def test_kv_pool_lives_on_devstore(params):
     # zero-copy install: the stored leaves ARE the live pool leaves
     assert all(a is b for a, b in zip(jax.tree.leaves(stored),
                                       jax.tree.leaves(eng.cm.pools)))
+
+
+# ===================================================== quantized KV pools
+def test_quantized_pool_bytes_match_roofline_accounting():
+    """The manager's measured kv_bytes_per_token must equal the roofline
+    theoretical formula at every precision (the int8-vs-bf16 byte-ratio
+    claim is made on that formula), and the pool leaves must carry the
+    advertised storage dtypes — quantized pools with f32 scale leaves."""
+    import jax.numpy as jnp
+
+    from benchmarks.roofline import kv_bytes_per_decode_token
+    D = CFG.d_model // CFG.n_heads
+    expect_dt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+                 "int8": jnp.int8, "fp8_e4m3": jnp.float8_e4m3fn}
+    bytes_by_dt = {}
+    for kv_dtype in ("float32", "bfloat16", "int8", "fp8_e4m3"):
+        cm = PagedCacheManager(CFG, n_slots=2, max_len=32, block_size=8,
+                               num_blocks=8, kv_dtype=kv_dtype)
+        got = cm.kv_bytes_per_token()
+        theor = kv_bytes_per_decode_token(CFG.n_layers, CFG.n_kv_heads, D,
+                                          kv_dtype)
+        assert got == theor, (kv_dtype, got, theor)
+        bytes_by_dt[kv_dtype] = got
+        dts = {l.dtype for l in jax.tree.leaves(cm.pools)}
+        if kv_dtype in ("int8", "fp8_e4m3"):
+            assert dts == {jnp.dtype(expect_dt[kv_dtype]),
+                           jnp.dtype(jnp.float32)}
+        else:
+            assert dts == {jnp.dtype(expect_dt[kv_dtype])}
+    assert (bytes_by_dt["float32"] > bytes_by_dt["bfloat16"]
+            > bytes_by_dt["int8"] == bytes_by_dt["fp8_e4m3"])
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+def test_quantized_streams_deterministic_across_backends(params, kv_dtype):
+    """Fixed precision is a determinism contract: the same prompts through
+    the quantized pool yield bit-identical greedy streams run-to-run AND
+    across attention backends (XLA gather vs Pallas kernel — both
+    dequantize the same stored integers)."""
+    rng = np.random.default_rng(21)
+    prompts = [_toks(rng, L) for L in (5, 40, 17)]
+    mk = lambda: [Request(request_id=f"r{i}", session_key="s", prompt=p,
+                          max_new_tokens=4) for i, p in enumerate(prompts)]
+    eng, xla1 = _run(params, mk(), paged=True, block_size=16,
+                     kv_dtype=kv_dtype)
+    _, xla2 = _run(params, mk(), paged=True, block_size=16,
+                   kv_dtype=kv_dtype)
+    assert xla1 == xla2
+    cfg_p = CFG.replace(attn_backend="pallas_interpret")
+    eng_p = ServeEngine(cfg_p, params, n_slots=4, max_len=96, paged=True,
+                        block_size=16, kv_dtype=kv_dtype)
+    done = []
+    eng_p.on_complete = done.append
+    for r in mk():
+        eng_p.submit(r)
+    eng_p.run_until_drained()
+    assert {r.request_id: list(r.tokens) for r in done} == xla1
+    assert eng.stats.host_syncs == eng.stats.ticks
+    assert eng_p.stats.host_syncs == eng_p.stats.ticks
+
+
+def test_quantized_spill_adopt_scales_bit_exact():
+    """Property test on the migration path: spill_device → host → adopt on
+    a sibling manager round-trips EVERY pool leaf bit-exactly — the int8
+    payloads and their f32 scales travel as ordinary tree leaves, no
+    requantization anywhere."""
+    import jax.numpy as jnp
+
+    from repro.serving.kvcache import SpilledKV
+    rng = np.random.default_rng(7)
+    src = PagedCacheManager(CFG, n_slots=2, max_len=64, block_size=8,
+                            num_blocks=12, kv_dtype="int8")
+    leaves, treedef = jax.tree.flatten(src.pools)
+    filled = []
+    for leaf in leaves:
+        if leaf.dtype == jnp.int8:
+            filled.append(jnp.asarray(
+                rng.integers(-127, 128, leaf.shape), jnp.int8))
+        else:                                   # f32 scale leaves
+            assert leaf.dtype == jnp.float32
+            filled.append(jnp.asarray(
+                rng.uniform(0.25, 4.0, leaf.shape), jnp.float32))
+    src.pools = jax.tree.unflatten(treedef, filled)
+    src.publish()
+    slot = src.acquire("mig")
+    src.slots[slot].table = [3, 1, 5]           # table ORDER must survive
+    host = jax.tree.map(np.asarray, src.spill_device(slot))
+    sp = SpilledKV(request_id="mig", pos=20, n_blocks=3, block_size=8,
+                   blocks=host)
+    dst = PagedCacheManager(CFG, n_slots=2, max_len=64, block_size=8,
+                            num_blocks=12, kv_dtype="int8")
+    slot2 = dst.acquire("mig")
+    seq = dst.adopt(slot2, np.arange(10, dtype=np.int32), sp,
+                    max_new_tokens=4)
+    assert seq is not None and seq.pos == 20
+    back = jax.tree.map(np.asarray, dst.spill_device(slot2))
+    h_leaves = jax.tree.leaves(host)
+    b_leaves = jax.tree.leaves(back)
+    assert len(h_leaves) == len(b_leaves)
+    for a, b in zip(h_leaves, b_leaves):
+        assert a.dtype == b.dtype
+        assert np.array_equal(a, b)             # bit-exact, scales included
+    assert {a.dtype for a in h_leaves} == {np.dtype(np.int8),
+                                           np.dtype(np.float32)}
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+def test_quantized_preempt_resume_bit_identical(params, kv_dtype):
+    """Preempt → spill to host pool → re-issue → adopt, all at fixed
+    quantized precision: the greedy streams must be bit-identical to the
+    uninterrupted quantized run (a written token's quantized bytes depend
+    only on that token, so migration never perturbs neighbours)."""
+    import time
+
+    from repro.core.store import SpillPool
+    from repro.serving.scheduler import SLO_BATCH, SLO_INTERACTIVE
+    rng = np.random.default_rng(13)
+    prompts = {"b0": _toks(rng, 8), "b1": _toks(rng, 8), "i0": _toks(rng, 4)}
+    mk = lambda rid, slo: Request(
+        request_id=rid, session_key=f"sess-{rid}", prompt=prompts[rid],
+        max_new_tokens=3 if slo == SLO_INTERACTIVE else 8, slo=slo)
+
+    # uninterrupted reference at the SAME precision: slack capacity
+    ref_eng = ServeEngine(CFG, params, n_slots=8, max_len=48,
+                          temperature=0.0, block_size=4, num_blocks=64,
+                          prefix_cache=False, kv_dtype=kv_dtype)
+    ref_done = {}
+    ref_eng.on_complete = lambda r: ref_done.setdefault(r.request_id, r)
+    for rid in ("b0", "b1", "i0"):
+        ref_eng.submit(mk(rid, SLO_INTERACTIVE if rid == "i0"
+                          else SLO_BATCH))
+    ref_eng.run_until_drained()
+    assert ref_eng.stats.preemptions == 0
+    ref = {rid: list(r.tokens) for rid, r in ref_done.items()}
+
+    # tight engine: interactive arrival mid-decode forces a preemption
+    pool = SpillPool(capacity_blocks=64)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=48, temperature=0.0,
+                      block_size=4, num_blocks=11, prefix_cache=False,
+                      spill_pool=pool, preempt=True, kv_dtype=kv_dtype)
+    done = {}
+    eng.on_complete = lambda r: done.setdefault(r.request_id, r)
+    eng.submit(mk("b0", SLO_BATCH))
+    eng.submit(mk("b1", SLO_BATCH))
+    stop = time.monotonic() + 30
+    while not (len(eng.live) == 2
+               and all(r.tokens for r in eng.live.values())):
+        eng.tick()
+        assert time.monotonic() < stop, "batch requests never went live"
+    eng.submit(mk("i0", SLO_INTERACTIVE))
+    eng.run_until_drained()
+    got = {rid: list(r.tokens) for rid, r in done.items()}
+    assert got == ref
+    assert eng.stats.preemptions >= 1
+    assert eng.stats.resumes >= 1               # adopted, not replayed
+    assert eng.stats.host_syncs == eng.stats.ticks + eng.stats.spill_syncs
+    assert pool.blocks == 0 and pool.evicted == 0
+
+
+def test_quantized_decode_donates_pool_buffers(params):
+    """Donation must stay exact-match with the scale leaves in the tree:
+    the jitted paged step still donates the whole pool (no copy-per-tick
+    fallback when the tree gains k_scale/v_scale)."""
+    rng = np.random.default_rng(17)
+    eng = ServeEngine(CFG, params, n_slots=2, max_len=32, paged=True,
+                      block_size=16, kv_dtype="int8")
+    before = jax.tree.leaves(eng.cm.pools)
+    assert len({l.dtype for l in before}) == 2  # int8 payload + f32 scales
+    eng.submit(Request(request_id="r", session_key="s", prompt=_toks(rng, 5),
+                       max_new_tokens=3))
+    eng.run_until_drained()
+    assert all(leaf.is_deleted() for leaf in before)
+    stored = eng.cm.devstore.get(eng.cm.kv_key)
+    assert all(a is b for a, b in zip(jax.tree.leaves(stored),
+                                      jax.tree.leaves(eng.cm.pools)))

@@ -4,10 +4,17 @@
 
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint bench bench-smoke chaos-smoke check-trajectory serve-example
+.PHONY: test test-sharded lint bench bench-smoke chaos-smoke check-trajectory serve-example
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+# sharding suite under a forced 8-device CPU backend: mesh-sliced replicas,
+# sharded KV pools, cross-slice spill/adopt (the flag must be set before
+# jax first initializes, hence the dedicated target/CI job)
+test-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+		PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q tests/test_serving_sharding.py
 
 # cascade-lint: lock discipline, host-sync discipline, donation/recompile
 # hazards over the whole tree; exits nonzero on any unsuppressed finding
@@ -23,7 +30,7 @@ bench:
 # KV preemption vs the shed-only FIFO baseline, quantized-vs-bf16 KV pool)
 bench-smoke:
 	BENCH_SMOKE=1 PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
-		--only serve_prefix_reuse,serve_mixed_tick,serve_speculative,serve_multi_model,serve_overload,serve_kv_quant
+		--only serve_prefix_reuse,serve_mixed_tick,serve_speculative,serve_multi_model,serve_overload,serve_kv_quant,serve_replica_scaling
 
 # exactly what CI's chaos-smoke job runs: a seeded fault schedule (replica
 # crash + KV migration, transient submit errors, slow ticks) over the

@@ -38,6 +38,7 @@ def main() -> None:
         ("serve_chaos", serve.bench_serve_chaos),
         ("serve_overload", serve.bench_serve_overload),
         ("serve_kv_quant", serve.bench_serve_kv_quant),
+        ("serve_replica_scaling", serve.bench_serve_replica_scaling),
         ("roofline_table", lambda out: roofline.table(out)),
         ("roofline_kv_bytes", lambda out: roofline.kv_bytes_table(out)),
     ]

@@ -42,21 +42,33 @@ def _tree_nbytes(value: Any) -> int:
                for leaf in jax.tree.leaves(value))
 
 
-def _tree_placed(value: Any, dst: NamedSharding) -> bool:
+def _is_sharding(x) -> bool:
+    return isinstance(x, jax.sharding.Sharding)
+
+
+def _tree_placed(value: Any, dst: Any) -> bool:
     """True iff every leaf is already a device array resident where ``dst``
-    would put it (exact sharding match, or same single-device placement)."""
+    would put it (exact sharding match, or same single-device placement).
+    ``dst`` is a single sharding applied to every leaf, or a pytree of
+    per-leaf shardings (a registered sharded-pool policy) congruent with
+    ``value``."""
     leaves = jax.tree.leaves(value)
     if not leaves:
         return False
-    single = len(dst.device_set) == 1
-    for leaf in leaves:
+    dst_leaves = jax.tree.leaves(dst, is_leaf=_is_sharding)
+    if len(dst_leaves) == 1:
+        dst_leaves = dst_leaves * len(leaves)
+    elif len(dst_leaves) != len(leaves):
+        return False
+    for leaf, d in zip(leaves, dst_leaves):
         if not isinstance(leaf, jax.Array):
             return False
-        if leaf.sharding == dst:
+        if leaf.sharding == d:
             continue
         # the device-set fallback is only sound when one device is involved
         # (layouts cannot differ there); multi-device needs the exact match
-        if not (single and set(leaf.devices()) == set(dst.device_set)):
+        if not (len(d.device_set) == 1
+                and set(leaf.devices()) == set(d.device_set)):
             return False
     return True
 
@@ -69,12 +81,31 @@ class DeviceStore:
         self.keep_versions = keep_versions
         self.lru = LRUCache(lru_bytes)
         self._entries: dict[str, _DevEntry] = {}
+        self._shardings: dict[str, Any] = {}
         self._lock = threading.Lock()
+        # donate-path accounting: hits are zero-copy reference installs,
+        # misses are donate=True puts that still had to device_put (sharding
+        # mismatch) — the copy-free claim of the serving fast path is
+        # asserted on these
+        self.donate_hits = 0
+        self.donate_misses = 0
 
     def create_pool(self, spec: PoolSpec) -> PoolSpec:
         return self.pools.create(spec)
 
-    def sharding_for(self, key: str) -> NamedSharding:
+    def register_sharding(self, key: str, sharding: Any) -> None:
+        """Pin a per-key placement policy: a single sharding, or a pytree of
+        per-leaf shardings congruent with the values put under ``key`` (a
+        serving replica's sharded KV pool registers its leaf tree here, so
+        the donate exact-match check — and the copy fallback — see the
+        slice's NamedShardings instead of the store's default mesh)."""
+        with self._lock:
+            self._shardings[key] = sharding
+
+    def sharding_for(self, key: str):
+        reg = self._shardings.get(key)
+        if reg is not None:
+            return reg
         spec = self.pools.lookup(key)
         axes = spec.device_axes if spec and spec.device_axes else ()
         return NamedSharding(self.mesh, P(*axes))
@@ -92,8 +123,13 @@ class DeviceStore:
         dst = self.sharding_for(key)
         if donate and _tree_placed(value, dst):
             arr = value
+            with self._lock:
+                self.donate_hits += 1
         else:
             arr = jax.device_put(value, dst)
+            if donate:
+                with self._lock:
+                    self.donate_misses += 1
         with self._lock:
             e = self._entries.get(key)
             if e is None:
@@ -146,6 +182,9 @@ class DeviceStore:
                         if k == prefix or k.startswith(prefix + "/")]:
                 del self._entries[key]
                 removed += 1
+            for key in [k for k in self._shardings
+                        if k == prefix or k.startswith(prefix + "/")]:
+                del self._shardings[key]
         return removed
 
     def latest_version(self, key: str) -> int:

@@ -19,6 +19,44 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(n_devices: int | None = None, model: int = 1):
-    """Small mesh over the real local devices (tests/examples)."""
+    """Small mesh over the real local devices (tests/examples).
+
+    ``model`` must divide the device count: a (n // model, model) mesh over
+    a non-divisible count would silently use only (n // model) * model
+    devices and strand the rest — surfaced as an error instead."""
     n = n_devices or len(jax.devices())
+    if model <= 0 or n % model != 0:
+        used = (n // model) * model if model > 0 else 0
+        raise ValueError(
+            f"model={model} does not divide n_devices={n}: a "
+            f"({max(n // model, 0)}, {model}) mesh would use {used} "
+            f"device(s) and strand {n - used}")
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_slices(n_slices: int, devices_per_slice: int, *, devices=None):
+    """Carve a device list into ``n_slices`` DISJOINT (data=1, model=d)
+    meshes — one per serving replica, so each replica's params and KV pool
+    collocate on its own slice (no two replicas share a device).
+
+    ``devices`` defaults to all local devices; the allocation is a plain
+    prefix split, so callers that manage a free pool (serving.ServeNode)
+    pass exactly the devices they own."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if n_slices <= 0 or devices_per_slice <= 0:
+        raise ValueError(f"need positive n_slices={n_slices} and "
+                         f"devices_per_slice={devices_per_slice}")
+    need = n_slices * devices_per_slice
+    if need > len(devs):
+        raise ValueError(
+            f"{n_slices} slice(s) x {devices_per_slice} device(s) needs "
+            f"{need} devices but only {len(devs)} are available")
+    out = []
+    for s in range(n_slices):
+        sl = devs[s * devices_per_slice:(s + 1) * devices_per_slice]
+        out.append(Mesh(np.array(sl, dtype=object)
+                        .reshape(1, devices_per_slice), ("data", "model")))
+    return out

@@ -93,6 +93,32 @@ def tree_shardings(axes_tree, mesh: Mesh, rules: dict):
         axes_tree, is_leaf=_is_axes_leaf)
 
 
+def param_shardings(cfg: ModelConfig, mesh: Mesh, **rule_kw):
+    """NamedShardings for a model's param tree on ``mesh`` (serving-side
+    install: ``jax.device_put(params, param_shardings(cfg, mesh))``)."""
+    from repro.models import param_axes
+
+    return tree_shardings(param_axes(cfg), mesh, make_rules(cfg, mesh,
+                                                            **rule_kw))
+
+
+def kv_pool_shardings(cfg: ModelConfig, mesh: Mesh, *,
+                      kv_dtype: str | None = None):
+    """NamedShardings for the serving engines' paged KV block pool.
+
+    K/V leaves are (layers, num_blocks, block_size, kv_heads, head_dim):
+    the kv_heads dim shards over 'model' (when divisible — same rule as
+    the attention weights), block/slot dims replicate because block tables
+    are host-side and every device scatters any (block, slot).  Quantized
+    pools' f32 scale leaves (layers, num_blocks, block_size, kv_heads)
+    follow the same split, so the whole tree spills/adopts/donates with
+    per-leaf exact-match shardings."""
+    from repro.models import paged_pool_axes
+
+    return tree_shardings(paged_pool_axes(cfg, kv_dtype=kv_dtype), mesh,
+                          make_rules(cfg, mesh))
+
+
 def batch_shardings(batch_tree_shapes: dict, mesh: Mesh, rules: dict):
     """Shardings for a data batch: leading dim = batch, rest replicated."""
     b = rules.get("batch")

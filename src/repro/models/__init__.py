@@ -1,12 +1,12 @@
 from .config import LayerSpec, ModelConfig, Segment
 from .lm import (cache_axes, decode_step, forward, init_decode_caches,
                  init_paged_pools, init_params, paged_decode_step,
-                 paged_mixed_step, paged_prefill, param_axes, prefill,
-                 supports_paged, supports_speculative)
+                 paged_mixed_step, paged_pool_axes, paged_prefill,
+                 param_axes, prefill, supports_paged, supports_speculative)
 from .sampling import sample_with_scores, speculative_verify
 
 __all__ = ["LayerSpec", "ModelConfig", "Segment", "cache_axes", "decode_step",
            "forward", "init_decode_caches", "init_paged_pools", "init_params",
-           "paged_decode_step", "paged_mixed_step", "paged_prefill",
-           "param_axes", "prefill", "sample_with_scores",
+           "paged_decode_step", "paged_mixed_step", "paged_pool_axes",
+           "paged_prefill", "param_axes", "prefill", "sample_with_scores",
            "speculative_verify", "supports_paged", "supports_speculative"]

@@ -220,6 +220,22 @@ def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
     return pool
 
 
+def paged_pool_axes(cfg: ModelConfig, kv_dtype: str | None = None) -> dict:
+    """Logical axes for one layer's paged-pool leaves (mirrors
+    ``init_paged_pool``): the block and slot dims stay UNSHARDED — block
+    tables are host-side and every device must be able to scatter any
+    (block, slot) — so ``kv_heads`` is the one shardable dim, the same
+    model-axis split the attention weights use.  Scale leaves carry the
+    same (block, slot, kv-head) layout minus the head_dim."""
+    kv_dtype = cfg.kv_dtype if kv_dtype is None else kv_dtype
+    kv = (None, None, "kv_heads", None)
+    axes = {"k": kv, "v": kv}
+    if da_quant.is_quantized(kv_dtype):
+        axes["k_scale"] = (None, None, "kv_heads")
+        axes["v_scale"] = (None, None, "kv_heads")
+    return axes
+
+
 def _dequant_pool_leaves(pool: dict):
     """f32 K/V leaves for the XLA densify fallback (identity when the pool
     is unquantized).  The fallback materializes a dequantized pool copy —

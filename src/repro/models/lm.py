@@ -392,6 +392,24 @@ def init_paged_pools(cfg: ModelConfig, num_blocks: int, block_size: int,
     return tuple(pools)
 
 
+def paged_pool_axes(cfg: ModelConfig, kv_dtype: str | None = None):
+    """Logical axes tree mirroring ``init_paged_pools`` (the leading
+    'layers' axis comes from stacking, exactly as in ``cache_axes``)."""
+    def add_layer(tree):
+        return jax.tree.map(lambda a: ("layers",) + tuple(a), tree,
+                            is_leaf=lambda x: isinstance(x, tuple) and
+                            all(isinstance(e, (str, type(None))) for e in x))
+
+    out = []
+    for seg in cfg.layout():
+        pos = []
+        for spec in seg.pattern:
+            pos.append(add_layer(attn_mod.paged_pool_axes(cfg,
+                                                          kv_dtype=kv_dtype)))
+        out.append(tuple(pos))
+    return tuple(out)
+
+
 def paged_prefill(params, pools, block_tables, inputs, positions,
                   cfg: ModelConfig):
     """Prefill a (possibly block-aligned-truncated) prompt suffix against the

@@ -105,7 +105,8 @@ class ModelDeployment:
                  watchdog_s: float | None = None, retry_budget: int = 2,
                  retry_backoff_s: float = 0.002, preempt: bool = False,
                  spill_capacity_blocks: int = 256,
-                 kv_dtype: str | None = None) -> None:
+                 kv_dtype: str | None = None,
+                 devices_per_replica: int | None = None) -> None:
         if n_replicas > len(node.workers):
             raise ValueError(
                 f"deployment {name!r} wants {n_replicas} replicas but the "
@@ -149,6 +150,19 @@ class ModelDeployment:
             self.spill_pool = SpillPool(
                 capacity_blocks=spill_capacity_blocks, store=node.store,
                 prefix=self.spill_prefix)
+        # Mesh slices (devices_per_replica=d): the node carves d local
+        # devices per replica out of its free pool — DISJOINT slices, so
+        # sibling replicas never contend for a device — and each engine
+        # compiles its unified tick against its own slice, with params and
+        # the paged KV pool installed sharded (launch.sharding rules).
+        self.meshes: list[Any] = []
+        if devices_per_replica is not None:
+            if not self.paged:
+                raise ValueError(
+                    f"deployment {name!r}: mesh slices shard the paged KV "
+                    f"pool; the dense path is single-device only")
+            self.meshes = node.take_device_slices(n_replicas,
+                                                  devices_per_replica)
         self.engines: list[ServeEngine] = []
         for r in range(n_replicas):
             kw: dict[str, Any] = dict(paged=self.paged)
@@ -160,6 +174,8 @@ class ModelDeployment:
                           kv_dtype=kv_dtype,
                           token_budget=token_budget, spec_k=spec_k,
                           spill_pool=self.spill_pool, preempt=self.preempt)
+                if self.meshes:
+                    kw["mesh"] = self.meshes[r]
             self.engines.append(ServeEngine(
                 cfg, params, n_slots=n_slots, max_len=max_len,
                 temperature=temperature, scheduler=Scheduler(n_replicas=1),
@@ -168,13 +184,15 @@ class ModelDeployment:
         # Collocated replicas run identical programs: share the jitted
         # callables so each program compiles once per deployment, not once
         # per replica (the paged mixed step has exactly ONE program — its
-        # packed shape is fixed at token_budget).
-        for eng in self.engines[1:]:
-            if self.paged:
-                eng._mixed = self.engines[0]._mixed
-            else:
-                eng._prefill = self.engines[0]._prefill
-                eng._step = self.engines[0]._step
+        # packed shape is fixed at token_budget).  Sliced replicas can NOT
+        # share: each jit pins out_shardings to its own slice's mesh.
+        if not self.meshes:
+            for eng in self.engines[1:]:
+                if self.paged:
+                    eng._mixed = self.engines[0]._mixed
+                else:
+                    eng._prefill = self.engines[0]._prefill
+                    eng._step = self.engines[0]._step
         self._handles: list[tuple[LambdaHandle, int]] = []
         for r in range(n_replicas):
             handle = LambdaHandle(
@@ -727,6 +745,9 @@ class ModelDeployment:
             self.node.store.remove_pool(self.spill_prefix)
         if self.paged and self.node._kv_store is not None:
             self.node._kv_store.remove_prefix(f"/kv/{self.name}")
+        if self.meshes:
+            self.node.release_device_slices(self.meshes)
+            self.meshes = []
         self.node.deployments.pop(self.name, None)
 
 
@@ -757,13 +778,39 @@ class ServeNode:
         self._submitted = 0
         self._completed = 0
         self._n_deployed = 0
+        # Local accelerator pool for mesh-sliced deployments: slices are
+        # carved off this free list (disjoint per replica) and returned on
+        # deployment stop().  Single-device deployments never touch it.
+        self._free_devices: list[Any] = list(jax.devices())
 
     def kv_store(self) -> DeviceStore:
         if self._kv_store is None:
+            # The store mesh is only the DEFAULT placement for unregistered
+            # keys; sliced deployments register per-key pool shardings that
+            # carry their own slice meshes.
             self._kv_store = DeviceStore(
                 jax.make_mesh((1, 1), ("data", "model")), keep_versions=1)
             self._kv_store.create_pool(PoolSpec(path="/kv"))
         return self._kv_store
+
+    # ------------------------------------------------------- device slices
+    def take_device_slices(self, n_slices: int, devices_per_slice: int):
+        """Carve ``n_slices`` disjoint (1, devices_per_slice) meshes out of
+        the node's free device pool (``launch.mesh.mesh_slices``).  Raises
+        ValueError when the pool cannot cover the request — co-resident
+        deployments hold their slices until stop()."""
+        from repro.launch.mesh import mesh_slices
+        with self._lock:
+            meshes = mesh_slices(n_slices, devices_per_slice,
+                                 devices=self._free_devices)
+            taken = n_slices * devices_per_slice
+            self._free_devices = self._free_devices[taken:]
+        return meshes
+
+    def release_device_slices(self, meshes) -> None:
+        with self._lock:
+            for m in meshes:
+                self._free_devices.extend(m.devices.flat)
 
     # --------------------------------------------------------- deployments
     def deploy(self, name: str, cfg: ModelConfig, params, *,
@@ -778,7 +825,8 @@ class ServeNode:
                retry_backoff_s: float = 0.002,
                preempt: bool = False,
                spill_capacity_blocks: int = 256,
-               kv_dtype: str | None = None) -> ModelDeployment:
+               kv_dtype: str | None = None,
+               devices_per_replica: int | None = None) -> ModelDeployment:
         """Host ``cfg`` under ``/serve/<name>``; see ``ModelDeployment``.
         ``watermark`` bounds each replica's queue depth (None = unbounded).
         ``spec_k`` > 0 enables speculative decoding on paged engines: up to
@@ -797,6 +845,11 @@ class ServeNode:
         on write with per-(block, slot, kv-head) scales and the kernels
         dequantize in-register, roughly halving decode HBM traffic;
         ``stats()["kv_bytes_per_token"]`` reports the measured footprint.
+        ``devices_per_replica`` (paged only; default single-device) gives
+        each replica its own DISJOINT mesh slice of that many local
+        devices: params and the KV block pool install sharded over the
+        slice (kv_heads over 'model') and the unified tick compiles
+        against it.
         """
         if name in self.deployments:
             raise ValueError(f"deployment {name!r} already exists")
@@ -811,7 +864,8 @@ class ServeNode:
             watermark=watermark, seed_base=seed_base, spec_k=spec_k,
             watchdog_s=watchdog_s, retry_budget=retry_budget,
             retry_backoff_s=retry_backoff_s, preempt=preempt,
-            spill_capacity_blocks=spill_capacity_blocks, kv_dtype=kv_dtype)
+            spill_capacity_blocks=spill_capacity_blocks, kv_dtype=kv_dtype,
+            devices_per_replica=devices_per_replica)
         self.deployments[name] = dep
         return dep
 
@@ -1190,7 +1244,8 @@ class ServeCluster:
                  retry_backoff_s: float = 0.002,
                  preempt: bool = False,
                  spill_capacity_blocks: int = 256,
-                 kv_dtype: str | None = None) -> None:
+                 kv_dtype: str | None = None,
+                 devices_per_replica: int | None = None) -> None:
         self.node = ServeNode(n_workers=n_replicas)
         self.dep = self.node.deploy(
             model_name or cfg.name, cfg, params, n_replicas=n_replicas,
@@ -1200,7 +1255,8 @@ class ServeCluster:
             token_budget=token_budget, watermark=watermark, spec_k=spec_k,
             watchdog_s=watchdog_s, retry_budget=retry_budget,
             retry_backoff_s=retry_backoff_s, preempt=preempt,
-            spill_capacity_blocks=spill_capacity_blocks, kv_dtype=kv_dtype)
+            spill_capacity_blocks=spill_capacity_blocks, kv_dtype=kv_dtype,
+            devices_per_replica=devices_per_replica)
         self.cfg = cfg
         self.policy = policy
 

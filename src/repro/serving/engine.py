@@ -159,12 +159,26 @@ class ServeEngine:
                  spec_k: int = 0,
                  draft_source: DraftSource | None = None,
                  spill_pool=None,
-                 preempt: bool = False) -> None:
+                 preempt: bool = False,
+                 mesh=None) -> None:
         self.cfg = cfg
-        self.params = params
         self.paged = supports_paged(cfg) if paged is None else paged
         if self.paged and not supports_paged(cfg):
             raise ValueError(f"config {cfg.name} cannot use the paged cache")
+        # Mesh slice (tensor-parallel replica): params install sharded over
+        # the slice per the logical-axis rules, and the unified tick compiles
+        # against the slice's mesh.  Paged-only: the dense slot cache has no
+        # leaf-axis story, and every config we serve sharded is paged anyway.
+        self.mesh = mesh
+        if mesh is not None:
+            if not self.paged:
+                raise ValueError(
+                    "mesh slices shard the paged block pool; the dense cache "
+                    "path only runs single-device (pass paged=True or a "
+                    "config with supports_paged)")
+            from repro.launch.sharding import param_shardings
+            params = jax.device_put(params, param_shardings(cfg, mesh))
+        self.params = params
         self.spec_k = int(spec_k)
         if self.spec_k < 0:
             raise ValueError(f"spec_k={spec_k} must be >= 0")
@@ -180,7 +194,8 @@ class ServeEngine:
             self.cm: Any = PagedCacheManager(
                 cfg, n_slots, max_len, block_size=block_size,
                 num_blocks=num_blocks, prefix_cache=prefix_cache,
-                devstore=devstore, kv_key=kv_key, kv_dtype=kv_dtype)
+                devstore=devstore, kv_key=kv_key, kv_dtype=kv_dtype,
+                mesh=mesh)
             self.token_budget = (token_budget if token_budget is not None
                                  else max(32, 2 * n_slots))
             if self.token_budget < n_slots:
@@ -270,7 +285,19 @@ class ServeEngine:
                                                        draft_len, seed, temp)
                 return tok, n_acc, score, pools
 
-            self._mixed = jax.jit(_mixed, donate_argnums=(1,))
+            if mesh is not None:
+                # Pin output shardings: XLA's propagation is free to pick a
+                # different layout for the donated pool output, which would
+                # break the devstore's exact-match donate gate and turn every
+                # publish into a cross-device copy.  Tokens/scores replicate
+                # (tiny vectors, pulled host-side each tick anyway).
+                from jax.sharding import NamedSharding, PartitionSpec
+                rep = NamedSharding(mesh, PartitionSpec())
+                self._mixed = jax.jit(
+                    _mixed, donate_argnums=(1,),
+                    out_shardings=(rep, rep, rep, self.cm.pool_shardings))
+            else:
+                self._mixed = jax.jit(_mixed, donate_argnums=(1,))
         else:
             def _prefill_step(p, toks, pos, seed):
                 logits, caches = prefill(p, toks, pos, cfg, max_len=max_len)

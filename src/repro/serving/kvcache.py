@@ -428,7 +428,8 @@ class PagedCacheManager:
                  block_size: int = 16, num_blocks: int | None = None,
                  prefix_cache: bool = True, devstore=None,
                  kv_key: str | None = None,
-                 kv_dtype: str | None = None) -> None:
+                 kv_dtype: str | None = None,
+                 mesh=None) -> None:
         self.cfg, self.n_slots, self.max_len = cfg, n_slots, max_len
         self.block_size = block_size
         self.max_blocks = max(1, math.ceil(max_len / block_size))
@@ -442,16 +443,37 @@ class PagedCacheManager:
                                           enable_cache=prefix_cache)
         self.pools = init_paged_pools(cfg, num_blocks, block_size,
                                       kv_dtype=self.kv_dtype)
+        # Sharded pool (``mesh`` = this replica's device slice): every K/V
+        # leaf gets a NamedSharding over kv_heads/'model'
+        # (launch.sharding.kv_pool_shardings); block tables stay host-side.
+        # The initial device_put already matches the registered policy, so
+        # the very first publish — like every per-tick publish after it —
+        # takes the donate fast path.
+        self.mesh = mesh
+        self.pool_shardings = None
+        self._scatter = _scatter_jit
+        if mesh is not None:
+            from repro.launch.sharding import kv_pool_shardings
+            self.pool_shardings = kv_pool_shardings(cfg, mesh,
+                                                    kv_dtype=self.kv_dtype)
+            self.pools = jax.device_put(self.pools, self.pool_shardings)
+            # restore scatters donate the pool; pin the output shardings so
+            # an adopt can never drift the pool off its registered policy
+            # (which would turn every later publish into a copy)
+            self._scatter = jax.jit(_scatter_blocks, donate_argnums=(0,),
+                                    out_shardings=self.pool_shardings)
         self.slots = [PagedSeq() for _ in range(n_slots)]
         if devstore is None:
             from repro.core.devstore import DeviceStore
             from repro.core.pools import PoolSpec
-            mesh = jax.make_mesh((1, 1), ("data", "model"))
-            devstore = DeviceStore(mesh, keep_versions=1)
+            host = jax.make_mesh((1, 1), ("data", "model"))
+            devstore = DeviceStore(host, keep_versions=1)
             devstore.create_pool(PoolSpec(path="/kv"))
             kv_key = kv_key or "/kv/pool"
         self.devstore = devstore
         self.kv_key = kv_key or "/kv/pool"
+        if self.pool_shardings is not None:
+            self.devstore.register_sharding(self.kv_key, self.pool_shardings)
         self.publish()
 
     # ----------------------------------------------------- devstore bridge
@@ -687,7 +709,7 @@ class PagedCacheManager:
         # donation discipline: the devstore entry aliases the donated pool
         # until publish() reinstalls the fresh tree (driver thread only —
         # same rule as the engine's mixed dispatch)
-        self.pools = _scatter_jit(self.pools, blocks, idx)
+        self.pools = self._scatter(self.pools, blocks, idx)
         self.publish()
         return seq
 
